@@ -1,0 +1,47 @@
+"""BEYOND-PAPER: non-IID data partitions + compressed gossip.
+
+The paper partitions data IID ("equally partitioned").  Real decentralized
+deployments are heterogeneous: each node's local distribution differs, so
+local full gradients diverge and the variance-reduction correction matters
+MORE (the snapshot term carries each node's true local geometry).  This
+benchmark sweeps partition heterogeneity and also reports the int8
+error-feedback compressed-gossip variant (4x fewer wire bytes)."""
+
+from __future__ import annotations
+
+from repro.core import dpsvrg, graphs
+from . import common
+
+
+def run(scale: float = 0.02, alpha: float = 0.2):
+    rows = []
+    from repro.data import synthetic
+    import jax.numpy as jnp
+    ds = synthetic.make_paper_dataset("adult_like", scale=scale)
+    for het in (0.0, 0.5, 0.9):
+        data_np = synthetic.partition_per_node(ds, 8, heterogeneity=het)
+        data = {k: jnp.asarray(v) for k, v in data_np.items()}
+        flat = {k: v.reshape(-1, *v.shape[2:]) for k, v in data.items()}
+        from repro.core import gossip, prox
+        h = prox.l1(0.01)
+        fs = common.f_star(flat, h, ds.dim)
+        x0 = gossip.stack_tree(jnp.zeros(ds.dim), 8)
+        sched = graphs.b_connected_ring_schedule(8, b=1)
+        hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
+                                      num_outer=9)
+        _, hv = dpsvrg.dpsvrg_run(common.logreg_loss, h, x0, data, sched, hp,
+                                  record_every=0)
+        _, hd = dpsvrg.dspg_run(common.logreg_loss, h, x0, data, sched,
+                                dpsvrg.DSPGHyperParams(alpha0=alpha),
+                                num_steps=int(hv.steps[-1]))
+        hp8 = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
+                                       num_outer=9, compress_bits=8)
+        _, h8 = dpsvrg.dpsvrg_run(common.logreg_loss, h, x0, data, sched,
+                                  hp8, record_every=0)
+        rows.append(common.Row(
+            f"beyond/noniid_het={het}", 0.0,
+            f"gap_dpsvrg={hv.objective[-1] - fs:.5f} "
+            f"gap_dspg={hd.objective[-1] - fs:.5f} "
+            f"gap_dpsvrg_int8={h8.objective[-1] - fs:.5f} "
+            f"advantage={(hd.objective[-1] - hv.objective[-1]):.5f}"))
+    return rows

@@ -1,0 +1,57 @@
+"""Shared benchmark harness for the paper-reproduction figures.
+
+Each figure module exposes ``run(scale) -> list[Row]``; ``benchmarks.run``
+aggregates and prints the ``name,us_per_call,derived`` CSV.  ``scale``
+shrinks the Table-I dataset sizes so the full suite completes on CPU in
+minutes (paper qualitative claims are scale-free: rate ORDERS and
+stability, not absolute wall time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dpsvrg, gossip, graphs, prox
+from repro.data import synthetic
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+
+def logreg_loss(w, batch):
+    logits = batch["features"] @ w
+    y = batch["labels"]
+    return jnp.mean(-y * logits + jnp.log1p(jnp.exp(logits)))
+
+
+def setup_problem(dataset: str, scale: float, m: int = 8, lam: float = 0.01,
+                  seed: int = 0):
+    ds = synthetic.make_paper_dataset(dataset, scale=scale, seed=seed)
+    data = synthetic.partition_per_node(ds, m, seed=seed)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    flat = {k: v.reshape(-1, *v.shape[2:]) for k, v in data.items()}
+    h = prox.l1(lam)
+    d = ds.dim
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    return data, flat, h, x0, d
+
+
+def f_star(flat, h, d, alpha=0.4, steps=4000):
+    _, hist = dpsvrg.centralized_prox_gd(logreg_loss, h, jnp.zeros(d), flat,
+                                         alpha, steps)
+    return float(np.min(hist))
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6

@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+only), so wall-clock timing compares the UNFUSED vs FUSED jnp expression
+chains that the kernels replace, and the `derived` column reports the
+roofline-predicted v5e time from the kernels' HBM traffic model:
+
+  svrg_step : 5 streams (4 in + 1 out) x 4 B  -> bytes / 819 GB/s
+  mix_prox  : 4 streams                        -> bytes / 819 GB/s
+  flash fwd : (q + k + v + o) streams, no S^2 materialization
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_update import ops as fu_ops, ref as fu_ref
+from . import common
+
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(scale: float = 0.02):
+    rows = []
+    rng = np.random.default_rng(0)
+    rows_n = 2048  # 2048*1024*4B = 8 MiB per stream
+    shp = (rows_n, 1024)
+    x, gn, gs, mu = (jnp.asarray(rng.normal(size=shp), jnp.float32)
+                     for _ in range(4))
+
+    unfused = jax.jit(lambda x, gn, gs, mu: jnp.sign(
+        x - 0.05 * (gn - gs + mu)) * jnp.maximum(
+        jnp.abs(x - 0.05 * (gn - gs + mu)) - 0.01, 0.0))
+    t_unfused = _time(unfused, x, gn, gs, mu)
+
+    fused_ref = jax.jit(lambda x, gn, gs, mu: fu_ref.mix_prox_ref(
+        fu_ref.svrg_step_ref(x, gn, gs, mu, 0.05), x, x, 1 / 3, 1 / 3, 1 / 3,
+        0.01))
+    t_fused = _time(fused_ref, x, gn, gs, mu)
+
+    nbytes = int(np.prod(shp)) * 4
+    pred_svrg = (5 * nbytes) / HBM_BW * 1e6
+    pred_mix = (4 * nbytes) / HBM_BW * 1e6
+    rows.append(common.Row("kernel/svrg_step_unfused_jnp", t_unfused,
+                           f"streams=5 bytes={nbytes * 5}"))
+    rows.append(common.Row("kernel/fused_chain_jnp", t_fused,
+                           f"v5e_pred_us={pred_svrg + pred_mix:.1f} "
+                           f"(svrg {pred_svrg:.1f} + mix_prox {pred_mix:.1f})"))
+
+    # interpret-mode correctness spot check counts as a bench row
+    q = fu_ops.svrg_step(x[:8], gn[:8], gs[:8], mu[:8], 0.05)
+    err = float(jnp.max(jnp.abs(
+        q - fu_ref.svrg_step_ref(x[:8], gn[:8], gs[:8], mu[:8], 0.05))))
+    rows.append(common.Row("kernel/svrg_step_pallas_interpret", 0.0,
+                           f"allclose_err={err:.1e}"))
+
+    # flash attention HBM model at train_4k-ish tile
+    b, h, s, hd = 1, 8, 4096, 128
+    io_bytes = (b * s * h * hd * 2) * 4  # q + o, bf16=2B but f32 here
+    kv_bytes = (b * s * h * hd * 2) * 4
+    naive_extra = b * h * s * s * 4      # materialized scores
+    rows.append(common.Row(
+        "kernel/flash_attention_hbm_model", 0.0,
+        f"flash_bytes={io_bytes + kv_bytes} naive_extra={naive_extra} "
+        f"saving={naive_extra / (io_bytes + kv_bytes):.1f}x"))
+    return rows

@@ -1,0 +1,56 @@
+"""Continuous-batching serving demo: requests of different lengths stream
+through a fixed pool of cache slots; finished sequences retire and new ones
+are admitted mid-flight (per-slot position vectors make this exact).
+
+    PYTHONPATH=src python examples/continuous_batching.py --arch gemma2-9b
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import transformer
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b",
+                    choices=configs.ARCHITECTURES)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=7)
+    args = ap.parse_args()
+
+    cfg = configs.smoke_variant(configs.get_config(args.arch))
+    if cfg.frontend != "none":
+        raise SystemExit("use a text arch for this demo")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    sched = ContinuousBatcher(cfg, params, max_slots=args.slots, max_len=96)
+    total_new = 0
+    for uid in range(args.requests):
+        plen = int(rng.integers(4, 20))
+        n_new = int(rng.integers(3, 10))
+        total_new += n_new
+        sched.submit(Request(
+            uid=uid,
+            tokens=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=n_new))
+        print(f"submitted uid={uid} prompt_len={plen} max_new={n_new}")
+
+    t0 = time.time()
+    outs = sched.run_until_done()
+    dt = time.time() - t0
+    for uid in sorted(outs):
+        print(f"uid={uid}: {outs[uid].tolist()}")
+    print(f"\n{args.requests} requests ({total_new} tokens) through "
+          f"{args.slots} slots in {dt:.1f}s — slot reuse, no head-of-line "
+          f"blocking.")
+
+
+if __name__ == "__main__":
+    main()

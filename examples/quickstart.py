@@ -1,0 +1,51 @@
+"""Quickstart: DPSVRG vs DSPG on l1-regularized logistic regression.
+
+The paper's core experiment in ~40 lines of public API:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dpsvrg, gossip, graphs, prox
+from repro.data import synthetic
+
+
+def loss_fn(w, batch):
+    logits = batch["features"] @ w
+    y = batch["labels"]
+    return jnp.mean(-y * logits + jnp.log1p(jnp.exp(logits)))  # paper Eq. 26
+
+
+def main():
+    m = 8                                   # nodes (paper testbed size)
+    ds = synthetic.make_paper_dataset("adult_like", scale=0.05)
+    data = {k: jnp.asarray(v)
+            for k, v in synthetic.partition_per_node(ds, m).items()}
+    h = prox.l1(0.01)                       # the non-smooth regularizer
+    schedule = graphs.b_connected_ring_schedule(m, b=1)   # ring, connected
+    x0 = gossip.stack_tree(jnp.zeros(ds.dim), m)
+
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4, num_outer=10)
+    _, hist = dpsvrg.dpsvrg_run(loss_fn, h, x0, data, schedule, hp,
+                                record_every=0)
+    _, base = dpsvrg.dspg_run(loss_fn, h, x0, data, schedule,
+                              dpsvrg.DSPGHyperParams(alpha0=0.2),
+                              num_steps=int(hist.steps[-1]))
+
+    flat = {k: v.reshape(-1, *v.shape[2:]) for k, v in data.items()}
+    _, ref = dpsvrg.centralized_prox_gd(loss_fn, h, jnp.zeros(ds.dim), flat,
+                                        0.4, 3000)
+    f_star = float(np.min(ref))
+    print(f"F*                ~= {f_star:.5f}")
+    print(f"DPSVRG   gap      =  {hist.objective[-1] - f_star:.5f} "
+          f"(consensus {hist.consensus[-1]:.1e})")
+    print(f"DSPG     gap      =  {base.objective[-1] - f_star:.5f} "
+          f"(consensus {base.consensus[-1]:.1e})")
+    print(f"same steps ({int(hist.steps[-1])}), constant step for DPSVRG, "
+          f"decaying for DSPG — variance reduction wins.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Time-varying topology deep-dive: watch consensus + convergence as the
+communication graph flaps (the paper's Section V-D scenario, plus the
+production story — a pod-to-pod link that degrades mid-training).
+
+    PYTHONPATH=src python examples/timevarying_topology.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dpsvrg, gossip, graphs, prox
+from repro.data import synthetic
+try:
+    from examples.quickstart import loss_fn
+except ImportError:  # run as a script from examples/
+    from quickstart import loss_fn
+
+
+def main():
+    m = 8
+    ds = synthetic.make_paper_dataset("covertype_like", scale=0.02)
+    data = {k: jnp.asarray(v)
+            for k, v in synthetic.partition_per_node(ds, m).items()}
+    h = prox.l1(0.01)
+    x0 = gossip.stack_tree(jnp.zeros(ds.dim), m)
+
+    print("schedule                          spectral-gap(W̄)   gap      consensus")
+    for sched in [
+        graphs.static_schedule(graphs.fully_connected_matrix(m), "complete"),
+        graphs.static_schedule(graphs.ring_matrix(m), "static-ring"),
+        graphs.MixingSchedule(tuple(graphs.edge_matching_matrices(m)), b=2,
+                              eta=0.5, name="tdma-matchings"),
+        graphs.MixingSchedule(tuple(graphs.exponential_graph_matrices(m)),
+                              b=3, eta=0.5, name="one-peer-expo"),
+        graphs.b_connected_ring_schedule(m, b=7, seed=1),
+        graphs.random_b_connected_schedule(m, b=4, p_keep=0.4, seed=2),
+    ]:
+        hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4, num_outer=8)
+        _, hist = dpsvrg.dpsvrg_run(loss_fn, h, x0, data, sched, hp,
+                                    record_every=0)
+        wbar = sched.phi(0, sched.period - 1)
+        print(f"{sched.name:30s}    {graphs.spectral_gap(wbar):8.4f}      "
+              f"{hist.objective[-1]:.5f}  {hist.consensus[-1]:.2e}")
+    print("\nLemma 1 in action: denser/better-mixing schedules reach tighter "
+          "consensus at equal steps; all b-connected schedules converge.")
+
+
+if __name__ == "__main__":
+    main()

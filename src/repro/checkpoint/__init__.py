@@ -1,0 +1,104 @@
+"""Pytree checkpointing: npz leaves + msgpack-encoded treedef/metadata.
+
+No orbax offline; this is a self-contained, restart-safe format:
+
+  <dir>/step_<N>/arrays.npz     flattened leaves keyed by path string
+  <dir>/step_<N>/meta.msgpack   {step, metadata, paths}
+
+``save`` writes atomically (tmp dir + rename); ``restore`` returns
+(pytree, step, metadata) with leaves as numpy (caller device_puts them
+with whatever sharding it wants — the natural pattern for resharding
+restores across mesh changes).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step"]
+
+
+# numpy's npz cannot round-trip ml_dtypes (bfloat16, fp8): store them as raw
+# uint views and record the true dtype in the metadata.
+_STANDARD = set("?bhilqBHILQefdgFD")
+
+
+def _encode(arr: np.ndarray) -> tuple[np.ndarray, str | None]:
+    if arr.dtype.char in _STANDARD:
+        return arr, None
+    return arr.view(np.dtype(f"u{arr.dtype.itemsize}")), str(arr.dtype)
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out, dtypes = {}, {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                       for e in path)
+        enc, true_dtype = _encode(np.asarray(leaf))
+        out[key] = enc
+        if true_dtype:
+            dtypes[key] = true_dtype
+    return out, dtypes
+
+
+def save(directory: str, step: int, tree, metadata: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        arrays, dtypes = _flatten_with_paths(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        meta = {"step": step, "metadata": metadata or {},
+                "paths": sorted(arrays.keys()), "dtypes": dtypes}
+        with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+            f.write(msgpack.packb(meta))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template, step: int | None = None):
+    """Restore into the structure of ``template``.  Returns (tree, step, meta)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+    dtypes = meta.get("dtypes", {})
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                       for e in p)
+        arr = arrays[key]
+        if key in dtypes:
+            arr = arr.view(np.dtype(dtypes[key]))
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"ckpt {arr.shape} vs template {np.shape(leaf)}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, step, meta["metadata"]

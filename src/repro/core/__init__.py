@@ -1,0 +1,15 @@
+"""The paper's contribution: DPSVRG and its supporting decentralized machinery.
+
+Submodules:
+  graphs     — time-varying b-connected doubly-stochastic mixing schedules
+  prox       — closed-form proximal operators (l1, elastic net, group lasso, ...)
+  svrg       — variance-reduced gradient estimator + snapshot state
+  gossip     — consensus over stacked node parameters (einsum & ppermute paths)
+  dpsvrg     — Algorithm 1 + DSPG baseline + centralized prox-GD reference
+  inexact    — Algorithm 2 (Inexact Prox-SVRG) + executable Theorem 1
+  schedules  — K_s growth, DSPG decaying steps, WSD / cosine LR schedules
+"""
+
+from . import dpsvrg, gossip, graphs, inexact, prox, schedules, svrg
+
+__all__ = ["dpsvrg", "gossip", "graphs", "inexact", "prox", "schedules", "svrg"]

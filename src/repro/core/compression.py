@@ -1,0 +1,64 @@
+"""Compressed gossip with error feedback (beyond-paper extension).
+
+The paper reduces *rounds* (variance reduction needs fewer steps); this
+module reduces *bytes per round*: node i transmits an int8-quantized view
+of its iterate and keeps the quantization residual in an error-feedback
+accumulator (CHOCO-SGD style), so the compression error is compensated over
+time instead of accumulating — empirically the optimality gap tracks the
+uncompressed run (tests/test_compression.py) at 4x fewer gossip bytes
+(int8 vs f32).
+
+    q_send   = Q(q + e)          # symmetric per-leaf int8
+    e_next   = (q + e) - q_send  # residual carried forward
+    mix over q_send as usual.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gossip
+
+__all__ = ["CompressionState", "init_state", "quantize_leaf",
+           "compressed_mix"]
+
+
+class CompressionState(NamedTuple):
+    error: Any   # residual pytree, same structure as params
+
+
+def init_state(tree) -> CompressionState:
+    return CompressionState(error=jax.tree.map(jnp.zeros_like, tree))
+
+
+def quantize_leaf(x, bits: int = 8):
+    """Symmetric per-leaf (per-node-row for stacked leaves) quantization.
+
+    Returns the dequantized value (what the wire carries, reconstructed) —
+    the roofline accounting uses bits/32 of the f32 bytes."""
+    levels = float(2 ** (bits - 1) - 1)
+    # per-node scale for stacked leaves: reduce over all but the lead axis
+    axes = tuple(range(1, x.ndim)) if x.ndim > 1 else (0,)
+    scale = jnp.max(jnp.abs(x), axis=axes, keepdims=True) / levels
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.round(x / scale)
+    q = jnp.clip(q, -levels, levels)
+    return q * scale
+
+
+def compressed_mix(phi, tree, state: CompressionState,
+                   bits: int = 8) -> tuple[Any, CompressionState]:
+    """Gossip over quantized iterates with error feedback.
+
+    Returns (mixed tree, new compression state).  Exact consensus mean is
+    NOT preserved per-step (quantization); the error accumulator restores
+    it asymptotically.
+    """
+    compensated = jax.tree.map(jnp.add, tree, state.error)
+    sent = jax.tree.map(lambda l: quantize_leaf(l, bits), compensated)
+    new_error = jax.tree.map(jnp.subtract, compensated, sent)
+    mixed = gossip.mix_stacked(phi, sent)
+    return mixed, CompressionState(error=new_error)

@@ -1,0 +1,3 @@
+from . import loader, synthetic
+
+__all__ = ["loader", "synthetic"]

@@ -1,0 +1,72 @@
+"""Sharded batching utilities.
+
+``NodeBatcher`` draws per-node minibatches from per-node datasets (leaves
+shaped (m, n, ...)) — the host-side data path for decentralized training.
+``LMLoader`` shards a token stream across nodes and yields stacked LM batches
+(m, per_node_batch, seq).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["NodeBatcher", "LMLoader"]
+
+
+@dataclasses.dataclass
+class NodeBatcher:
+    data: dict            # leaves (m, n, ...)
+    batch_size: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        first = next(iter(self.data.values()))
+        self.m, self.n = first.shape[0], first.shape[1]
+
+    def sample(self) -> dict:
+        idx = self._rng.integers(0, self.n, size=(self.m, self.batch_size))
+        out = {}
+        for k, a in self.data.items():
+            gathered = np.take_along_axis(
+                a, idx.reshape(self.m, self.batch_size,
+                               *([1] * (a.ndim - 2))), axis=1)
+            out[k] = gathered
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.sample()
+
+
+@dataclasses.dataclass
+class LMLoader:
+    tokens: np.ndarray    # (num_tokens,)
+    num_nodes: int
+    per_node_batch: int
+    seq_len: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        # contiguous shard per node — decentralized nodes own disjoint data
+        n = len(self.tokens) // self.num_nodes
+        self._shards = [self.tokens[i * n:(i + 1) * n] for i in range(self.num_nodes)]
+
+    def sample(self):
+        """Returns (tokens, labels): (m, B, L) int32 stacked per node."""
+        toks, labs = [], []
+        for shard in self._shards:
+            hi = len(shard) - self.seq_len - 1
+            starts = self._rng.integers(0, hi, size=self.per_node_batch)
+            toks.append(np.stack([shard[s:s + self.seq_len] for s in starts]))
+            labs.append(np.stack([shard[s + 1:s + self.seq_len + 1] for s in starts]))
+        return (np.stack(toks).astype(np.int32),
+                np.stack(labs).astype(np.int32))
+
+    def __iter__(self):
+        while True:
+            yield self.sample()

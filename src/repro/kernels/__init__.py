@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+The paper (DPSVRG) has no kernel-level contribution of its own — these are
+the perf-critical layers of *our system* (see DESIGN.md §6):
+
+  fused_update     — the DPSVRG inner-step elementwise pipeline (SVRG
+                     correction + gradient step, and gossip-combine + l1
+                     prox) in single HBM passes over the flat param buffer.
+  flash_attention  — online-softmax block attention (GQA / sliding-window /
+                     logit softcap) for the long-context training/prefill
+                     paths.
+  rmsnorm          — fused single-HBM-pass RMSNorm (fp32 statistics, used
+                     2x/layer/token by every architecture in the zoo).
+
+Each kernel ships ``ops.py`` (jit wrapper; interpret=True on non-TPU
+backends) and ``ref.py`` (pure-jnp oracle used by the allclose sweeps).
+"""
+
+from . import flash_attention, fused_update, rmsnorm
+
+__all__ = ["flash_attention", "fused_update", "rmsnorm"]

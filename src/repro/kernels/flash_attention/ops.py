@@ -1,0 +1,73 @@
+"""Jit wrapper for the flash attention kernel: layout + padding shim.
+
+Accepts the model's (B, S, H, hd) layout, transposes to the kernel's
+(B, H, S, hd), pads S to the block size and head_dim to a multiple of 8,
+and dispatches with interpret=True off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+__all__ = ["flash_attention", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sliding_window", "softcap", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sliding_window: int | None = None,
+                    softcap: float | None = None,
+                    block_q: int | None = None,
+                    block_k: int | None = None,
+                    interpret: bool | None = None):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    interpret = default_interpret() if interpret is None else interpret
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    bq = block_q or min(kernel.DEFAULT_BLOCK_Q, sq)
+    bk = block_k or min(kernel.DEFAULT_BLOCK_K, sk)
+
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    pad_q = -sq % bq
+    pad_k = -sk % bk
+    pad_d = -hd % 8
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    if pad_d:
+        qt = jnp.pad(qt, ((0, 0),) * 3 + ((0, pad_d),))
+        kt = jnp.pad(kt, ((0, 0),) * 3 + ((0, pad_d),))
+        vt = jnp.pad(vt, ((0, 0),) * 3 + ((0, pad_d),))
+    # padded KV positions must never win the softmax: rely on causal/window
+    # masks for q<=sq; for padded kv we mask by position via sliding/causal
+    # only when causal=True.  For bidirectional use, mask explicitly:
+    if pad_k and not causal:
+        # zero-pad keys produce logit 0 which could leak; push them out of
+        # the window by adding a large negative to padded v? Instead simplest:
+        # extend q positions mask by running with causal=False is unsupported
+        # with ragged Sk — callers pass block-aligned Sk for bidirectional.
+        raise ValueError("bidirectional flash requires Sk % block_k == 0")
+
+    # scale correction for padded head_dim: kernel scales by rsqrt(hd_padded)
+    if pad_d:
+        qt = qt * ((hd + pad_d) / hd) ** 0.5
+
+    out = kernel.flash_attention_call(
+        qt, kt, vt, causal=causal, sliding_window=sliding_window,
+        softcap=softcap, block_q=bq, block_k=bk, interpret=interpret)
+    out = out[:, :, :sq, :hd]
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA / SWA / softcap)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  sliding_window: int | None = None,
+                  softcap: float | None = None):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) with H % KV == 0.
+
+    Returns (B, H, Sq, hd).  fp32 softmax accumulation like the kernel.
+    """
+    b, h, sq, hd = q.shape
+    kv = k.shape[1]
+    rep = h // kv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    sk = k.shape[2]
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if sliding_window is not None:
+        ok &= kp > qp - sliding_window
+    logits = jnp.where(ok[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)

@@ -1,0 +1,69 @@
+"""Jit wrappers: flat-buffer padding/reshaping around the fused kernels.
+
+``flatten_tree`` / ``unflatten_tree`` convert a parameter pytree to one
+padded fp32 buffer of shape (rows, 1024) — the layout the kernels (and the
+ppermute ring fast path in repro.core.gossip) operate on.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel, ref
+
+__all__ = ["svrg_step", "mix_prox", "flatten_tree", "unflatten_tree",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+_ROW = kernel.BLOCK_ROWS * kernel.BLOCK_COLS
+
+
+def flatten_tree(tree):
+    """-> (buffer (rows, 1024) f32, aux) with zero padding to a whole tile."""
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    n = flat.shape[0]
+    padded = -n % _ROW
+    if padded:
+        flat = jnp.concatenate([flat, jnp.zeros((padded,), jnp.float32)])
+    buf = flat.reshape(-1, kernel.BLOCK_COLS)
+    treedef = jax.tree.structure(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    return buf, (treedef, shapes, dtypes, n)
+
+
+def unflatten_tree(buf, aux):
+    treedef, shapes, dtypes, n = aux
+    flat = buf.reshape(-1)[:n]
+    leaves = []
+    off = 0
+    for shp, dt in zip(shapes, dtypes):
+        size = int(np.prod(shp))
+        leaves.append(flat[off:off + size].reshape(shp).astype(dt))
+        off += size
+    return jax.tree.unflatten(treedef, leaves)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def svrg_step(x, g_now, g_snap, mu, alpha, interpret: bool | None = None):
+    """q = x - alpha*(g_now - g_snap + mu) over (rows, 1024) fp32 buffers."""
+    interpret = default_interpret() if interpret is None else interpret
+    return kernel.svrg_step_kernel_call(x, g_now, g_snap, mu, alpha,
+                                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mix_prox(q_self, q_up, q_down, w_self, w_up, w_down, thresh,
+             interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return kernel.mix_prox_kernel_call(q_self, q_up, q_down, w_self, w_up,
+                                       w_down, thresh, interpret=interpret)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused DPSVRG update kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["svrg_step_ref", "mix_prox_ref", "inner_step_ref"]
+
+
+def svrg_step_ref(x, g_now, g_snap, mu, alpha):
+    """q = x - alpha * (g_now - g_snap + mu)   (Algorithm 1 lines 8-9)."""
+    v = g_now - g_snap + mu
+    return x - alpha * v
+
+
+def mix_prox_ref(q_self, q_up, q_down, w_self, w_up, w_down, thresh):
+    """x = soft_threshold(w_self*q_self + w_up*q_up + w_down*q_down, thresh)
+
+    (ring-gossip combine + l1 prox; Algorithm 1 lines 10-11 with threshold
+    = alpha * lambda)."""
+    z = w_self * q_self + w_up * q_up + w_down * q_down
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - thresh, 0.0)
+
+
+def inner_step_ref(x, g_now, g_snap, mu, x_up, x_down, w_self, w_up, w_down,
+                   alpha, thresh):
+    """Degenerate single-device composition used in shape sweeps: neighbors'
+    q are supplied post-permute."""
+    q = svrg_step_ref(x, g_now, g_snap, mu, alpha)
+    return mix_prox_ref(q, x_up, x_down, w_self, w_up, w_down, thresh)

@@ -1,0 +1,32 @@
+"""Jit wrapper for the fused RMSNorm kernel: shape shim + backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+__all__ = ["rmsnorm", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, weight, eps: float = 1e-6, interpret: bool | None = None):
+    """x: (..., d) any leading shape; weight: (d,)."""
+    interpret = default_interpret() if interpret is None else interpret
+    shp = x.shape
+    d = shp[-1]
+    flat = x.reshape(-1, d)
+    rows = flat.shape[0]
+    pad = -rows % kernel.BLOCK_ROWS
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((pad, d), flat.dtype)], axis=0)
+    out = kernel.rmsnorm_kernel_call(flat, weight, eps, interpret=interpret)
+    return out[:rows].reshape(shp)

@@ -1,0 +1,3 @@
+# Launch layer: mesh construction, multi-pod dry-run, roofline analysis,
+# and the runnable train/serve drivers.  NOTE: do not import dryrun here —
+# it sets XLA_FLAGS at import time and must only be imported as __main__.

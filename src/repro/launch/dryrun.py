@@ -1,0 +1,332 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost analysis + roofline terms.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``):
+the first two lines below force 512 host platform devices and must execute
+before any other import triggers jax device initialization.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                          # noqa: E402
+from repro.core import prox as prox_lib            # noqa: E402
+from repro.launch import analytic                  # noqa: E402
+from repro.launch import mesh as mesh_lib          # noqa: E402
+from repro.launch import roofline                  # noqa: E402
+from repro.models import transformer               # noqa: E402
+from repro.models.api import scan_group_size       # noqa: E402
+from repro.train import sharding, steps as steps_lib  # noqa: E402
+
+PARAM_DTYPE = "bfloat16"     # production dry-run precision
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, shd=None):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=shd)
+
+
+def _attach(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def train_input_specs(cfg, shape, m, plan, mesh):
+    """Batch SDS for a decentralized train step (stacked per node)."""
+    per_node = max(shape.global_batch // m, 1)
+    bsh = lambda nd: NamedSharding(mesh, sharding.batch_spec(plan, nd))
+    batch = {
+        "tokens": _sds((m, per_node, shape.seq_len), "int32", bsh(3)),
+        "labels": _sds((m, per_node, shape.seq_len), "int32", bsh(3)),
+    }
+    if cfg.frontend == "vision_stub":
+        batch["image_embeds"] = _sds(
+            (m, per_node, cfg.image_tokens, cfg.d_model), "bfloat16", bsh(4))
+    if cfg.frontend == "audio_stub":
+        batch["audio_frames"] = _sds(
+            (m, per_node, cfg.encoder_seq, cfg.d_model), "bfloat16", bsh(4))
+    return batch
+
+
+def serve_input_specs(cfg, shape, mesh, plan, kind):
+    """Token / cache SDS for prefill or decode."""
+    b = shape.global_batch
+    axis_sizes = dict(mesh.shape)
+    data_ax = "data" if b % axis_sizes.get("data", 1) == 0 else None
+    dsh = lambda spec: NamedSharding(mesh, spec)
+    out = {}
+    if kind == "prefill":
+        out["tokens"] = _sds((b, shape.seq_len), "int32", dsh(P(data_ax, None)))
+        if cfg.frontend == "vision_stub":
+            out["image_embeds"] = _sds((b, cfg.image_tokens, cfg.d_model),
+                                       "bfloat16", dsh(P(data_ax, None, None)))
+        if cfg.frontend == "audio_stub":
+            out["audio_frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                                       "bfloat16", dsh(P(data_ax, None, None)))
+    else:  # decode
+        out["token"] = _sds((b,), "int32", dsh(P(data_ax)))
+        cache_shape = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, b, shape.seq_len,
+                                           jnp.dtype(PARAM_DTYPE)))
+        specs = sharding.cache_specs(cache_shape, plan,
+                                     axis_sizes=axis_sizes)
+        shards = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                              is_leaf=lambda s: isinstance(s, P))
+        out["cache"] = _attach(cache_shape, shards)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one (arch, shape, mesh)
+# ---------------------------------------------------------------------------
+
+def _analytic_bytes_per_device(tree, chips: int) -> float:
+    total = sum(np.prod(l.shape) * l.dtype.itemsize
+                for l in jax.tree.leaves(tree)
+                if hasattr(l, "shape"))
+    return float(total) / chips
+
+
+def active_params(cfg) -> int:
+    """Active parameter count (MoE: only routed experts count per token)."""
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(cfg, k), jax.random.PRNGKey(0))
+
+    def leaf_active(path, leaf):
+        names = [str(getattr(e, "key", "")) for e in path]
+        size = int(np.prod(leaf.shape))
+        if "moe" in names and leaf.ndim == 3:      # expert weights (E, ., .)
+            return size // cfg.moe_experts * cfg.moe_top_k
+        return size
+
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    return sum(leaf_active(p, l) for p, l in flat)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, mapping: str,
+            hw: roofline.HW, consensus_rounds: int = 1,
+            algorithm: str = "dpsvrg", save_hlo: str | None = None,
+            gossip_mode: str = "dense", pin_serve_outputs: bool = False,
+            serve_attn_dim0: bool = False, moe_groups: int = 1,
+            constrain_attn: bool = False, remat: str = "full"):
+    cfg = configs.get_config(arch).scaled(
+        param_dtype=PARAM_DTYPE, moe_dispatch_groups=moe_groups,
+        remat_policy=remat,
+        attn_shard_constraint=(("data", "model") if constrain_attn else None))
+    shape = configs.INPUT_SHAPES[shape_name]
+    ok, reason = configs.shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    plan = mesh_lib.default_plan(multi_pod, mapping)
+    chips = int(np.prod(list(mesh.shape.values())))
+    hw = dataclasses.replace(hw, chips=chips)
+    mesh_name = "multi" if multi_pod else "single"
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            m = mesh_lib.node_count(mesh, plan)
+            offsets = None
+            if gossip_mode == "banded":
+                from repro.core import gossip, graphs
+                sched = graphs.b_connected_ring_schedule(m, b=1)
+                offsets = gossip.schedule_band_offsets(sched, consensus_rounds)
+            bundle = steps_lib.build_train_step(
+                cfg, prox_lib.l1(1e-5), m, plan=plan, mesh=mesh,
+                algorithm=algorithm, gossip_offsets=offsets, donate=False)
+            state_shape = jax.eval_shape(bundle.init_state,
+                                         jax.random.PRNGKey(0))
+            state_sds = _attach(state_shape, bundle.state_shardings)
+            batch = train_input_specs(cfg, shape, m, plan, mesh)
+            if offsets is None:
+                phi = _sds((m, m), "float32",
+                           NamedSharding(mesh, P(None, None)))
+            else:
+                phi = _sds((len(offsets), m), "float32",
+                           NamedSharding(mesh, P(None, None)))
+            alpha = _sds((), "float32", NamedSharding(mesh, P()))
+            lowered = bundle.train_step.lower(state_sds, batch, phi, alpha)
+            arrays_for_mem = (state_sds, batch)
+        else:
+            serve = steps_lib.build_serve_steps(cfg, plan=plan, mesh=mesh)
+            pshape = jax.eval_shape(serve.init_params, jax.random.PRNGKey(0))
+            axis_sizes = dict(mesh.shape)
+            if serve_attn_dim0 and shape.kind == "decode":
+                pspecs = sharding.param_specs(pshape, plan,
+                                              axis_sizes=axis_sizes,
+                                              attn_dim0=True)
+                psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                   is_leaf=lambda s: isinstance(s, P))
+                params_sds = _attach(pshape, psh)
+            else:
+                params_sds = _attach(pshape, serve.param_shardings)
+            ins = serve_input_specs(cfg, shape, mesh, plan, shape.kind)
+            v_ax = ("model" if cfg.vocab_size % axis_sizes.get("model", 1) == 0
+                    else None)
+            b_ax = ("data" if shape.global_batch % axis_sizes.get("data", 1) == 0
+                    else None)
+            logits_ns = NamedSharding(mesh, P(b_ax, v_ax))
+            if shape.kind == "prefill":
+                kwargs = {k: v for k, v in ins.items() if k != "tokens"}
+                out_sh = None
+                if pin_serve_outputs:
+                    out_shape = jax.eval_shape(
+                        lambda p, t, **kw: serve.prefill_step(
+                            p, t, max_len=shape.seq_len, **kw),
+                        params_sds, ins["tokens"], **kwargs)
+                    cspec = sharding.cache_specs(out_shape[1], plan,
+                                                 axis_sizes=axis_sizes)
+                    out_sh = (logits_ns, jax.tree.map(
+                        lambda s: NamedSharding(mesh, s), cspec,
+                        is_leaf=lambda s: isinstance(s, P)))
+                step = jax.jit(serve.prefill_step,
+                               static_argnames=("max_len",),
+                               out_shardings=out_sh)
+                lowered = step.lower(params_sds, ins["tokens"],
+                                     max_len=shape.seq_len, **kwargs)
+            else:
+                out_sh = None
+                if pin_serve_outputs:
+                    cache_sh = jax.tree.map(
+                        lambda s: s.sharding, ins["cache"],
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+                    out_sh = (logits_ns, cache_sh)
+                step = jax.jit(serve.decode_step, out_shardings=out_sh)
+                lowered = step.lower(params_sds, ins["cache"], ins["token"])
+            arrays_for_mem = (params_sds, ins)
+
+        compiled = lowered.compile()
+
+    cost = dict(compiled.cost_analysis() or {})
+    try:
+        mem = compiled.memory_analysis()
+        mem_str = str(mem)
+    except Exception as e:  # CPU backend may not support it
+        mem = None
+        mem_str = f"unavailable on host backend ({type(e).__name__})"
+    hlo = compiled.as_text()
+    n_active = active_params(cfg)
+    mfl = roofline.model_flops(cfg, shape, n_active)
+    # scan-over-layers trip count: collectives inside while bodies repeat
+    group = scan_group_size(cfg)
+    trips = (cfg.num_layers // group) if (cfg.scan_layers and group
+                                          and shape.kind == "train") else 1
+    m_for_bytes = mesh_lib.node_count(mesh, plan) if shape.kind == "train" else 1
+    afl = analytic.step_flops(cfg, shape, algorithm)
+    aby = analytic.step_bytes(cfg, shape, m_for_bytes, algorithm=algorithm)
+    report = roofline.roofline_terms(
+        arch, shape_name, mesh_name, cost, hlo, hw, mfl, afl, aby,
+        while_trips=trips,
+        bytes_per_device=_analytic_bytes_per_device(arrays_for_mem, chips))
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    row = report.as_row()
+    row.update({
+        "status": "ok",
+        "kind": shape.kind,
+        "chips": chips,
+        "plan": mapping,
+        "variant": "+".join(
+            [v for v in (
+                "banded" if (shape.kind == "train"
+                             and gossip_mode == "banded") else None,
+                "attn_dim0" if (shape.kind == "decode"
+                                and serve_attn_dim0) else None,
+                "pinned" if (shape.kind != "train"
+                             and pin_serve_outputs) else None,
+                f"moe_g{moe_groups}" if moe_groups > 1 else None,
+                "attn_cons" if constrain_attn else None,
+            ) if v]) or "baseline",
+        "algorithm": algorithm if shape.kind == "train" else "serve",
+        "active_params": n_active,
+        "compile_s": round(time.time() - t0, 1),
+        "memory_analysis": mem_str[:2000],
+    })
+    print(roofline.format_report(report), flush=True)
+    print(f"    memory_analysis: {mem_str[:400]}", flush=True)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--mapping", default="auto")
+    ap.add_argument("--algorithm", default="dpsvrg",
+                    choices=["dpsvrg", "dspg"])
+    ap.add_argument("--consensus-rounds", type=int, default=1)
+    ap.add_argument("--gossip", default="dense", choices=["dense", "banded"])
+    ap.add_argument("--pin-serve-outputs", action="store_true")
+    ap.add_argument("--serve-attn-dim0", action="store_true")
+    ap.add_argument("--moe-groups", type=int, default=1)
+    ap.add_argument("--constrain-attn", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["full", "dots"])
+    ap.add_argument("--out", default="")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    archs = configs.ARCHITECTURES if args.arch == "all" else [args.arch]
+    shapes = list(configs.INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                try:
+                    row = run_one(arch, shape, multi, args.mapping,
+                                  roofline.HW(),
+                                  consensus_rounds=args.consensus_rounds,
+                                  algorithm=args.algorithm,
+                                  save_hlo=args.save_hlo or None,
+                                  gossip_mode=args.gossip,
+                                  pin_serve_outputs=args.pin_serve_outputs,
+                                  serve_attn_dim0=args.serve_attn_dim0,
+                                  moe_groups=args.moe_groups,
+                                  constrain_attn=args.constrain_attn,
+                                  remat=args.remat)
+                except Exception as e:
+                    traceback.print_exc()
+                    row = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                rows.append(row)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(rows, f, indent=1, default=str)
+    n_ok = sum(r.get("status") == "ok" for r in rows)
+    n_skip = sum(r.get("status") == "skipped" for r in rows)
+    n_err = sum(r.get("status") == "error" for r in rows)
+    print(f"\nDRY-RUN SUMMARY: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors over {len(rows)} combos")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

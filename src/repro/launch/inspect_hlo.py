@@ -1,0 +1,87 @@
+"""HLO collective profiler — the dry-run's "profiler view".
+
+Given a saved HLO module (``dryrun.py --save-hlo``), prints the top-K
+collectives by bytes with their op kind, dtype/shape, originating JAX op
+(from metadata), and the computation they live in (entry vs while-body,
+i.e. whether the layer-scan trip count multiplies them).  This is the tool
+the §Perf iterations used to localize the dominant transfer (DESIGN.md §7).
+
+    PYTHONPATH=src python -m repro.launch.inspect_hlo /tmp/module.hlo --top 15
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+
+from repro.launch.roofline import _DTYPE_BYTES, _COLLECTIVES, _GROUP_RE, \
+    _GROUP_RE2, _COMP_HEADER_RE, _BODY_REF_RE
+
+_SHAPE_RE = re.compile(r"=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def analyze(text: str, top: int = 15):
+    body_names = set(_BODY_REF_RE.findall(text))
+    rows = []
+    current = "<entry>"
+    for line in text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m and ("(" in line):
+            current = m.group(2)
+            continue
+        s = line.strip()
+        if "-done" in s:
+            continue
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in s or f" {kind}-start(" in s:
+                sm = _SHAPE_RE.search(s)
+                if not sm:
+                    break
+                dt, dims = sm.groups()
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                b = n * _DTYPE_BYTES.get(dt, 4)
+                if kind == "reduce-scatter":
+                    gm = _GROUP_RE.search(s) or _GROUP_RE2.search(s)
+                    if gm:
+                        try:
+                            b *= max(int(gm.group(2)), 1)
+                        except (IndexError, ValueError):
+                            b *= max(len(gm.group(1).split(",")), 1)
+                meta = _META_RE.search(s)
+                rows.append({
+                    "bytes": b,
+                    "kind": kind,
+                    "type": f"{dt}[{dims}]",
+                    "comp": current,
+                    "in_scan": current in body_names,
+                    "op": (meta.group(1)[:80] if meta else ""),
+                })
+                break
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:top], rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_file")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    with open(args.hlo_file) as f:
+        text = f.read()
+    top_rows, all_rows = analyze(text, args.top)
+    total = sum(r["bytes"] for r in all_rows)
+    scan = sum(r["bytes"] for r in all_rows if r["in_scan"])
+    print(f"{len(all_rows)} collectives, {total/2**30:.2f} GiB printed-once "
+          f"({scan/2**30:.2f} GiB inside scan bodies — multiply by trips)")
+    print(f"{'GiB':>9}  {'kind':18} {'scan':4} {'type':34} op")
+    for r in top_rows:
+        print(f"{r['bytes']/2**30:9.3f}  {r['kind']:18} "
+              f"{'yes' if r['in_scan'] else '':4} {r['type']:34} {r['op']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Render the §Roofline table from dry-run JSON rows.
+
+    PYTHONPATH=src python -m repro.launch.make_table results/dryrun_*.json \
+        > results/roofline_table.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def load_rows(patterns):
+    rows = []
+    for pat in patterns:
+        for path in sorted(glob.glob(pat)):
+            with open(path) as f:
+                rows.extend(json.load(f))
+    return rows
+
+
+def fmt_ms(x):
+    return f"{x * 1e3:.2f}"
+
+
+def main():
+    patterns = sys.argv[1:] or ["results/dryrun_*.json"]
+    rows = load_rows(patterns)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    errors = [r for r in rows if r.get("status") == "error"]
+
+    print("## Roofline table (per (arch x shape x mesh); terms in ms/step)\n")
+    print("| arch | shape | mesh | kind | t_compute | t_memory | t_collective"
+          " | bottleneck | useful (6ND/analytic) | coll GB/dev | mem GB/dev"
+          " (args) | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    key = lambda r: (r["arch"], r["shape"], r["mesh"])
+    for r in sorted(ok, key=key):
+        bpd = (r.get("bytes_per_device") or 0) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('kind','')} "
+              f"| {fmt_ms(r['t_compute'])} | {fmt_ms(r['t_memory'])} "
+              f"| {fmt_ms(r['t_collective'])} | **{r['bottleneck']}** "
+              f"| {r['useful_ratio']:.3f} | {r['coll_gbytes']:.2f} "
+              f"| {bpd:.1f} | {r.get('compile_s','')} |")
+    print(f"\n{len(ok)} compiled, {len(skipped)} documented skips, "
+          f"{len(errors)} errors.")
+    if skipped:
+        print("\nSkips:")
+        for r in skipped:
+            print(f"- {r['arch']} x {r['shape']} ({r['mesh']}): {r['reason']}")
+    if errors:
+        print("\nERRORS:")
+        for r in errors:
+            print(f"- {r['arch']} x {r['shape']} ({r['mesh']}): {r['error']}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

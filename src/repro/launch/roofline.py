@@ -1,0 +1,222 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms (seconds, per training/serving step), TPU v5e constants from the
+brief:
+
+  compute    = HLO_FLOPs   / (chips * 197e12)     bf16 peak per chip
+  memory     = HLO_bytes   / (chips * 819e9)      HBM bandwidth per chip
+  collective = coll_bytes  / (chips * 50e9)       ICI per link
+
+IMPORTANT measurement convention: ``compiled.cost_analysis()`` and
+``compiled.as_text()`` describe the post-SPMD *per-device* module, i.e. the
+reported FLOPs/bytes/collective-bytes are already divided by the chip count
+(global = reported x chips for a balanced partition).  The formulas above are
+therefore evaluated as ``reported / per_chip_rate`` — mathematically the same
+as global/(chips*rate) without double-dividing.
+
+``cost_analysis`` provides FLOPs/bytes; collective bytes are NOT in
+cost_analysis, so we parse the post-SPMD HLO text and sum the bytes moved by
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.
+
+Byte-counting convention (documented per the brief's "operand sizes"):
+  all-gather          result bytes            (= operand * group: wire total)
+  all-reduce          result bytes            (= operand bytes)
+  reduce-scatter      result bytes * group    (= operand bytes)
+  all-to-all          result bytes            (full payload re-shuffled)
+  collective-permute  result bytes
+-start variants are counted, -done variants skipped (aliases).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineReport",
+           "model_flops", "format_report"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 / chip
+    hbm_bw: float = 819e9           # B/s / chip
+    link_bw: float = 50e9           # B/s / link
+    chips: int = 256
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the op's result type(s): everything between '=' and the op
+    name, which may be a tuple."""
+    lhs_rhs = line.split("=", 1)
+    if len(lhs_rhs) != 2:
+        return 0
+    rhs = lhs_rhs[1]
+    # type annotation precedes the op name token
+    for op in _COLLECTIVES:
+        idx = rhs.find(op)
+        if idx >= 0:
+            type_str = rhs[:idx]
+            return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_str))
+    return 0
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = _GROUP_RE2.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    return 1
+
+
+_COMP_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*(\([^)]*\))?\s*"
+                             r"(->\s*[^{]*)?\{\s*$")
+_BODY_REF_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+def collective_bytes(hlo_text: str, while_trips: int = 1) -> dict:
+    """Sum bytes per collective kind over the HLO module text.
+
+    ``while_trips``: trip count of the layer-scan while loops.  HLO text
+    prints a while body ONCE; collectives inside while-body computations
+    (the per-layer-group TP collectives under scan-over-layers) are
+    multiplied by this factor so totals reflect a full step.  Collectives in
+    the entry computation (gossip, embedding, loss) are counted once.
+    """
+    body_names = set(_BODY_REF_RE.findall(hlo_text))
+    per_comp: dict = {}
+    current = "<entry>"
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m and ("(" in line):
+            current = m.group(2)
+            continue
+        s = line.strip()
+        if "-done" in s:
+            continue
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in s or f" {kind}-start(" in s:
+                b = _result_bytes(s)
+                if kind == "reduce-scatter":
+                    b *= _group_size(s)
+                per_comp.setdefault(current, {}).setdefault(kind, 0)
+                per_comp[current][kind] += b
+                break
+    out = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    out["in_scan"] = 0
+    for comp, kinds in per_comp.items():
+        mult = while_trips if comp in body_names else 1
+        for kind, b in kinds.items():
+            out[kind] += b * mult
+            out["total"] += b * mult
+            if mult > 1:
+                out["in_scan"] += b * mult
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    hlo_gflops: float            # measured per-device (scan bodies counted once)
+    hlo_gbytes: float            # measured per-device (same caveat)
+    analytic_gflops: float       # analytic model, global
+    analytic_gbytes: float       # analytic model, global
+    coll_gbytes: float           # per-device, while-trip corrected
+    coll_breakdown: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_gflops: float
+    useful_ratio: float
+    bytes_per_device: float | None = None
+    note: str = ""
+
+    def as_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape, n_params_active: int, m_nodes: int = 1) -> float:
+    """MODEL_FLOPS = 6*N*D for training (fwd+bwd), 2*N*D for a forward-only
+    serving step, per the brief (N = active params, D = tokens processed)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params_active * shape.global_batch
+
+
+def roofline_terms(arch: str, shape_name: str, mesh_name: str,
+                   cost: dict, hlo_text: str, hw: HW,
+                   model_fl: float, analytic_fl: float, analytic_by: float,
+                   while_trips: int = 1, note: str = "",
+                   bytes_per_device: float | None = None) -> RooflineReport:
+    """Terms: compute/memory from the ANALYTIC model (global / chips*rate,
+    because XLA counts scan bodies once — launch/analytic.py); collective
+    from the while-trip-corrected HLO parse (per-device / per-chip rate)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    if byts == 0.0:
+        byts = sum(float(v) for k, v in cost.items()
+                   if k.startswith("bytes accessed"))
+    coll = collective_bytes(hlo_text, while_trips=while_trips)
+    t_c = analytic_fl / (hw.chips * hw.peak_flops)
+    t_m = analytic_by / (hw.chips * hw.hbm_bw)
+    t_x = coll["total"] / hw.link_bw          # per-device, per-link rate
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name,
+        hlo_gflops=flops / 1e9, hlo_gbytes=byts / 1e9,
+        analytic_gflops=analytic_fl / 1e9, analytic_gbytes=analytic_by / 1e9,
+        coll_gbytes=coll["total"] / 1e9,
+        coll_breakdown={k: v / 1e9 for k, v in coll.items() if k != "total"},
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck,
+        model_gflops=model_fl / 1e9,
+        useful_ratio=(model_fl / analytic_fl) if analytic_fl else 0.0,
+        bytes_per_device=bytes_per_device,
+        note=note)
+
+
+def format_report(r: RooflineReport) -> str:
+    return (f"{r.arch:28s} {r.shape:12s} {r.mesh:6s} "
+            f"aflops={r.analytic_gflops:14.1f}G abytes={r.analytic_gbytes:12.1f}G "
+            f"coll={r.coll_gbytes:9.2f}G  t=(c {r.t_compute*1e3:9.3f} | "
+            f"m {r.t_memory*1e3:9.3f} | x {r.t_collective*1e3:9.3f}) ms "
+            f"-> {r.bottleneck:10s} useful={r.useful_ratio:6.3f} {r.note}")

@@ -1,0 +1,65 @@
+"""Serving driver: batched prefill + greedy decode for any assigned arch
+(smoke-scale runnable on CPU; the FULL configs lower on the production mesh
+via repro.launch.dryrun).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-350m --new 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    from repro import configs
+    from repro.models import multimodal
+    from repro.train import steps as steps_lib
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.smoke_variant(configs.get_config(args.arch))
+    bundle = steps_lib.build_serve_steps(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                    (args.batch, args.prompt_len)), jnp.int32)
+    kw = {}
+    if cfg.frontend == "vision_stub":
+        kw["image_embeds"] = jnp.asarray(multimodal.fake_image_patches(
+            args.batch, cfg.d_model, cfg.image_tokens))
+    if cfg.frontend == "audio_stub":
+        kw["audio_frames"] = jnp.asarray(multimodal.fake_audio_frames(
+            args.batch, cfg.d_model, cfg.encoder_seq))
+
+    t0 = time.time()
+    logits, cache = bundle.prefill_step(
+        params, toks, max_len=args.prompt_len + args.new + 64, **kw)
+    t_prefill = time.time() - t0
+    decode = jax.jit(bundle.decode_step)
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    t0 = time.time()
+    gen = [cur]
+    for _ in range(args.new - 1):
+        logits, cache = decode(params, cache, cur)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        gen.append(cur)
+    jax.block_until_ready(cur)
+    t_decode = time.time() - t0
+    print(f"arch={args.arch} (smoke) batch={args.batch}: "
+          f"prefill {t_prefill*1e3:.1f} ms, "
+          f"decode {t_decode/max(args.new-1,1)*1e3:.1f} ms/tok")
+    print("sample:", np.stack([np.asarray(g) for g in gen], 1)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

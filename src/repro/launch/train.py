@@ -1,0 +1,61 @@
+"""Production training driver.
+
+Two modes:
+  * ``--local`` (default on this container): CPU-scale decentralized
+    training of any smoke-reduced assigned architecture through the full
+    trainer stack.
+  * ``--mesh single|multi``: builds the production mesh (requires the real
+    slice, or the dry-run device forcing) and runs the sharded step.
+
+    PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+        --steps 50 --local
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--lam", type=float, default=1e-6)
+    ap.add_argument("--algorithm", default="dpsvrg",
+                    choices=["dpsvrg", "dspg"])
+    ap.add_argument("--local", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.core import graphs, prox
+    from repro.data import loader, synthetic
+    from repro.train import trainer
+
+    cfg = configs.smoke_variant(configs.get_config(args.arch))
+    if cfg.frontend != "none":
+        raise SystemExit(f"{args.arch}: use examples/serve_lm.py for "
+                         "modality-stub archs, or a text arch here")
+    stream = synthetic.make_token_stream(500_000, cfg.vocab_size, seed=0)
+    ld = loader.LMLoader(stream.tokens, num_nodes=args.nodes,
+                         per_node_batch=4, seq_len=64)
+
+    def batches():
+        for toks, labs in ld:
+            yield {"tokens": toks, "labels": labs}
+
+    sched = graphs.b_connected_ring_schedule(args.nodes, b=2, seed=0)
+    tc = trainer.TrainerConfig(
+        num_steps=args.steps, snapshot_every=max(args.steps // 4, 10),
+        alpha=args.alpha, consensus_rounds=2, algorithm=args.algorithm,
+        log_every=max(args.steps // 10, 1),
+        ckpt_dir=args.ckpt_dir or None,
+        ckpt_every=args.steps if args.ckpt_dir else 0)
+    hist = trainer.train_loop(cfg, prox.l1(args.lam), sched, batches(), tc)
+    print("step loss:", list(zip(hist["step"], [round(l, 4) for l in hist["loss"]])))
+
+
+if __name__ == "__main__":
+    main()

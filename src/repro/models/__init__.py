@@ -1,0 +1,5 @@
+from . import api, attention, common, ffn, moe, multimodal, ssm, transformer
+from .api import LayerPlan, ModelConfig, layer_plan
+
+__all__ = ["api", "attention", "common", "ffn", "moe", "multimodal", "ssm",
+           "transformer", "LayerPlan", "ModelConfig", "layer_plan"]

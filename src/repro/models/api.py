@@ -1,0 +1,182 @@
+"""Model configuration schema and per-layer planning.
+
+``ModelConfig`` is the single declarative description every assigned
+architecture compiles down to; ``layer_plan`` expands it into per-layer
+block specifications (mixer kind + attention variant + FFN kind) that
+``transformer.py`` assembles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+from . import attention, moe as moe_lib, ssm
+
+__all__ = ["ModelConfig", "LayerPlan", "layer_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                       # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None          # default d_model // num_heads
+    norm: str = "rmsnorm"                # rmsnorm | layernorm
+    post_norm: bool = False              # gemma2 pre+post norm
+    ffn_kind: str = "swiglu"             # swiglu | geglu | gelu | none
+    residual_scale: float | None = None  # minicpm depth scaling
+
+    # --- block pattern -----------------------------------------------------
+    # mixer for layer i = mixer_pattern[i % len(mixer_pattern)]
+    mixer_pattern: tuple = ("attn",)     # attn | mamba | mlstm | slstm
+
+    # --- MoE ----------------------------------------------------------------
+    moe_experts: int = 0
+    moe_top_k: int = 1
+    moe_period: int = 0                  # 0 = none, 1 = every layer, 2 = every other
+    moe_shared_expert: bool = False
+    capacity_factor: float = 1.25
+    moe_aux_weight: float = 0.01
+    moe_dispatch_groups: int = 1   # >1: data-sharding-aligned grouped dispatch
+
+    # --- attention variants ---------------------------------------------------
+    sliding_window: int | None = None
+    swa_period: int = 1                  # 2 => even layers local, odd global (gemma2)
+    chunk: int | None = None             # chunked-local (llama4)
+    chunk_period: int = 1                # every chunk_period-th layer is global
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    nope_on_global: bool = False         # llama4: global layers have no RoPE
+    qk_norm: bool = False
+    max_position: int = 1 << 20          # learned pos-emb size when use_rope=False
+    # (batch_axis, head_axis) with_sharding_constraint on q/k/v activations
+    # (see AttnSpec.shard_constraint); set by the launcher, None by default
+    attn_shard_constraint: tuple | None = None
+
+    # --- SSM ----------------------------------------------------------------
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    scan_chunk: int = 256
+
+    # --- encoder-decoder / multimodal ---------------------------------------
+    encoder_layers: int = 0
+    encoder_seq: int = 0                 # whisper: 1500 frames
+    frontend: str = "none"               # none | audio_stub | vision_stub
+    image_tokens: int = 0
+
+    # --- misc ----------------------------------------------------------------
+    # scan over repeated layer groups (group = lcm of all pattern periods):
+    # compiles one group body instead of num_layers unrolled blocks.
+    scan_layers: bool = True
+    # remat policy for the layer scan: "full" rematerializes everything
+    # (min memory, +1 fwd of recompute); "dots" saves matmul outputs and
+    # recomputes only elementwise ops (~12.5% less train compute for ~2x
+    # activation memory) — a §Perf lever for compute-bound training.
+    remat_policy: str = "full"
+    tie_embeddings: bool = True
+    embed_scale: bool = False            # gemma: scale embeds by sqrt(d)
+    param_dtype: str = "float32"
+    logit_dtype: str = "float32"
+    # set False for pure full-attention archs (long_500k is skipped for them)
+    supports_long_context: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    mixer: str                    # attn | mamba | mlstm | slstm
+    attn: attention.AttnSpec | None
+    ffn: str                      # swiglu | geglu | gelu | moe | none
+    moe: moe_lib.MoESpec | None
+    mamba: ssm.MambaSpec | None
+    mlstm: ssm.MLstmSpec | None
+    slstm: ssm.SLstmSpec | None
+
+
+def scan_group_size(cfg: ModelConfig) -> int | None:
+    """Size of the repeating layer group for scan-over-layers, or None if the
+    layer stack is not periodic-divisible (smoke variants, enc-dec)."""
+    import math
+    if cfg.encoder_layers > 0:
+        return None
+    g = 1
+    for p in (len(cfg.mixer_pattern), max(cfg.moe_period, 1),
+              max(cfg.swa_period, 1), max(cfg.chunk_period, 1)):
+        g = math.lcm(g, p)
+    if cfg.num_layers % g != 0 or cfg.num_layers // g < 2:
+        return None
+    return g
+
+
+def _attn_spec(cfg: ModelConfig, i: int, cross: bool = False,
+               causal: bool = True) -> attention.AttnSpec:
+    sw = cfg.sliding_window
+    if sw is not None and cfg.swa_period > 1 and i % cfg.swa_period != 0:
+        sw = None                                  # global layer (gemma2 odd)
+    chunk = cfg.chunk
+    is_global_chunk = False
+    if chunk is not None and cfg.chunk_period > 1 and \
+            (i + 1) % cfg.chunk_period == 0:
+        chunk = None                               # llama4 every 4th = global
+        is_global_chunk = True
+    use_rope = cfg.use_rope
+    if cfg.nope_on_global and is_global_chunk:
+        use_rope = False
+    return attention.AttnSpec(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+        sliding_window=sw, chunk=chunk, softcap=cfg.attn_softcap,
+        causal=causal, cross=cross, use_rope=use_rope,
+        rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+        shard_constraint=cfg.attn_shard_constraint)
+
+
+def layer_plan(cfg: ModelConfig) -> list[LayerPlan]:
+    plans = []
+    for i in range(cfg.num_layers):
+        mixer = cfg.mixer_pattern[i % len(cfg.mixer_pattern)]
+        use_moe = (cfg.moe_period > 0 and cfg.moe_experts > 0
+                   and i % cfg.moe_period == (cfg.moe_period - 1))
+        if mixer in ("mlstm", "slstm"):
+            ffn = "none"                           # xLSTM blocks are self-contained
+        elif use_moe:
+            ffn = "moe"
+        else:
+            ffn = cfg.ffn_kind
+        plans.append(LayerPlan(
+            mixer=mixer,
+            attn=_attn_spec(cfg, i) if mixer == "attn" else None,
+            ffn=ffn,
+            moe=moe_lib.MoESpec(
+                d_model=cfg.d_model, d_ff=cfg.d_ff,
+                num_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                capacity_factor=cfg.capacity_factor,
+                shared_expert=cfg.moe_shared_expert,
+                dispatch_groups=cfg.moe_dispatch_groups)
+            if ffn == "moe" else None,
+            mamba=ssm.MambaSpec(
+                d_model=cfg.d_model, expand=cfg.mamba_expand,
+                d_state=cfg.mamba_d_state,
+                chunk_size=cfg.scan_chunk) if mixer == "mamba" else None,
+            mlstm=ssm.MLstmSpec(
+                d_model=cfg.d_model,
+                num_heads=max(cfg.num_heads, 1)) if mixer == "mlstm" else None,
+            slstm=ssm.SLstmSpec(
+                d_model=cfg.d_model,
+                num_heads=max(cfg.num_kv_heads, 1)) if mixer == "slstm" else None,
+        ))
+    return plans

@@ -1,0 +1,255 @@
+"""Grouped-query attention with the masking variants the assigned
+architectures need, plus KV-cache prefill/decode paths.
+
+Variants (selected per layer by the config):
+  * full causal                      (stablelm, minicpm, llava, jamba attn)
+  * sliding-window causal            (h2o-danube, gemma2 local layers)
+  * chunked-local causal             (llama4 iRoPE-style local layers)
+  * bidirectional                    (whisper encoder)
+  * cross-attention                  (whisper decoder -> encoder)
+  * logit softcap                    (gemma2)
+
+The reference path is einsum-based (GSPMD-friendly, used by dry-run and CPU
+tests).  ``repro.kernels.flash_attention`` provides the Pallas TPU kernel for
+the same math; the config flag ``use_flash`` switches the training forward
+onto it (validated equal in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+__all__ = ["AttnSpec", "init_attention", "attention_forward",
+           "init_kv_cache", "attention_decode", "attention_prefill"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    sliding_window: int | None = None   # None = full
+    chunk: int | None = None            # chunked-local (llama4)
+    softcap: float | None = None        # attn logit softcap (gemma2: 50.0)
+    causal: bool = True                 # False for encoder self-attn
+    cross: bool = False                 # cross-attention (no RoPE on kv source)
+    use_rope: bool = True               # llama4 global layers use NoPE
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    # (batch_axis, head_axis) activation sharding constraint.  When the head
+    # count does not divide the model axis (llama4: 40 heads on 16), GSPMD
+    # otherwise contracts over head_dim and ALL-REDUCES the (S, S) score
+    # matrix; forcing (padded) head sharding keeps each head's softmax local.
+    shard_constraint: tuple | None = None
+
+
+def init_attention(keygen: common.KeyGen, spec: AttnSpec, dtype=jnp.float32):
+    d, h, kv, hd = spec.d_model, spec.num_heads, spec.num_kv_heads, spec.head_dim
+    p = {
+        "wq": common.dense_init(keygen(), (d, h * hd), dtype),
+        "wk": common.dense_init(keygen(), (d, kv * hd), dtype),
+        "wv": common.dense_init(keygen(), (d, kv * hd), dtype),
+        "wo": common.dense_init(keygen(), (h * hd, d), dtype),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = common.zeros_init((hd,), dtype)
+        p["k_norm"] = common.zeros_init((hd,), dtype)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _merge_heads(x):
+    return x.reshape(*x.shape[:-2], -1)
+
+
+def _repeat_kv(k, num_heads):
+    """(B, S, KV, hd) -> (B, S, H, hd) by broadcasting each group."""
+    b, s, kv, hd = k.shape
+    rep = num_heads // kv
+    if rep == 1:
+        return k
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, rep, hd))
+    return k.reshape(b, s, kv * rep, hd)
+
+
+def _mask_bias(spec: AttnSpec, q_pos, k_pos):
+    """Additive mask bias (Sq, Sk) from the layer's masking variant.
+
+    q_pos/k_pos: int32 position vectors (absolute token positions).
+    """
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if spec.causal and not spec.cross:
+        ok &= kp <= qp
+    if spec.sliding_window is not None and not spec.cross:
+        ok &= kp > qp - spec.sliding_window
+    if spec.chunk is not None and not spec.cross:
+        ok &= (kp // spec.chunk) == (qp // spec.chunk)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa(spec: AttnSpec, q, k, v, bias):
+    """q: (B,Sq,H,hd) k,v: (B,Sk,H,hd) bias: (Sq,Sk) -> (B,Sq,H,hd)."""
+    scale = 1.0 / math.sqrt(spec.head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = common.softcap(logits, spec.softcap)
+    logits = logits + bias[None, None]
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _qkv(params, spec: AttnSpec, x, kv_src=None):
+    kv_src = x if kv_src is None else kv_src
+    q = _split_heads(x @ params["wq"], spec.num_heads, spec.head_dim)
+    k = _split_heads(kv_src @ params["wk"], spec.num_kv_heads, spec.head_dim)
+    v = _split_heads(kv_src @ params["wv"], spec.num_kv_heads, spec.head_dim)
+    if spec.qk_norm:
+        q = common.rms_norm(q, params["q_norm"])
+        k = common.rms_norm(k, params["k_norm"])
+    return q, k, v
+
+
+def attention_forward(params, spec: AttnSpec, x, kv_src=None, positions=None):
+    """Training/prefill forward without cache.  x: (B, S, d)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, spec, x, kv_src)
+    sk = k.shape[1]
+    q_pos = jnp.arange(s) if positions is None else positions
+    k_pos = jnp.arange(sk)
+    if spec.use_rope and not spec.cross:
+        cos, sin = common.rope_angles(q_pos, spec.head_dim, spec.rope_theta)
+        q = common.apply_rope(q, cos, sin)
+        kcos, ksin = common.rope_angles(k_pos, spec.head_dim, spec.rope_theta)
+        k = common.apply_rope(k, kcos, ksin)
+    k = _repeat_kv(k, spec.num_heads)
+    v = _repeat_kv(v, spec.num_heads)
+    if spec.shard_constraint is not None:
+        from jax.sharding import PartitionSpec as _P
+        ba, ha = spec.shard_constraint
+        cons = lambda t: jax.lax.with_sharding_constraint(
+            t, _P(ba, None, ha, None))
+        q, k, v = cons(q), cons(k), cons(v)
+    bias = _mask_bias(spec, q_pos, k_pos)
+    out = _sdpa(spec, q, k, v, bias)
+    return _merge_heads(out) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache serving paths
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, spec: AttnSpec, dtype=jnp.float32):
+    """Cache layout (B, S_max, KV, hd).  Sliding-window layers allocate only
+    the window (ring buffer); chunked layers allocate the chunk."""
+    if spec.sliding_window is not None:
+        alloc = min(max_len, spec.sliding_window)
+    elif spec.chunk is not None:
+        alloc = min(max_len, spec.chunk)
+    else:
+        alloc = max_len
+    shp = (batch, alloc, spec.num_kv_heads, spec.head_dim)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def attention_prefill(params, spec: AttnSpec, x, positions=None,
+                      max_len: int | None = None):
+    """Prefill: run forward AND return the populated ring-buffer cache.
+
+    The cache is allocated for ``max_len`` total positions (>= prompt) and
+    respects the ring invariant *slot = position % alloc* so that
+    ``attention_decode`` can continue from it.
+    """
+    b, s, _ = x.shape
+    out = attention_forward(params, spec, x, positions=positions)
+    _, k, v = _qkv(params, spec, x)
+    if spec.use_rope and not spec.cross:
+        k_pos = jnp.arange(s)
+        kcos, ksin = common.rope_angles(k_pos, spec.head_dim, spec.rope_theta)
+        k = common.apply_rope(k, kcos, ksin)
+    cache = init_kv_cache(b, max(max_len or s, s), spec, x.dtype)
+    alloc = cache["k"].shape[1]
+    if s >= alloc:
+        # keep the last `alloc` positions, rolled so slot == position % alloc
+        shift = s % alloc
+        kw = jnp.roll(k[:, -alloc:], shift, axis=1)
+        vw = jnp.roll(v[:, -alloc:], shift, axis=1)
+    else:
+        kw = cache["k"].at[:, :s].set(k)
+        vw = cache["v"].at[:, :s].set(v)
+    return out, {"k": kw, "v": vw}
+
+
+def attention_decode(params, spec: AttnSpec, x, cache, pos):
+    """One-token decode.  x: (B, 1, d); pos: absolute position — a scalar
+    (all sequences aligned) or a (B,) vector (continuous batching: each
+    slot at its own position).
+
+    The cache is a ring buffer for windowed layers; for full layers it holds
+    all past positions (entries beyond each row's ``pos`` are masked out).
+    """
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))   # (B,)
+    q, k_new, v_new = _qkv(params, spec, x)
+    if spec.use_rope and not spec.cross:
+        cos, sin = common.rope_angles(pos[:, None], spec.head_dim,
+                                      spec.rope_theta)           # (B,1,half)
+        q = common.apply_rope(q, cos, sin)
+        k_new = common.apply_rope(k_new, cos, sin)
+    alloc = cache["k"].shape[1]
+    slot = pos % alloc                                           # (B,)
+    rows = jnp.arange(b)
+    k_cache = cache["k"].at[rows, slot].set(k_new[:, 0])
+    v_cache = cache["v"].at[rows, slot].set(v_new[:, 0])
+    new_cache = {"k": k_cache, "v": v_cache}
+
+    k = _repeat_kv(k_cache, spec.num_heads)
+    v = _repeat_kv(v_cache, spec.num_heads)
+    # absolute position of each cache slot (ring-buffer aware), per row:
+    # slot s holds the largest p <= pos with p % alloc == s
+    slots = jnp.arange(alloc)[None, :]                           # (1, alloc)
+    p = pos[:, None]                                             # (B, 1)
+    abs_pos = p - ((p - slots) % alloc)                          # (B, alloc)
+    valid = abs_pos >= 0
+    if spec.sliding_window is not None:
+        valid &= abs_pos > p - spec.sliding_window
+    if spec.chunk is not None:
+        valid &= (abs_pos // spec.chunk) == (p // spec.chunk)
+    if spec.causal and not spec.cross:
+        valid &= abs_pos <= p
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)     # (B, alloc)
+
+    scale = 1.0 / math.sqrt(spec.head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = common.softcap(logits, spec.softcap)
+    logits = logits + bias[:, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return _merge_heads(out) @ params["wo"], new_cache
+
+
+def cross_attention_cache(params, spec: AttnSpec, enc_out):
+    """Precompute K/V over encoder output once (whisper decoder)."""
+    k = _split_heads(enc_out @ params["wk"], spec.num_kv_heads, spec.head_dim)
+    v = _split_heads(enc_out @ params["wv"], spec.num_kv_heads, spec.head_dim)
+    return {"k": k, "v": v}
+
+
+def cross_attention_apply(params, spec: AttnSpec, x, cross_cache):
+    q = _split_heads(x @ params["wq"], spec.num_heads, spec.head_dim)
+    k = _repeat_kv(cross_cache["k"], spec.num_heads)
+    v = _repeat_kv(cross_cache["v"], spec.num_heads)
+    bias = jnp.zeros((x.shape[1], k.shape[1]), jnp.float32)
+    out = _sdpa(spec, q, k, v, bias)
+    return _merge_heads(out) @ params["wo"]

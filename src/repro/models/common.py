@@ -1,0 +1,98 @@
+"""Shared model building blocks: initializers, norms, RoPE, softcap.
+
+Models are pure functions over nested-dict parameter pytrees (no flax
+dependency): ``init_*`` functions build leaves, ``apply`` functions consume
+them.  All weights default to fp32 on CPU; the dry-run casts to bf16 via the
+config's ``param_dtype``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_init", "embed_init", "zeros_init", "ones_init", "rms_norm",
+           "layer_norm", "apply_rope", "rope_angles", "softcap", "KeyGen"]
+
+Params = dict
+
+
+class KeyGen:
+    """Sequential PRNG key splitter for imperative-style init code."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def dense_init(key, shape, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal fan-in init (LeCun-style, standard for LLM weights)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)
+            * (1.0 / math.sqrt(dim))).astype(dtype)
+
+
+def zeros_init(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def rope_angles(positions, head_dim: int, theta: float = 10000.0):
+    """positions: (..., S) int -> (cos, sin) of shape (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, head_dim); cos/sin: (..., S, half) broadcast over H.
+
+    Rotation is computed in fp32 but the result is cast back to x.dtype so
+    bf16 KV-cache updates stay dtype-consistent."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits, cap: float | None):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)

@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU (llama family), GeGLU, plain GELU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+__all__ = ["init_ffn", "ffn_forward"]
+
+
+def init_ffn(keygen: common.KeyGen, d_model: int, d_ff: int, kind: str,
+             dtype=jnp.float32):
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": common.dense_init(keygen(), (d_model, d_ff), dtype),
+            "w_up": common.dense_init(keygen(), (d_model, d_ff), dtype),
+            "w_down": common.dense_init(keygen(), (d_ff, d_model), dtype),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": common.dense_init(keygen(), (d_model, d_ff), dtype),
+            "b_up": common.zeros_init((d_ff,), dtype),
+            "w_down": common.dense_init(keygen(), (d_ff, d_model), dtype),
+            "b_down": common.zeros_init((d_model,), dtype),
+        }
+    raise ValueError(f"unknown ffn kind {kind}")
+
+
+def ffn_forward(params, x, kind: str):
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"] + params["b_up"])
+        return h @ params["w_down"] + params["b_down"]
+    raise ValueError(f"unknown ffn kind {kind}")

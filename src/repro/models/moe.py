@@ -1,0 +1,143 @@
+"""Mixture-of-Experts with top-k routing and capacity-factor dispatch.
+
+Scatter-based dispatch (not the naive GShard (T, E, C) one-hot einsum, whose
+dispatch tensor would be tens of GB at production token counts):
+
+  1. router logits -> top-k experts + gates per token
+  2. position-in-expert via a (T, E) cumsum (small)
+  3. scatter tokens into the (E, C, d) expert buffer (capacity-dropped)
+  4. batched expert FFN: (E, C, d) x (E, d, ff) einsums
+  5. gather outputs back and combine with gates
+
+Experts are sharded over the ``model`` mesh axis (expert parallelism); under
+GSPMD the scatter/gather lower to the all-to-all-style collectives that the
+roofline analysis then measures.  A switch-style load-balance auxiliary loss
+is returned alongside the output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+__all__ = ["MoESpec", "init_moe", "moe_forward"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int
+    num_experts: int
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    shared_expert: bool = False   # llama4-style always-on shared expert
+    router_noise: float = 0.0
+    # >1: partition tokens into this many groups (aligned with the batch's
+    # data-sharding) and dispatch per group with capacity/groups.  Keeps the
+    # token dim sharded through dispatch so GSPMD lowers the expert exchange
+    # as an all-to-all-sized transfer instead of all-gathering every token
+    # to every expert shard.  1 = global dispatch (baseline).
+    dispatch_groups: int = 1
+
+
+def init_moe(keygen: common.KeyGen, spec: MoESpec, dtype=jnp.float32):
+    e, d, f = spec.num_experts, spec.d_model, spec.d_ff
+    p = {
+        "router": common.dense_init(keygen(), (d, e), dtype, scale=0.02),
+        "w_gate": common.dense_init(keygen(), (e, d, f), dtype),
+        "w_up": common.dense_init(keygen(), (e, d, f), dtype),
+        "w_down": common.dense_init(keygen(), (e, f, d), dtype),
+    }
+    if spec.shared_expert:
+        p["shared_gate"] = common.dense_init(keygen(), (d, f), dtype)
+        p["shared_up"] = common.dense_init(keygen(), (d, f), dtype)
+        p["shared_down"] = common.dense_init(keygen(), (f, d), dtype)
+    return p
+
+
+def moe_forward(params, spec: MoESpec, x):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    g = spec.dispatch_groups
+    if g > 1 and b % g == 0:
+        # grouped dispatch: groups align with the batch's data-sharding, so
+        # the token dim stays sharded through scatter/gather and only the
+        # (E, C/g, d) expert buffers cross shards (all-to-all-sized).
+        xg = x.reshape(g, (b // g) * s, d)
+        yg, aux = jax.vmap(lambda xt: _moe_tokens(params, spec, xt))(xg)
+        return yg.reshape(b, s, d), jnp.mean(aux)
+    y, aux = _moe_tokens(params, spec, x.reshape(t_tokens(b, s), d))
+    return y.reshape(b, s, d), aux
+
+
+def t_tokens(b, s):
+    return b * s
+
+
+def _moe_tokens(params, spec: MoESpec, xt):
+    """xt: (T, d) -> (y (T, d), aux)."""
+    t, d = xt.shape
+    e, k = spec.num_experts, spec.top_k
+    capacity = max(int(t * k / e * spec.capacity_factor), 1)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # switch-style load balance: E * sum_e fraction_e * mean_prob_e
+    top1 = expert_idx[:, 0]
+    frac = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    # position-in-expert: for each of the k choices, cumulative count of
+    # earlier tokens routed to the same expert (choices processed in order so
+    # top-1 assignments win capacity over top-2).
+    y = jnp.zeros((t, d), xt.dtype)
+    buf = jnp.zeros((e, capacity, d), xt.dtype)
+    gates_kept = []
+    slots = []
+    prev_counts = jnp.zeros((e,), jnp.int32)
+    for choice in range(k):
+        onehot = jax.nn.one_hot(expert_idx[:, choice], e, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(onehot, axis=0) - onehot          # (T, E)
+        pos = jnp.take_along_axis(
+            pos_in_e, expert_idx[:, choice:choice + 1], axis=1)[:, 0]
+        pos = pos + prev_counts[expert_idx[:, choice]]
+        prev_counts = prev_counts + onehot.sum(axis=0)
+        keep = pos < capacity
+        slot = jnp.where(keep, pos, capacity)  # row `capacity` = drop bin
+        slots.append((expert_idx[:, choice], slot, keep))
+        # gates cast to the activation dtype HERE so the combine (and its
+        # cross-shard traffic) stays in bf16, not f32
+        gates_kept.append(
+            jnp.where(keep, gate_vals[:, choice], 0.0).astype(xt.dtype))
+        # scatter kept tokens into the expert buffer (pad row absorbs drops)
+        padded = jnp.zeros((e, capacity + 1, d), xt.dtype)
+        padded = padded.at[expert_idx[:, choice], slot].add(
+            xt * keep[:, None].astype(xt.dtype))
+        buf = buf + padded[:, :capacity]
+
+    # expert FFN (SwiGLU), batched over experts
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                     params["w_down"]).astype(xt.dtype)
+
+    # combine: gather each token's expert output, weight by gate
+    for (e_idx, slot, keep), gate in zip(slots, gates_kept):
+        safe_slot = jnp.minimum(slot, capacity - 1)
+        gathered = out[e_idx, safe_slot]                       # (T, d)
+        y = y + gathered * gate[:, None]
+
+    if spec.shared_expert:
+        sh = (jax.nn.silu(xt @ params["shared_gate"]) *
+              (xt @ params["shared_up"])) @ params["shared_down"]
+        y = y + sh
+
+    return y, aux

@@ -1,0 +1,375 @@
+"""State-space & recurrent blocks: Mamba (S6), mLSTM, sLSTM.
+
+These are the sub-quadratic token mixers used by the jamba (hybrid) and
+xlstm (ssm) architectures.  Each mixer exposes three entry points:
+
+  forward(params, x)              -- full-sequence training path (lax.scan)
+  init_state(params, batch)       -- zero recurrent state for decoding
+  step(params, x_t, state)        -- single-token decode
+
+The training scan carries O(B * d_inner * d_state) state and is rematerialized
+per chunk (``chunk_size``) so the stored residuals stay bounded — this is the
+TPU adaptation of Mamba's fused CUDA scan: chunk-local work lives in VMEM,
+chunk boundaries carry through HBM.  (A fully chunk-parallel associative-scan
+variant is a recorded perf-iteration candidate in EXPERIMENTS.md §Perf.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+__all__ = ["MambaSpec", "init_mamba", "mamba_forward", "mamba_init_state",
+           "mamba_step", "MLstmSpec", "init_mlstm", "mlstm_forward",
+           "mlstm_init_state", "mlstm_step", "SLstmSpec", "init_slstm",
+           "slstm_forward", "slstm_init_state", "slstm_step"]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6 selective state space)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    expand: int = 2
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int | None = None          # default ceil(d_model / 16)
+    chunk_size: int = 256               # remat granularity of the scan
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or max(self.d_model // 16, 1)
+
+
+def init_mamba(keygen: common.KeyGen, spec: MambaSpec, dtype=jnp.float32):
+    d, di, ds, r = spec.d_model, spec.d_inner, spec.d_state, spec.rank
+    # S4D-real initialization of A
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": common.dense_init(keygen(), (d, 2 * di), dtype),
+        "conv_w": common.dense_init(keygen(), (spec.d_conv, di), dtype,
+                                    scale=1.0 / math.sqrt(spec.d_conv)),
+        "conv_b": common.zeros_init((di,), dtype),
+        "x_proj": common.dense_init(keygen(), (di, r + 2 * ds), dtype),
+        "dt_proj": common.dense_init(keygen(), (r, di), dtype),
+        "dt_bias": common.zeros_init((di,), dtype),
+        "a_log": jnp.log(a_init).astype(dtype),
+        "d_skip": common.ones_init((di,), dtype),
+        "out_proj": common.dense_init(keygen(), (di, d), dtype),
+    }
+
+
+def _mamba_inputs(params, spec: MambaSpec, x, conv_state=None):
+    """Shared pre-scan computation.  x: (B, L, d).
+
+    Returns (u, z, dt, b_mat, c_mat, new_conv_state)."""
+    b, l, _ = x.shape
+    di, ds, r = spec.d_inner, spec.d_state, spec.rank
+    xz = x @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                     # (B, L, di) each
+    # depthwise causal conv over time
+    if conv_state is None:
+        pad = jnp.zeros((b, spec.d_conv - 1, di), u.dtype)
+    else:
+        pad = conv_state
+    u_padded = jnp.concatenate([pad, u], axis=1)
+    new_conv_state = u_padded[:, -(spec.d_conv - 1):] if spec.d_conv > 1 else pad
+    conv = sum(u_padded[:, i:i + l] * params["conv_w"][i][None, None]
+               for i in range(spec.d_conv))
+    u = jax.nn.silu(conv + params["conv_b"])
+    proj = u @ params["x_proj"]                          # (B, L, r + 2 ds)
+    dt_in, b_mat, c_mat = jnp.split(proj, [r, r + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"] + params["dt_bias"])
+    return u, z, dt, b_mat, c_mat, new_conv_state
+
+
+def _mamba_scan_chunk(params, u, dt, b_mat, c_mat, h0):
+    """Scan one chunk.  u/dt: (B, C, di); b/c: (B, C, ds); h0: (B, di, ds)."""
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))    # (di, ds)
+
+    def cell(h, inp):
+        u_t, dt_t, b_t, c_t = inp                        # (B,di),(B,di),(B,ds),(B,ds)
+        da = jnp.exp(dt_t[..., None] * a[None])          # (B, di, ds)
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (u.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          b_mat.transpose(1, 0, 2), c_mat.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(cell, h0, xs)
+    return h_final, ys.transpose(1, 0, 2)                # (B, C, di)
+
+
+def mamba_forward(params, spec: MambaSpec, x):
+    """Training forward.  x: (B, L, d) -> (B, L, d)."""
+    b, l, _ = x.shape
+    u, z, dt, b_mat, c_mat, _ = _mamba_inputs(params, spec, x)
+    h0 = jnp.zeros((b, spec.d_inner, spec.d_state), jnp.float32)
+
+    cs = min(spec.chunk_size, l)
+    if l % cs != 0:
+        cs = l  # fall back to one chunk for ragged lengths (smoke tests)
+    nchunks = l // cs
+
+    def chunk_body(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * cs, cs, axis=1)
+        h, y = _mamba_scan_chunk(params, sl(u).astype(jnp.float32),
+                                 sl(dt).astype(jnp.float32),
+                                 sl(b_mat).astype(jnp.float32),
+                                 sl(c_mat).astype(jnp.float32), h)
+        return h, y
+
+    chunk_body = jax.checkpoint(chunk_body)
+    _, ys = jax.lax.scan(chunk_body, h0, jnp.arange(nchunks))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, l, spec.d_inner).astype(x.dtype)
+    y = y + u * params["d_skip"]
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def mamba_init_state(spec: MambaSpec, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, spec.d_inner, spec.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, spec.d_conv - 1, spec.d_inner), dtype),
+    }
+
+
+def mamba_step(params, spec: MambaSpec, x_t, state):
+    """x_t: (B, 1, d) -> (y, new_state)."""
+    u, z, dt, b_mat, c_mat, new_conv = _mamba_inputs(
+        params, spec, x_t, conv_state=state["conv"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt_t = dt[:, 0].astype(jnp.float32)
+    u_t = u[:, 0].astype(jnp.float32)
+    da = jnp.exp(dt_t[..., None] * a[None])
+    h = da * state["h"] + (dt_t * u_t)[..., None] * b_mat[:, 0][:, None, :].astype(jnp.float32)
+    y = jnp.einsum("bds,bs->bd", h, c_mat[:, 0].astype(jnp.float32))[:, None, :]
+    y = y.astype(x_t.dtype) + u * params["d_skip"]
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"], {"h": h, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM, xLSTM paper)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLstmSpec:
+    d_model: int
+    num_heads: int
+    proj_factor: float = 2.0
+    d_conv: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.num_heads
+
+
+def init_mlstm(keygen: common.KeyGen, spec: MLstmSpec, dtype=jnp.float32):
+    d, di = spec.d_model, spec.d_inner
+    return {
+        "up_proj": common.dense_init(keygen(), (d, 2 * di), dtype),
+        "conv_w": common.dense_init(keygen(), (spec.d_conv, di), dtype),
+        "conv_b": common.zeros_init((di,), dtype),
+        "wq": common.dense_init(keygen(), (di, di), dtype),
+        "wk": common.dense_init(keygen(), (di, di), dtype),
+        "wv": common.dense_init(keygen(), (di, di), dtype),
+        "w_if": common.dense_init(keygen(), (di, 2 * spec.num_heads), dtype, scale=0.02),
+        "b_i": common.zeros_init((spec.num_heads,), dtype),
+        # forget-gate bias init positive => long memory at init
+        "b_f": (jnp.ones((spec.num_heads,)) * 3.0).astype(dtype),
+        "skip_w": common.ones_init((di,), dtype),
+        "norm_w": common.zeros_init((di,), dtype),
+        "down_proj": common.dense_init(keygen(), (di, d), dtype),
+    }
+
+
+def _mlstm_cell(q, k, v, i_tilde, f_tilde, state):
+    """One time step of the stabilized mLSTM recurrence.
+
+    q,k,v: (B, H, hd); i_tilde,f_tilde: (B, H); state: (C, n, m).
+    C: (B, H, hd, hd), n: (B, H, hd), m: (B, H).
+    """
+    c_prev, n_prev, m_prev = state
+    m_t = jnp.maximum(f_tilde + m_prev, i_tilde)
+    i_p = jnp.exp(i_tilde - m_t)
+    f_p = jnp.exp(f_tilde + m_prev - m_t)
+    c_t = f_p[..., None, None] * c_prev + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n_t = f_p[..., None] * n_prev + i_p[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_t, q)),
+                        jnp.exp(-m_t))
+    h = jnp.einsum("bhij,bhj->bhi", c_t, q) / denom[..., None]
+    return (c_t, n_t, m_t), h
+
+
+def _mlstm_qkvif(params, spec: MLstmSpec, x, conv_state=None):
+    b, l, _ = x.shape
+    di, nh, hd = spec.d_inner, spec.num_heads, spec.head_dim
+    up = x @ params["up_proj"]
+    inner, gate = jnp.split(up, 2, axis=-1)
+    if conv_state is None:
+        pad = jnp.zeros((b, spec.d_conv - 1, di), inner.dtype)
+    else:
+        pad = conv_state
+    padded = jnp.concatenate([pad, inner], axis=1)
+    new_conv = padded[:, -(spec.d_conv - 1):] if spec.d_conv > 1 else pad
+    conv = sum(padded[:, i:i + l] * params["conv_w"][i][None, None]
+               for i in range(spec.d_conv))
+    conv = jax.nn.silu(conv + params["conv_b"])
+    q = (conv @ params["wq"]).reshape(b, l, nh, hd) / math.sqrt(hd)
+    k = (conv @ params["wk"]).reshape(b, l, nh, hd)
+    v = (inner @ params["wv"]).reshape(b, l, nh, hd)
+    if_g = conv @ params["w_if"]
+    i_tilde = if_g[..., :nh] + params["b_i"]
+    f_tilde = if_g[..., nh:] + params["b_f"]
+    return inner, gate, q, k, v, i_tilde, f_tilde, new_conv
+
+
+def mlstm_forward(params, spec: MLstmSpec, x):
+    b, l, _ = x.shape
+    nh, hd = spec.num_heads, spec.head_dim
+    inner, gate, q, k, v, i_t, f_t, _ = _mlstm_qkvif(params, spec, x)
+
+    def cell(state, inp):
+        q_t, k_t, v_t, it, ft = inp
+        state, h = _mlstm_cell(q_t, k_t, v_t, it, ft, state)
+        return state, h
+
+    state0 = (jnp.zeros((b, nh, hd, hd), jnp.float32),
+              jnp.zeros((b, nh, hd), jnp.float32),
+              jnp.zeros((b, nh), jnp.float32))
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          i_t.transpose(1, 0, 2).astype(jnp.float32),
+          f_t.transpose(1, 0, 2).astype(jnp.float32))
+    _, hs = jax.lax.scan(cell, state0, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, l, spec.d_inner).astype(x.dtype)
+    h = common.rms_norm(h, params["norm_w"]) + inner * params["skip_w"]
+    h = h * jax.nn.silu(gate)
+    return h @ params["down_proj"]
+
+
+def mlstm_init_state(spec: MLstmSpec, batch: int, dtype=jnp.float32):
+    nh, hd = spec.num_heads, spec.head_dim
+    return {
+        "c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.zeros((batch, nh), jnp.float32),
+        "conv": jnp.zeros((batch, spec.d_conv - 1, spec.d_inner), dtype),
+    }
+
+
+def mlstm_step(params, spec: MLstmSpec, x_t, state):
+    inner, gate, q, k, v, i_t, f_t, new_conv = _mlstm_qkvif(
+        params, spec, x_t, conv_state=state["conv"])
+    st = (state["c"], state["n"], state["m"])
+    st, h = _mlstm_cell(q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+                        v[:, 0].astype(jnp.float32), i_t[:, 0].astype(jnp.float32),
+                        f_t[:, 0].astype(jnp.float32), st)
+    h = h.reshape(x_t.shape[0], 1, spec.d_inner).astype(x_t.dtype)
+    h = common.rms_norm(h, params["norm_w"]) + inner * params["skip_w"]
+    h = h * jax.nn.silu(gate)
+    return h @ params["down_proj"], {"c": st[0], "n": st[1], "m": st[2],
+                                     "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with exponential gating + head-wise state mixing)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SLstmSpec:
+    d_model: int
+    num_heads: int
+    ffn_factor: float = 4.0 / 3.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+def init_slstm(keygen: common.KeyGen, spec: SLstmSpec, dtype=jnp.float32):
+    d, nh, hd = spec.d_model, spec.num_heads, spec.head_dim
+    dff = int(spec.ffn_factor * d)
+    return {
+        "w_gates": common.dense_init(keygen(), (d, 4 * d), dtype),
+        # block-diagonal recurrent mixing: per-head (hd, hd) for each gate
+        "r_gates": common.dense_init(keygen(), (4, nh, hd, hd), dtype,
+                                     scale=1.0 / math.sqrt(hd)),
+        "b_gates": common.zeros_init((4 * d,), dtype),
+        "norm_w": common.zeros_init((d,), dtype),
+        "ffn_up": common.dense_init(keygen(), (d, 2 * dff), dtype),
+        "ffn_down": common.dense_init(keygen(), (dff, d), dtype),
+    }
+
+
+def _slstm_cell(params, spec: SLstmSpec, gates_x, state):
+    """gates_x: (B, 4d) input contribution; state: (c, n, h, m) each (B, d)."""
+    nh, hd = spec.num_heads, spec.head_dim
+    c, n, h, m = state
+    hh = h.reshape(-1, nh, hd)
+    rec = jnp.stack([
+        jnp.einsum("bhi,hij->bhj", hh,
+                   params["r_gates"][g].astype(jnp.float32)).reshape(h.shape)
+        for g in range(4)], axis=-2)                     # (B, 4, d)
+    gx = gates_x.reshape(-1, 4, h.shape[-1]) + rec + \
+        params["b_gates"].astype(jnp.float32).reshape(4, -1)
+    i_t, f_t, z_t, o_t = gx[:, 0], gx[:, 1], gx[:, 2], gx[:, 3]
+    m_t = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_t)
+    f_p = jnp.exp(f_t + m - m_t)
+    c_t = f_p * c + i_p * jnp.tanh(z_t)
+    n_t = f_p * n + i_p
+    h_t = jax.nn.sigmoid(o_t) * c_t / jnp.maximum(n_t, 1.0)
+    return (c_t, n_t, h_t, m_t), h_t
+
+
+def slstm_forward(params, spec: SLstmSpec, x):
+    b, l, d = x.shape
+    gates_x = (x @ params["w_gates"]).astype(jnp.float32)
+
+    def cell(state, gx):
+        return _slstm_cell(params, spec, gx, state)
+
+    z = jnp.zeros((b, d), jnp.float32)
+    state0 = (z, z, z, z)
+    _, hs = jax.lax.scan(cell, state0, gates_x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = common.rms_norm(h, params["norm_w"])
+    up = h @ params["ffn_up"]
+    a, g = jnp.split(up, 2, axis=-1)
+    return (jax.nn.gelu(a) * g) @ params["ffn_down"]
+
+
+def slstm_init_state(spec: SLstmSpec, batch: int, dtype=jnp.float32):
+    z = jnp.zeros((batch, spec.d_model), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_step(params, spec: SLstmSpec, x_t, state):
+    gx = (x_t[:, 0] @ params["w_gates"]).astype(jnp.float32)
+    st = (state["c"], state["n"], state["h"], state["m"])
+    st, h = _slstm_cell(params, spec, gx, st)
+    h = h[:, None, :].astype(x_t.dtype)
+    h = common.rms_norm(h, params["norm_w"])
+    up = h @ params["ffn_up"]
+    a, g = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * g) @ params["ffn_down"]
+    return out, {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}

@@ -1,0 +1,478 @@
+"""Transformer assembly: decoder-only LMs, encoder-decoder (whisper), and
+multimodal early fusion, from a ``ModelConfig`` + ``layer_plan``.
+
+Public surface (all pure functions over nested-dict params):
+
+  init_params(cfg, key)                      -> params
+  forward(cfg, params, tokens, **modality)   -> (logits, aux_loss)
+  loss_fn(cfg) -> fn(params, batch) -> scalar
+  prefill(cfg, params, tokens, **modality)   -> (last_logits, cache)
+  decode_step(cfg, params, cache, token)     -> (logits, cache)
+
+Caches hold per-layer KV ring buffers (attention), recurrent states (mamba /
+mlstm / slstm) and, for enc-dec, the precomputed cross-attention K/V.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, common, ffn as ffn_lib, moe as moe_lib, ssm
+from .api import LayerPlan, ModelConfig, layer_plan
+from .api import scan_group_size as api_scan_group
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step",
+           "init_cache", "param_count"]
+
+
+# ---------------------------------------------------------------------------
+# Norm helpers
+# ---------------------------------------------------------------------------
+
+def _init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm == "rmsnorm":
+        return {"w": common.zeros_init((cfg.d_model,), dtype)}
+    return {"w": common.ones_init((cfg.d_model,), dtype),
+            "b": common.zeros_init((cfg.d_model,), dtype)}
+
+
+def _apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rmsnorm":
+        return common.rms_norm(x, p["w"])
+    return common.layer_norm(x, p["w"], p["b"])
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, plan: LayerPlan, keygen, dtype, cross: bool):
+    p: dict[str, Any] = {"norm1": _init_norm(cfg, dtype)}
+    if plan.mixer == "attn":
+        p["attn"] = attention.init_attention(keygen, plan.attn, dtype)
+    elif plan.mixer == "mamba":
+        p["mamba"] = ssm.init_mamba(keygen, plan.mamba, dtype)
+    elif plan.mixer == "mlstm":
+        p["mlstm"] = ssm.init_mlstm(keygen, plan.mlstm, dtype)
+    elif plan.mixer == "slstm":
+        p["slstm"] = ssm.init_slstm(keygen, plan.slstm, dtype)
+    if cfg.post_norm:
+        p["post_norm1"] = _init_norm(cfg, dtype)
+    if cross:
+        p["cross_norm"] = _init_norm(cfg, dtype)
+        p["cross"] = attention.init_attention(
+            keygen, dataclasses.replace(plan.attn, cross=True, causal=False),
+            dtype)
+    if plan.ffn != "none":
+        p["norm2"] = _init_norm(cfg, dtype)
+        if plan.ffn == "moe":
+            p["moe"] = moe_lib.init_moe(keygen, plan.moe, dtype)
+        else:
+            p["ffn"] = ffn_lib.init_ffn(keygen, cfg.d_model, cfg.d_ff,
+                                        plan.ffn, dtype)
+        if cfg.post_norm:
+            p["post_norm2"] = _init_norm(cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    keygen = common.KeyGen(key)
+    dtype = _dtype(cfg)
+    plans = layer_plan(cfg)
+    is_encdec = cfg.encoder_layers > 0
+    params: dict[str, Any] = {
+        "embed": common.embed_init(keygen(), cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": _init_norm(cfg, dtype),
+        "layers": [_init_block(cfg, pl, keygen, dtype, cross=is_encdec)
+                   for pl in plans],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(
+            keygen(), (cfg.d_model, cfg.vocab_size), dtype)
+    if not cfg.use_rope:
+        params["pos_embed"] = common.dense_init(
+            keygen(), (cfg.max_position, cfg.d_model), dtype, scale=0.02)
+    if is_encdec:
+        enc_plan = LayerPlan(
+            mixer="attn",
+            attn=attention.AttnSpec(
+                d_model=cfg.d_model, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+                causal=False, use_rope=False),
+            ffn="gelu", moe=None, mamba=None, mlstm=None, slstm=None)
+        params["encoder"] = {
+            "layers": [_init_block(cfg, enc_plan, keygen, dtype, cross=False)
+                       for _ in range(cfg.encoder_layers)],
+            "final_norm": _init_norm(cfg, dtype),
+            "pos_embed": common.dense_init(
+                keygen(), (max(cfg.encoder_seq, 1), cfg.d_model), dtype,
+                scale=0.02),
+        }
+    if cfg.frontend == "vision_stub":
+        # projector is part of the backbone contract (frontend itself is a stub)
+        params["vision_proj"] = common.dense_init(
+            keygen(), (cfg.d_model, cfg.d_model), dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(l.size) for l in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _block_forward(cfg: ModelConfig, plan: LayerPlan, p, x, enc_out=None):
+    """Full-sequence block forward.  Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    res_scale = cfg.residual_scale or 1.0
+    h = _apply_norm(cfg, p["norm1"], x)
+    if plan.mixer == "attn":
+        mix = attention.attention_forward(p["attn"], plan.attn, h)
+    elif plan.mixer == "mamba":
+        mix = ssm.mamba_forward(p["mamba"], plan.mamba, h)
+    elif plan.mixer == "mlstm":
+        mix = ssm.mlstm_forward(p["mlstm"], plan.mlstm, h)
+    else:
+        mix = ssm.slstm_forward(p["slstm"], plan.slstm, h)
+    if cfg.post_norm:
+        mix = _apply_norm(cfg, p["post_norm1"], mix)
+    x = x + res_scale * mix
+    if enc_out is not None:
+        h = _apply_norm(cfg, p["cross_norm"], x)
+        cross_spec = dataclasses.replace(plan.attn, cross=True, causal=False)
+        cc = attention.cross_attention_cache(p["cross"], cross_spec, enc_out)
+        x = x + attention.cross_attention_apply(p["cross"], cross_spec, h, cc)
+    if plan.ffn != "none":
+        h = _apply_norm(cfg, p["norm2"], x)
+        if plan.ffn == "moe":
+            y, aux = moe_lib.moe_forward(p["moe"], plan.moe, h)
+        else:
+            y = ffn_lib.ffn_forward(p["ffn"], h, plan.ffn)
+        if cfg.post_norm:
+            y = _apply_norm(cfg, p["post_norm2"], y)
+        x = x + res_scale * y
+    return x, aux
+
+
+def _scan_layers(cfg: ModelConfig, plans, layer_params, x, group: int):
+    """Scan over repeated layer groups: compiles ONE group body instead of
+    ``num_layers`` unrolled blocks (the pattern periods all divide ``group``,
+    so every group is structurally identical).  Rematerialized per group."""
+    n_rep = cfg.num_layers // group
+    plans_g = plans[:group]
+    stacked = tuple(
+        jax.tree.map(lambda *xs: jnp.stack(xs),
+                     *[layer_params[r * group + j] for r in range(n_rep)])
+        for j in range(group))
+
+    def body(carry, group_params):
+        h, aux = carry
+        for j in range(group):
+            h, a = _block_forward(cfg, plans_g[j], group_params[j], h)
+            aux = aux + a
+        return (h, aux), None
+
+    if cfg.remat_policy == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        body = jax.checkpoint(body)
+    (x, aux_total), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux_total
+
+
+def _encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    enc = params["encoder"]
+    x = frames + enc["pos_embed"][None, :frames.shape[1]]
+    enc_plan = LayerPlan(
+        mixer="attn",
+        attn=attention.AttnSpec(
+            d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+            causal=False, use_rope=False),
+        ffn="gelu", moe=None, mamba=None, mlstm=None, slstm=None)
+    for p in enc["layers"]:
+        x, _ = _block_forward(cfg, enc_plan, p, x)
+    return _apply_norm(cfg, enc["final_norm"], x)
+
+
+def _embed_inputs(cfg: ModelConfig, params, tokens, image_embeds=None,
+                  position_offset: int = 0):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    prefix = 0
+    if image_embeds is not None:
+        img = image_embeds.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([img, x], axis=1)
+        prefix = image_embeds.shape[1]
+    if not cfg.use_rope:
+        pos = jnp.arange(x.shape[1]) + position_offset
+        x = x + params["pos_embed"][pos][None]
+    return x, prefix
+
+
+def _lm_logits(cfg: ModelConfig, params, x):
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    logits = logits.astype(jnp.dtype(cfg.logit_dtype))
+    return common.softcap(logits, cfg.final_softcap)
+
+
+def forward(cfg: ModelConfig, params, tokens, image_embeds=None,
+            audio_frames=None):
+    """Training forward.  tokens: (B, L) int32 -> (logits (B, L', V), aux)."""
+    plans = layer_plan(cfg)
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        if audio_frames is None:
+            raise ValueError(f"{cfg.name} requires audio_frames")
+        enc_out = _encode(cfg, params, audio_frames)
+    x, prefix = _embed_inputs(cfg, params, tokens, image_embeds)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    group = api_scan_group(cfg) if cfg.scan_layers else None
+    if group is not None and enc_out is None:
+        x, aux_total = _scan_layers(cfg, plans, params["layers"], x, group)
+    else:
+        def run_block(x, p, plan):
+            return _block_forward(cfg, plan, p, x, enc_out=enc_out)
+
+        block = jax.checkpoint(run_block, static_argnums=(2,)) \
+            if cfg.num_layers > 2 else run_block
+        for p, plan in zip(params["layers"], plans):
+            x, aux = block(x, p, plan)
+            aux_total = aux_total + aux
+    logits = _lm_logits(cfg, params, x)
+    if prefix:
+        logits = logits[:, prefix:]
+    return logits, aux_total
+
+
+def loss_fn(cfg: ModelConfig):
+    """Cross-entropy next-token loss closure.  batch keys: tokens, labels
+    (+ image_embeds / audio_frames for stub modalities)."""
+
+    def fn(params, batch):
+        logits, aux = forward(
+            cfg, params, batch["tokens"],
+            image_embeds=batch.get("image_embeds"),
+            audio_frames=batch.get("audio_frames"))
+        labels = batch["labels"]
+        # GSPMD-friendly CE: logsumexp + one-hot contraction keeps the vocab
+        # dimension sharded end-to-end (take_along_axis over a sharded axis
+        # would force an all-gather of the full logits).
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+        correct = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        loss = jnp.mean(logz - correct)
+        if cfg.moe_period > 0:
+            loss = loss + cfg.moe_aux_weight * aux / max(cfg.num_layers, 1)
+        return loss
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or _dtype(cfg)
+    plans = layer_plan(cfg)
+    layers = []
+    for plan in plans:
+        if plan.mixer == "attn":
+            entry = {"kv": attention.init_kv_cache(
+                batch, max_len, plan.attn, dtype)}
+        elif plan.mixer == "mamba":
+            entry = {"mamba": ssm.mamba_init_state(plan.mamba, batch, dtype)}
+        elif plan.mixer == "mlstm":
+            entry = {"mlstm": ssm.mlstm_init_state(plan.mlstm, batch, dtype)}
+        else:
+            entry = {"slstm": ssm.slstm_init_state(plan.slstm, batch, dtype)}
+        if cfg.encoder_layers > 0 and plan.mixer == "attn":
+            shp = (batch, max(cfg.encoder_seq, 1), cfg.num_kv_heads, cfg.hd)
+            entry["cross"] = {"k": jnp.zeros(shp, dtype),
+                              "v": jnp.zeros(shp, dtype)}
+        layers.append(entry)
+    # per-slot positions (continuous batching: rows advance independently)
+    return {"pos": jnp.zeros((batch,), jnp.int32), "layers": layers}
+
+
+def prefill(cfg: ModelConfig, params, tokens, image_embeds=None,
+            audio_frames=None, max_len: int | None = None):
+    """Run the prompt, returning last-position logits + a ready cache."""
+    plans = layer_plan(cfg)
+    b, l = tokens.shape
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = _encode(cfg, params, audio_frames)
+    x, prefix = _embed_inputs(cfg, params, tokens, image_embeds)
+    total = x.shape[1]
+    # max_len counts *total* cache positions (image prefix included)
+    max_len = max(max_len or (total + 64), total)
+    cache_layers = []
+    aux = jnp.zeros((), jnp.float32)
+    for p, plan in zip(params["layers"], plans):
+        h = _apply_norm(cfg, p["norm1"], x)
+        entry: dict[str, Any] = {}
+        if plan.mixer == "attn":
+            mix, kv = attention.attention_prefill(p["attn"], plan.attn, h,
+                                                  max_len=max_len)
+            entry["kv"] = kv
+        elif plan.mixer == "mamba":
+            mix, st = _mamba_prefill(p["mamba"], plan.mamba, h)
+            entry["mamba"] = st
+        elif plan.mixer == "mlstm":
+            mix, st = _mlstm_prefill(p["mlstm"], plan.mlstm, h)
+            entry["mlstm"] = st
+        else:
+            mix, st = _slstm_prefill(p["slstm"], plan.slstm, h)
+            entry["slstm"] = st
+        if cfg.post_norm:
+            mix = _apply_norm(cfg, p["post_norm1"], mix)
+        x = x + (cfg.residual_scale or 1.0) * mix
+        if enc_out is not None:
+            hh = _apply_norm(cfg, p["cross_norm"], x)
+            cross_spec = dataclasses.replace(plan.attn, cross=True, causal=False)
+            cc = attention.cross_attention_cache(p["cross"], cross_spec, enc_out)
+            entry["cross"] = cc
+            x = x + attention.cross_attention_apply(
+                p["cross"], cross_spec, hh, cc)
+        if plan.ffn != "none":
+            hh = _apply_norm(cfg, p["norm2"], x)
+            if plan.ffn == "moe":
+                y, a = moe_lib.moe_forward(p["moe"], plan.moe, hh)
+                aux = aux + a
+            else:
+                y = ffn_lib.ffn_forward(p["ffn"], hh, plan.ffn)
+            if cfg.post_norm:
+                y = _apply_norm(cfg, p["post_norm2"], y)
+            x = x + (cfg.residual_scale or 1.0) * y
+        cache_layers.append(entry)
+    logits = _lm_logits(cfg, params, x[:, -1:])
+    return logits[:, 0], {"pos": jnp.full((b,), total, jnp.int32),
+                          "layers": cache_layers}
+
+
+def _mamba_prefill(p, spec, x):
+    # run the training forward but capture the final recurrent + conv state
+    b, l, _ = x.shape
+    u, z, dt, b_mat, c_mat, conv_state = ssm._mamba_inputs(p, spec, x)
+    h0 = jnp.zeros((b, spec.d_inner, spec.d_state), jnp.float32)
+    h_final, ys = ssm._mamba_scan_chunk(
+        p, u.astype(jnp.float32), dt.astype(jnp.float32),
+        b_mat.astype(jnp.float32), c_mat.astype(jnp.float32), h0)
+    y = ys.astype(x.dtype) + u * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], {"h": h_final, "conv": conv_state}
+
+
+def _mlstm_prefill(p, spec, x):
+    b, l, _ = x.shape
+    nh, hd = spec.num_heads, spec.head_dim
+    inner, gate, q, k, v, i_t, f_t, conv_state = ssm._mlstm_qkvif(p, spec, x)
+
+    def cell(state, inp):
+        q_t, k_t, v_t, it, ft = inp
+        state, h = ssm._mlstm_cell(q_t, k_t, v_t, it, ft, state)
+        return state, h
+
+    state0 = (jnp.zeros((b, nh, hd, hd), jnp.float32),
+              jnp.zeros((b, nh, hd), jnp.float32),
+              jnp.zeros((b, nh), jnp.float32))
+    xs = tuple(t.transpose(1, 0, *range(2, t.ndim)).astype(jnp.float32)
+               for t in (q, k, v, i_t, f_t))
+    st, hs = jax.lax.scan(cell, state0, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, l, spec.d_inner).astype(x.dtype)
+    h = common.rms_norm(h, p["norm_w"]) + inner * p["skip_w"]
+    h = h * jax.nn.silu(gate)
+    return h @ p["down_proj"], {"c": st[0], "n": st[1], "m": st[2],
+                                "conv": conv_state}
+
+
+def _slstm_prefill(p, spec, x):
+    b, l, d = x.shape
+    gates_x = (x @ p["w_gates"]).astype(jnp.float32)
+
+    def cell(state, gx):
+        return ssm._slstm_cell(p, spec, gx, state)
+
+    z = jnp.zeros((b, d), jnp.float32)
+    st, hs = jax.lax.scan(cell, (z, z, z, z), gates_x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = common.rms_norm(h, p["norm_w"])
+    up = h @ p["ffn_up"]
+    a, g = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * g) @ p["ffn_down"]
+    return out, {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+
+
+def decode_step(cfg: ModelConfig, params, cache, token):
+    """One-token decode.  token: (B,) int32 -> (logits (B, V), new cache).
+
+    cache["pos"] is a (B,) vector — rows may sit at different positions
+    (continuous batching)."""
+    plans = layer_plan(cfg)
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32),
+                           (token.shape[0],))
+    x = params["embed"][token][:, None, :]
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    if not cfg.use_rope:
+        x = x + params["pos_embed"][jnp.minimum(
+            pos, params["pos_embed"].shape[0] - 1)][:, None, :]
+    new_layers = []
+    for p, plan, entry in zip(params["layers"], plans, cache["layers"]):
+        h = _apply_norm(cfg, p["norm1"], x)
+        new_entry: dict[str, Any] = dict(entry)
+        if plan.mixer == "attn":
+            mix, kv = attention.attention_decode(
+                p["attn"], plan.attn, h, entry["kv"], pos)
+            new_entry["kv"] = kv
+        elif plan.mixer == "mamba":
+            mix, st = ssm.mamba_step(p["mamba"], plan.mamba, h, entry["mamba"])
+            new_entry["mamba"] = st
+        elif plan.mixer == "mlstm":
+            mix, st = ssm.mlstm_step(p["mlstm"], plan.mlstm, h, entry["mlstm"])
+            new_entry["mlstm"] = st
+        else:
+            mix, st = ssm.slstm_step(p["slstm"], plan.slstm, h, entry["slstm"])
+            new_entry["slstm"] = st
+        if cfg.post_norm:
+            mix = _apply_norm(cfg, p["post_norm1"], mix)
+        x = x + (cfg.residual_scale or 1.0) * mix
+        if "cross" in entry:
+            hh = _apply_norm(cfg, p["cross_norm"], x)
+            cross_spec = dataclasses.replace(plan.attn, cross=True, causal=False)
+            x = x + attention.cross_attention_apply(
+                p["cross"], cross_spec, hh, entry["cross"])
+        if plan.ffn != "none":
+            hh = _apply_norm(cfg, p["norm2"], x)
+            if plan.ffn == "moe":
+                y, _ = moe_lib.moe_forward(p["moe"], plan.moe, hh)
+            else:
+                y = ffn_lib.ffn_forward(p["ffn"], hh, plan.ffn)
+            if cfg.post_norm:
+                y = _apply_norm(cfg, p["post_norm2"], y)
+            x = x + (cfg.residual_scale or 1.0) * y
+        new_layers.append(new_entry)
+    logits = _lm_logits(cfg, params, x)[:, 0]
+    return logits, {"pos": pos + 1, "layers": new_layers}

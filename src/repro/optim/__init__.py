@@ -1,0 +1,82 @@
+"""Minimal functional optimizers (no optax offline) + LR schedule wiring.
+
+These provide the conventional centralized baselines (AdamW / momentum-SGD
+all-reduce training) that DPSVRG is compared against at LM scale, and the
+inner-step optimizer states the trainer composes with the decentralized
+update rule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adamw", "clip_by_global_norm", "global_norm"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, jax.Array], tuple]  # (grads, state, lr) -> (updates, state)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda l: l * scale.astype(l.dtype), tree), norm
+
+
+def sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, lr):
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        return jax.tree.map(lambda m: -lr * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    class AdamState(NamedTuple):
+        mu: Any
+        nu: Any
+        count: jax.Array
+
+    def init(params):
+        return AdamState(mu=jax.tree.map(jnp.zeros_like, params),
+                         nu=jax.tree.map(jnp.zeros_like, params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, lr, params=None):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                step = step - lr * weight_decay * p
+            return step
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init, update)

@@ -1,0 +1,3 @@
+from . import scheduler
+
+__all__ = ["scheduler"]

@@ -1,0 +1,141 @@
+"""Continuous-batching serving scheduler.
+
+Production serving never waits for a whole batch to finish: finished
+sequences retire and new requests are admitted into their slots while the
+others keep decoding.  This works because the decode path carries a
+PER-SLOT position vector (``cache["pos"]: (B,)``) — each row of the shared
+KV/recurrent cache advances independently.
+
+Flow:
+  submit(Request)  -> queued
+  step():
+    1. admit queued requests into free slots (single-row prefill, row
+       spliced into the shared cache with ``cache_insert``),
+    2. one batched decode step for ALL slots (idle slots decode garbage
+       that is ignored and overwritten on admission),
+    3. retire slots that hit max_new_tokens or EOS.
+  run_until_done() -> {uid: np.ndarray(generated tokens)}
+
+Greedy decoding by default; plug a ``sampler(logits, rng) -> token`` for
+temperature/top-k sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.api import ModelConfig
+
+__all__ = ["Request", "ContinuousBatcher", "cache_insert"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray                 # (L,) prompt
+    max_new_tokens: int = 16
+    image_embeds: np.ndarray | None = None
+    audio_frames: np.ndarray | None = None
+
+
+def cache_insert(slot_cache, row_cache, slot: int):
+    """Splice a batch-1 cache into row ``slot`` of the shared cache."""
+
+    def ins(dst, src):
+        return dst.at[slot].set(src[0].astype(dst.dtype))
+
+    return jax.tree.map(ins, slot_cache, row_cache)
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params, max_slots: int,
+                 max_len: int, eos_id: int | None = None,
+                 sampler: Callable | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.sampler = sampler
+        self.cache = transformer.init_cache(cfg, max_slots, max_len)
+        self.queue: deque[Request] = deque()
+        self.slot_req: list[Request | None] = [None] * max_slots
+        self.slot_generated: list[list[int]] = [[] for _ in range(max_slots)]
+        self.next_token = np.zeros(max_slots, np.int32)
+        self.outputs: dict[int, np.ndarray] = {}
+        self._decode = jax.jit(
+            lambda p, c, t: transformer.decode_step(cfg, p, c, t))
+        self._insert = jax.jit(cache_insert, static_argnums=(2,))
+
+    # -- client API ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    def run_until_done(self, max_steps: int = 10000) -> dict:
+        steps = 0
+        while self.busy and steps < max_steps:
+            self.step()
+            steps += 1
+        return dict(self.outputs)
+
+    # -- engine -------------------------------------------------------------
+
+    def _admit(self):
+        for slot in range(self.max_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            kw = {}
+            if req.image_embeds is not None:
+                kw["image_embeds"] = jnp.asarray(req.image_embeds)[None]
+            if req.audio_frames is not None:
+                kw["audio_frames"] = jnp.asarray(req.audio_frames)[None]
+            logits, row_cache = transformer.prefill(
+                self.cfg, self.params, jnp.asarray(req.tokens)[None],
+                max_len=self.max_len, **kw)
+            self.cache = self._insert(self.cache, row_cache, slot)
+            self.slot_req[slot] = req
+            self.slot_generated[slot] = []
+            self.next_token[slot] = int(self._pick(logits)[0])
+
+    def _pick(self, logits):
+        if self.sampler is not None:
+            return np.asarray(self.sampler(logits))
+        return np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+
+    def step(self):
+        self._admit()
+        if not any(r is not None for r in self.slot_req):
+            return
+        # record the tokens being fed (they are this step's emissions)
+        for slot, req in enumerate(self.slot_req):
+            if req is not None:
+                self.slot_generated[slot].append(int(self.next_token[slot]))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.next_token))
+        picked = self._pick(logits)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            done = len(self.slot_generated[slot]) >= req.max_new_tokens
+            if self.eos_id is not None and \
+                    self.slot_generated[slot][-1] == self.eos_id:
+                done = True
+            if done:
+                self.outputs[req.uid] = np.asarray(self.slot_generated[slot],
+                                                   np.int32)
+                self.slot_req[slot] = None
+            else:
+                self.next_token[slot] = int(picked[slot])

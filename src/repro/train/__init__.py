@@ -1,0 +1,3 @@
+from . import sharding, steps, trainer
+
+__all__ = ["sharding", "steps", "trainer"]

@@ -1,0 +1,233 @@
+"""Parameter / batch / cache PartitionSpec derivation.
+
+``MeshPlan`` declares how a mesh's axes are used:
+
+  node_axes  — axes whose product is the DPSVRG node count m (the stacked
+               leading parameter axis is laid out over them),
+  model_axis — tensor-parallel axis for weight matrices / heads / experts,
+  fsdp_axes  — axes that additionally shard large weight dims (classic FSDP;
+               used when ``data`` is *not* a node axis, i.e. the nodes-=-pods
+               production mapping).
+
+Specs are derived by name+shape rules over the parameter tree, so any
+architecture in the zoo (attention, MoE experts, Mamba, xLSTM, enc-dec)
+shards without per-model annotations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["MeshPlan", "param_specs", "batch_spec", "cache_specs",
+           "stacked_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    node_axes: tuple = ("data",)
+    model_axis: str = "model"
+    fsdp_axes: tuple = ()
+    # leaves smaller than this stay replicated across fsdp axes
+    fsdp_min_size: int = 1 << 16
+
+
+# weight-name -> which dim carries the "parallel" (model-axis) dimension,
+# counted over the *unstacked* leaf.  3-D expert weights shard dim0 = E.
+_DIM1_MODEL = {
+    "wq", "wk", "wv", "w_gate", "w_up", "in_proj", "up_proj", "dt_proj",
+    "ffn_up", "w_gates", "shared_gate", "shared_up", "lm_head",
+}
+_DIM0_MODEL = {
+    "wo", "w_down", "out_proj", "down_proj", "x_proj", "ffn_down",
+    "shared_down", "embed", "a_log",
+}
+_LAST_DIM_MODEL = {"conv_w"}           # (width, d_inner)
+_REPLICATED = {
+    "router", "b_gates", "r_gates", "w_if", "b_i", "b_f", "norm_w", "skip_w",
+    "conv_b", "dt_bias", "d_skip", "w", "b", "b_up", "b_down", "q_norm",
+    "k_norm", "pos_embed", "vision_proj",
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _under_moe(path) -> bool:
+    return any(isinstance(e, jax.tree_util.DictKey) and e.key == "moe"
+               for e in path)
+
+
+def _axes_size(axis_sizes, axes) -> int:
+    if axis_sizes is None:
+        return 1
+    if not isinstance(axes, tuple):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= int(axis_sizes.get(a, 1))
+    return n
+
+
+def _divides(axis_sizes, axes, dim_size: int) -> bool:
+    """True when sharding `dim_size` over `axes` is exact (explicit
+    in_shardings given to jit must divide, unlike propagated ones)."""
+    if axis_sizes is None:
+        return True
+    return dim_size % _axes_size(axis_sizes, axes) == 0
+
+
+def _base_spec(path, leaf, plan: MeshPlan, axis_sizes=None,
+               attn_dim0: bool = False) -> list:
+    """Partition tuple for an *unstacked* leaf (no node axes).
+
+    Preference order per rule with divisibility-aware fallback to the other
+    dim (vocab sizes like 51865/122753 and xLSTM's 4/3 ratios are not
+    divisible by 16 — the alternate dim usually is).
+
+    ``attn_dim0`` (decode plan): shard q/k/v projections over d_model (the
+    contraction dim) instead of heads, and wo over its OUTPUT dim.  With a
+    sequence-sharded KV cache (GQA kv-heads < model axis), head-sharded
+    attention forces GSPMD to all-gather the whole cache per step; dim0
+    sharding costs only a tiny psum of the (B, 1, H*hd) projections —
+    flash-decoding-style partial attention over the sharded sequence."""
+    name = _leaf_name(path)
+    nd = leaf.ndim
+    spec: list = [None] * nd
+    ma = plan.model_axis
+
+    def try_dims(*dims):
+        for d in dims:
+            if d < nd and _divides(axis_sizes, ma, leaf.shape[d]):
+                spec[d] = ma
+                return
+
+    if nd == 0 or name in _REPLICATED:
+        pass
+    elif _under_moe(path) and nd == 3:
+        try_dims(0, 2, 1)                  # experts, then ff, then d
+    elif attn_dim0 and name in ("wq", "wk", "wv") and nd >= 2:
+        try_dims(0, 1)
+    elif attn_dim0 and name == "wo" and nd >= 2:
+        try_dims(1, 0)
+    elif name in _DIM1_MODEL and nd >= 2:
+        try_dims(1, 0)
+    elif name in _DIM0_MODEL and nd >= 2:
+        try_dims(0, 1)
+    elif name in _LAST_DIM_MODEL and nd >= 2:
+        try_dims(nd - 1)
+    elif name in _DIM0_MODEL and nd == 1:
+        try_dims(0)
+    # FSDP: shard the largest still-unassigned divisible dim of big leaves
+    if plan.fsdp_axes and leaf.size >= plan.fsdp_min_size and nd >= 2:
+        fa = plan.fsdp_axes if len(plan.fsdp_axes) > 1 else plan.fsdp_axes[0]
+        free = sorted((i for i in range(nd) if spec[i] is None),
+                      key=lambda j: -leaf.shape[j])
+        for i in free:
+            if _divides(axis_sizes, fa, leaf.shape[i]):
+                spec[i] = fa
+                break
+    return spec
+
+
+def param_specs(params, plan: MeshPlan, stacked: bool = False,
+                axis_sizes=None, attn_dim0: bool = False):
+    """PartitionSpec tree for params.  ``stacked=True`` prefixes the node
+    axes over the leading stacked dimension(s).  ``axis_sizes`` (mesh axis ->
+    size) enables divisibility checks for explicit in_shardings."""
+    prefix = []
+    if stacked:
+        prefix = [plan.node_axes if len(plan.node_axes) > 1
+                  else plan.node_axes[0]]
+
+    def spec(path, leaf):
+        base = _base_spec(path, _Unstacked(leaf, len(prefix)), plan,
+                          axis_sizes, attn_dim0=attn_dim0)
+        return P(*(prefix + base))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+class _Unstacked:
+    """Shape view of a leaf with the stacked node dims stripped."""
+
+    def __init__(self, leaf, strip: int):
+        self.shape = leaf.shape[strip:]
+        self.ndim = len(self.shape)
+        self.size = 1
+        for s in self.shape:
+            self.size *= s
+
+
+def batch_spec(plan: MeshPlan, ndim: int, stacked: bool = True,
+               shape=None, axis_sizes=None):
+    """Batch leaves: (m, per_node_batch, ...) -> P(node_axes, fsdp_axes, ...).
+
+    The per-node batch dim is sharded over the fsdp axes (within-node data
+    parallelism); remaining dims replicated.  Dims that do not divide the
+    axis size stay replicated (when ``shape``/``axis_sizes`` are given).
+    """
+    spec: list = [None] * ndim
+    i = 0
+    na = plan.node_axes if len(plan.node_axes) > 1 else plan.node_axes[0]
+    if stacked:
+        if shape is None or _divides(axis_sizes, na, shape[0]):
+            spec[0] = na
+        i = 1
+    if plan.fsdp_axes and ndim > i:
+        fa = plan.fsdp_axes if len(plan.fsdp_axes) > 1 else plan.fsdp_axes[0]
+        if shape is None or _divides(axis_sizes, fa, shape[i]):
+            spec[i] = fa
+    return P(*spec)
+
+
+def stacked_specs(tree, plan: MeshPlan):
+    """Specs for optimizer/SVRG state with the same layout as stacked params."""
+    return param_specs(tree, plan, stacked=True)
+
+
+def cache_specs(cache, plan: MeshPlan, batch_axis: str = "data",
+                axis_sizes=None):
+    """Serving-cache specs: batch dim over ``batch_axis`` (when divisible —
+    long_500k has batch 1 and replicates it); the model axis goes on KV
+    heads / recurrent-state dims with divisibility fallbacks (GQA kv=8 on a
+    model=16 axis falls back to sequence sharding — flash-decoding style —
+    or head_dim)."""
+    ma = plan.model_axis
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        if nd == 0 or name == "pos":
+            return P()
+        s: list = [None] * nd
+
+        def try_dims(*dims):
+            for d in dims:
+                if d < nd and s[d] is None and \
+                        _divides(axis_sizes, ma, leaf.shape[d]):
+                    s[d] = ma
+                    return
+
+        if _divides(axis_sizes, batch_axis, leaf.shape[0]):
+            s[0] = batch_axis
+        if name in ("k", "v") and nd == 4:
+            try_dims(2, 1, 3)               # kv heads, else seq, else hd
+        elif name == "h" and nd == 3:
+            try_dims(1)                     # mamba d_inner
+        elif name == "conv" and nd == 3:
+            try_dims(2)
+        elif name == "c" and nd == 4:
+            try_dims(1, 2)                  # mlstm heads, else hd
+        elif name == "n" and nd == 3:
+            try_dims(1, 2)
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

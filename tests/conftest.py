@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Allow running `pytest tests/` without PYTHONPATH=src (the documented
+# invocation sets it; this is a fallback).  Deliberately NO XLA_FLAGS here:
+# smoke tests and benches must see the single real device — only
+# repro.launch.dryrun forces the 512-device host platform.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -1,0 +1,83 @@
+"""Data pipeline + checkpointing tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.data import loader, synthetic
+
+
+def test_partition_shapes_and_coverage():
+    ds = synthetic.make_classification(n=103, d=5, seed=0)
+    data = synthetic.partition_per_node(ds, m=4)
+    assert data["features"].shape == (4, 25, 5)
+    assert data["labels"].shape == (4, 25)
+
+
+def test_partition_heterogeneity():
+    ds = synthetic.make_classification(n=400, d=5, seed=1)
+    iid = synthetic.partition_per_node(ds, 4, heterogeneity=0.0, seed=0)
+    skew = synthetic.partition_per_node(ds, 4, heterogeneity=1.0, seed=0)
+    var_iid = np.var([s.mean() for s in iid["labels"]])
+    var_skew = np.var([s.mean() for s in skew["labels"]])
+    assert var_skew > 5 * var_iid
+
+
+def test_node_batcher_determinism():
+    data = {"x": np.arange(4 * 10 * 2).reshape(4, 10, 2).astype(np.float32)}
+    b1 = loader.NodeBatcher(data, batch_size=3, seed=7).sample()
+    b2 = loader.NodeBatcher(data, batch_size=3, seed=7).sample()
+    np.testing.assert_array_equal(b1["x"], b2["x"])
+    assert b1["x"].shape == (4, 3, 2)
+
+
+def test_lm_loader_shards_disjoint():
+    toks = np.arange(4000, dtype=np.int32)
+    ld = loader.LMLoader(toks, num_nodes=4, per_node_batch=2, seq_len=16,
+                         seed=0)
+    t, l = ld.sample()
+    assert t.shape == (4, 2, 16) and l.shape == (4, 2, 16)
+    np.testing.assert_array_equal(t[:, :, 1:], l[:, :, :-1])  # next-token
+    # node i draws only from its contiguous shard
+    for i in range(4):
+        assert t[i].min() >= i * 1000 and t[i].max() < (i + 1) * 1000
+
+
+def test_token_stream_has_structure():
+    ts = synthetic.make_token_stream(20000, 64, seed=0)
+    assert ts.tokens.min() >= 0 and ts.tokens.max() < 64
+    # bigram structure => unigram entropy > conditional entropy proxy:
+    # repeated successor pairs appear far above chance
+    pairs = set(zip(ts.tokens[:-1].tolist(), ts.tokens[1:].tolist()))
+    assert len(pairs) < 0.8 * min(len(ts.tokens) - 1, 64 * 64)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(6.0).reshape(2, 3),
+            "opt": {"mu": jnp.ones((4,), jnp.bfloat16)},
+            "layers": [{"a": jnp.zeros((2,))}, {"a": jnp.ones((2,))}]}
+    d = str(tmp_path / "ckpt")
+    ckpt.save(d, 10, tree, {"loss": 1.5})
+    ckpt.save(d, 20, tree)
+    assert ckpt.latest_step(d) == 20
+    back, step, meta = ckpt.restore(d, tree, step=10)
+    assert step == 10 and meta["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ckpt")
+    ckpt.save(d, 1, {"w": jnp.ones((3,))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(d, {"w": jnp.ones((4,))})
+
+
+def test_checkpoint_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path / "nope"), {"w": jnp.ones((1,))})

@@ -1,0 +1,119 @@
+"""Convergence behaviour tests reproducing the paper's core claims at CI
+scale: DPSVRG (constant step) converges smoothly and beats DSPG; DSPG with a
+constant step exhibits the 'inexact convergence' plateau."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dpsvrg, gossip, graphs, prox
+from repro.data import synthetic
+
+
+def logreg_loss(w, batch):
+    logits = batch["features"] @ w
+    y = batch["labels"]
+    return jnp.mean(-y * logits + jnp.log1p(jnp.exp(logits)))
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(seed=0, n=512, d=30, m=8):
+    ds = synthetic.make_classification(n=n, d=d, seed=seed)
+    data = synthetic.partition_per_node(ds, m)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    flat = {k: v.reshape(-1, *v.shape[2:]) for k, v in data.items()}
+    h = prox.l1(0.01)
+    xs, chist = dpsvrg.centralized_prox_gd(
+        logreg_loss, h, jnp.zeros(d), flat, 1.0, 3000)
+    return data, h, float(chist[-1]), d, m
+
+
+def test_dpsvrg_beats_dspg():
+    data, h, f_star, d, m = _setup()
+    sched = graphs.b_connected_ring_schedule(m, b=1)
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.5, beta=1.2, n0=4, num_outer=12)
+    _, hist = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
+                                record_every=0)
+    _, hist2 = dpsvrg.dspg_run(
+        logreg_loss, h, x0, data, sched,
+        dpsvrg.DSPGHyperParams(alpha0=0.5), num_steps=int(hist.steps[-1]))
+    gap_vr = hist.objective[-1] - f_star
+    gap_base = hist2.objective[-1] - f_star
+    assert gap_vr > -1e-4               # cannot beat the optimum
+    assert gap_vr < 0.6 * gap_base, (gap_vr, gap_base)
+
+
+def test_dpsvrg_converges_with_constant_step():
+    data, h, f_star, d, m = _setup()
+    sched = graphs.b_connected_ring_schedule(m, b=1)
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.5, beta=1.25, n0=4, num_outer=14)
+    _, hist = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
+                                record_every=0)
+    gaps = hist.objective - f_star
+    # outer-round gaps must shrink monotonically-ish and end small
+    assert gaps[-1] < 0.15 * gaps[1]
+    assert gaps[-1] < 0.05
+
+
+def test_dspg_constant_step_stalls():
+    """The paper's 'inexact convergence': constant-step DSPG plateaus in a
+    noise-floor neighborhood, while DPSVRG with the SAME constant step and a
+    comparable step budget keeps descending below it (Fig. 1 discussion)."""
+    data, h, f_star, d, m = _setup()
+    sched = graphs.b_connected_ring_schedule(m, b=1)
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    _, hist_c = dpsvrg.dspg_run(
+        logreg_loss, h, x0, data, sched,
+        dpsvrg.DSPGHyperParams(alpha0=0.5, constant_step=True),
+        num_steps=700, record_every=5, seed=5)
+    gaps = hist_c.objective - f_star
+    tail = gaps[-20:]
+    # DPSVRG, same constant step, ~same total inner steps (~700): descends
+    # below DSPG's noise floor
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.5, beta=1.25, n0=4, num_outer=16)
+    _, hist_vr = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
+                                   record_every=0, seed=5)
+    assert hist_vr.steps[-1] >= 600
+    assert hist_vr.objective[-1] - f_star < 0.6 * tail.min()
+    # and descends SMOOTHLY: constant-step DSPG's tail moves up-and-down
+    # (oscillation), DPSVRG's outer-round gaps decrease monotonically
+    vr_gaps = hist_vr.objective - f_star
+    assert np.mean(np.diff(tail) > 0) >= 0.2, "DSPG tail should oscillate"
+    assert np.all(np.diff(vr_gaps[-6:]) < 1e-4), "DPSVRG should be smooth"
+
+
+def test_dpsvrg_consensus_achieved():
+    data, h, f_star, d, m = _setup()
+    sched = graphs.b_connected_ring_schedule(m, b=3, seed=1)
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=4, num_outer=10)
+    _, hist = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
+                                record_every=0)
+    assert hist.consensus[-1] < 1e-3
+
+
+def test_rate_order_dpsvrg_faster_decay():
+    """Log-log slope check: DPSVRG's gap decays at a visibly faster order
+    than DSPG's O(1/sqrt(T)) on the same problem."""
+    data, h, f_star, d, m = _setup()
+    sched = graphs.b_connected_ring_schedule(m, b=1)
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.5, beta=1.2, n0=4, num_outer=14)
+    _, hv = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
+                              record_every=4)
+    _, hd = dpsvrg.dspg_run(logreg_loss, h, x0, data, sched,
+                            dpsvrg.DSPGHyperParams(alpha0=0.5),
+                            num_steps=int(hv.steps[-1]), record_every=20)
+
+    def slope(hist):
+        t = hist.steps[2:].astype(float)
+        g = np.maximum(hist.objective[2:] - f_star, 1e-8)
+        keep = t > 0
+        return np.polyfit(np.log(t[keep]), np.log(g[keep]), 1)[0]
+
+    assert slope(hv) < slope(hd) - 0.2, (slope(hv), slope(hd))

@@ -1,0 +1,61 @@
+"""Tests for the consensus/gossip primitives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gossip, graphs
+
+
+def test_mix_preserves_mean():
+    """Doubly-stochastic mixing keeps the node average invariant."""
+    rng = np.random.default_rng(0)
+    m = 8
+    tree = {"w": jnp.asarray(rng.normal(size=(m, 5, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(m, 7)), jnp.float32)}
+    phi = graphs.b_connected_ring_schedule(m, b=3).consensus_rounds(0, 4)
+    mixed = gossip.mix_stacked(phi, tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(mixed[k]).mean(0),
+                                   np.asarray(tree[k]).mean(0), atol=1e-5)
+
+
+def test_mix_matches_numpy():
+    rng = np.random.default_rng(1)
+    m = 6
+    x = jnp.asarray(rng.normal(size=(m, 4)), jnp.float32)
+    w = graphs.ring_matrix(m)
+    out = gossip.mix_stacked(w, {"x": x})["x"]
+    np.testing.assert_allclose(out, w @ np.asarray(x), atol=1e-6)
+
+
+def test_multi_consensus_contracts():
+    """More gossip rounds => smaller consensus distance (Lemma 1 in action)."""
+    rng = np.random.default_rng(2)
+    m = 8
+    x = jnp.asarray(rng.normal(size=(m, 16)), jnp.float32)
+    sched = graphs.b_connected_ring_schedule(m, b=1)
+    dists = []
+    for rounds in (1, 4, 16):
+        phi = sched.consensus_rounds(0, rounds)
+        mixed = gossip.mix_stacked(phi, {"x": x})["x"]
+        dists.append(graphs.consensus_distance(np.asarray(mixed)))
+    assert dists[0] > dists[1] > dists[2]
+    assert dists[2] < 0.1 * dists[0]
+
+
+def test_multi_consensus_matrix_cap():
+    sched = graphs.b_connected_ring_schedule(8, b=1)
+    unc = gossip.multi_consensus_matrix(sched, 0, 5)
+    cap = gossip.multi_consensus_matrix(sched, 0, 5, k_max=2)
+    np.testing.assert_allclose(unc, sched.consensus_rounds(0, 5))
+    np.testing.assert_allclose(cap, sched.consensus_rounds(0, 2))
+
+
+def test_stack_unstack_roundtrip():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3)}
+    st = gossip.stack_tree(tree, 4)
+    assert st["a"].shape == (4, 2, 3)
+    for i in range(4):
+        np.testing.assert_allclose(gossip.unstack_tree(st, i)["a"], tree["a"])
+    np.testing.assert_allclose(gossip.node_mean(st)["a"], tree["a"])

@@ -1,0 +1,83 @@
+"""Tests for time-varying mixing schedules (Assumptions 1-2, Lemma 1)."""
+
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import graphs
+
+
+ALL_SCHEDULES = [
+    graphs.static_schedule(graphs.ring_matrix(8), "ring8"),
+    graphs.static_schedule(graphs.fully_connected_matrix(8), "full8"),
+    graphs.b_connected_ring_schedule(8, b=3, seed=0),
+    graphs.b_connected_ring_schedule(8, b=7, seed=1),
+    graphs.random_b_connected_schedule(8, b=4, seed=2),
+    graphs.MixingSchedule(tuple(graphs.edge_matching_matrices(8)), b=2,
+                          eta=0.5, name="matching8"),
+    graphs.MixingSchedule(tuple(graphs.exponential_graph_matrices(8)), b=3,
+                          eta=0.5, name="expo8"),
+]
+
+
+@pytest.mark.parametrize("sched", ALL_SCHEDULES, ids=lambda s: s.name)
+def test_doubly_stochastic(sched):
+    """Assumption 2: every W^t doubly stochastic, entries >= eta when > 0."""
+    for t in range(sched.period):
+        w = sched.matrix(t)
+        assert graphs.is_doubly_stochastic(w), (sched.name, t)
+        nz = w[w > 1e-12]
+        assert nz.min() >= sched.eta - 1e-9
+
+
+@pytest.mark.parametrize("sched", ALL_SCHEDULES, ids=lambda s: s.name)
+def test_b_connectivity(sched):
+    """Assumption 1: the union of b consecutive edge sets is connected."""
+    m = sched.m
+    for start in range(sched.period):
+        g = nx.Graph()
+        g.add_nodes_from(range(m))
+        for t in range(start, start + sched.b):
+            w = sched.matrix(t)
+            for i in range(m):
+                for j in range(i + 1, m):
+                    if w[i, j] > 1e-12:
+                        g.add_edge(i, j)
+        assert nx.is_connected(g), (sched.name, start)
+
+
+def test_metropolis_weights_star():
+    adj = np.zeros((4, 4), bool)
+    adj[0, 1:] = adj[1:, 0] = True  # star
+    w = graphs.metropolis_weights(adj)
+    assert graphs.is_doubly_stochastic(w)
+    assert w[1, 2] == 0 and w[0, 1] > 0
+
+
+@pytest.mark.parametrize("sched", ALL_SCHEDULES, ids=lambda s: s.name)
+def test_lemma1_contraction(sched):
+    """|phi_ij(l,g) - 1/m| <= Gamma * gamma^{g-l} (Lemma 1) and Phi -> 1/m."""
+    m = sched.m
+    big_gamma, gamma = graphs.lemma1_constants(sched)
+    assert 0 < gamma < 1
+    for span in (1, 5, 20, 60):
+        phi = sched.phi(0, span)
+        dev = np.max(np.abs(phi - 1.0 / m))
+        assert dev <= big_gamma * gamma ** span + 1e-12, (sched.name, span)
+    # long-run convergence to consensus matrix
+    assert np.max(np.abs(sched.phi(0, 400) - 1.0 / m)) < 1e-3, sched.name
+
+
+def test_phi_identity_and_order():
+    sched = graphs.b_connected_ring_schedule(6, b=2, seed=3)
+    np.testing.assert_allclose(sched.consensus_rounds(0, 0), np.eye(6))
+    # phi(l, g) must equal W^g ... W^l (right-to-left application)
+    manual = sched.matrix(2) @ sched.matrix(1) @ sched.matrix(0)
+    np.testing.assert_allclose(sched.phi(0, 2), manual, atol=1e-12)
+
+
+def test_spectral_gap_ordering():
+    """Denser graphs mix faster: full > ring spectral gap."""
+    full = graphs.spectral_gap(graphs.fully_connected_matrix(8))
+    ring = graphs.spectral_gap(graphs.ring_matrix(8))
+    assert full > ring > 0

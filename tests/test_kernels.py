@@ -1,0 +1,159 @@
+"""Per-kernel shape/dtype sweeps vs. the pure-jnp oracles (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.fused_update import kernel as fu_kernel
+from repro.kernels.fused_update import ops as fu_ops, ref as fu_ref
+
+
+# ---------------------------------------------------------------------------
+# fused_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [8, 24, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_svrg_step_sweep(rows, dtype):
+    rng = np.random.default_rng(rows)
+    shp = (rows, fu_kernel.BLOCK_COLS)
+    x, gn, gs, mu = (jnp.asarray(rng.normal(size=shp), dtype)
+                     for _ in range(4))
+    for alpha in (0.0, 0.05, 1.0):
+        out = fu_ops.svrg_step(x, gn, gs, mu, alpha)
+        ref = fu_ref.svrg_step_ref(x, gn, gs, mu, alpha)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+
+
+@pytest.mark.parametrize("rows", [8, 40])
+def test_mix_prox_sweep(rows):
+    rng = np.random.default_rng(rows + 100)
+    shp = (rows, fu_kernel.BLOCK_COLS)
+    qs, qu, qd = (jnp.asarray(rng.normal(size=shp), jnp.float32)
+                  for _ in range(3))
+    for (w0, w1, w2, th) in [(1.0, 0.0, 0.0, 0.0), (1 / 3, 1 / 3, 1 / 3, 0.01),
+                             (0.5, 0.25, 0.25, 0.3)]:
+        out = fu_ops.mix_prox(qs, qu, qd, w0, w1, w2, th)
+        ref = fu_ref.mix_prox_ref(qs, qu, qd, w0, w1, w2, th)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
+
+
+def test_flatten_tree_roundtrip():
+    tree = {"a": jnp.arange(10.0).reshape(2, 5),
+            "b": {"c": jnp.ones((3,), jnp.bfloat16),
+                  "d": jnp.zeros((7, 3), jnp.float32)}}
+    buf, aux = fu_ops.flatten_tree(tree)
+    assert buf.shape[1] == fu_kernel.BLOCK_COLS
+    assert buf.shape[0] % fu_kernel.BLOCK_ROWS == 0
+    back = fu_ops.unflatten_tree(buf, aux)
+    for k1, k2 in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert k1.dtype == k2.dtype
+        np.testing.assert_allclose(np.asarray(k1, np.float32),
+                                   np.asarray(k2, np.float32))
+
+
+def test_fused_inner_step_composition():
+    """kernel(svrg) |> kernel(mix_prox) == unfused jnp inner step."""
+    rng = np.random.default_rng(7)
+    shp = (16, fu_kernel.BLOCK_COLS)
+    x, gn, gs, mu, xu, xd = (jnp.asarray(rng.normal(size=shp), jnp.float32)
+                             for _ in range(6))
+    alpha, lam = 0.1, 0.02
+    q = fu_ops.svrg_step(x, gn, gs, mu, alpha)
+    out = fu_ops.mix_prox(q, xu, xd, 1 / 3, 1 / 3, 1 / 3, alpha * lam)
+    ref = fu_ref.inner_step_ref(x, gn, gs, mu, xu, xd, 1 / 3, 1 / 3, 1 / 3,
+                                alpha, alpha * lam)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # b, h, kv, sq, sk, hd, causal, window, softcap, bq, bk
+    (1, 4, 2, 128, 128, 64, True, None, None, 64, 64),
+    (2, 4, 4, 256, 256, 32, True, None, None, 128, 128),
+    (1, 8, 2, 128, 128, 64, True, 64, None, 64, 64),     # GQA 4x + SWA
+    (1, 2, 1, 128, 256, 64, True, None, 50.0, 64, 64),   # softcap, sk > sq
+    (1, 2, 2, 192, 192, 16, True, 32, None, 64, 64),     # narrow window
+    (1, 1, 1, 64, 64, 24, True, None, None, 32, 32),     # hd pad (24 -> 24, %8==0)
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_attention_sweep(case):
+    b, h, kv, sq, sk, hd, causal, win, cap, bq, bk = case
+    rng = np.random.default_rng(abs(hash(case)) % 2 ** 31)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sk, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sk, kv, hd)), jnp.float32)
+    out = fa_ops.flash_attention(q, k, v, causal=causal, sliding_window=win,
+                                 softcap=cap, block_q=bq, block_k=bk)
+    ref = fa_ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, sliding_window=win,
+        softcap=cap).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.bfloat16)
+    out = fa_ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = fa_ref.attention_ref(q.transpose(0, 2, 1, 3).astype(jnp.float32),
+                               k.transpose(0, 2, 1, 3).astype(jnp.float32),
+                               v.transpose(0, 2, 1, 3).astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref.transpose(0, 2, 1, 3)),
+                               atol=3e-2)
+
+
+def test_flash_attention_ragged_q_padding():
+    """Sq not a multiple of block_q exercises the wrapper's padding path."""
+    rng = np.random.default_rng(12)
+    q = jnp.asarray(rng.normal(size=(1, 100, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 100, 1, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 100, 1, 32)), jnp.float32)
+    out = fa_ops.flash_attention(q, k, v, block_q=64, block_k=50)
+    ref = fa_ref.attention_ref(q.transpose(0, 2, 1, 3),
+                               k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (3, 7, 64), (5, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    from repro.kernels.rmsnorm import ops as rn_ops, ref as rn_ref
+    rng = np.random.default_rng(sum(shape))
+    x = jnp.asarray(rng.normal(size=shape) * 3, dtype)
+    w = jnp.asarray(rng.normal(size=shape[-1]) * 0.1, dtype)
+    out = rn_ops.rmsnorm(x, w)
+    refo = rn_ref.rmsnorm_ref(x.reshape(-1, shape[-1]),
+                              w).reshape(shape)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(refo, np.float32), atol=tol)
+
+
+def test_rmsnorm_matches_model_norm():
+    """The kernel must be drop-in for models.common.rms_norm."""
+    from repro.kernels.rmsnorm import ops as rn_ops
+    from repro.models import common
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 9, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=32) * 0.05, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(rn_ops.rmsnorm(x, w)),
+        np.asarray(common.rms_norm(x, w)), atol=1e-6)

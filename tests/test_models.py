@@ -1,0 +1,237 @@
+"""Unit tests for model building blocks (attention variants, MoE, SSM)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention, common, moe as moe_lib, ssm
+from repro.models.api import ModelConfig, layer_plan, scan_group_size
+
+
+# ---------------------------------------------------------------------------
+# attention masking variants
+# ---------------------------------------------------------------------------
+
+def _brute_force(q, k, v, ok_fn, softcap=None):
+    b, s, h, hd = q.shape
+    out = np.zeros_like(np.asarray(q))
+    logits = np.einsum("bqhd,bkhd->bhqk", np.asarray(q, np.float64),
+                       np.asarray(k, np.float64)) / np.sqrt(hd)
+    if softcap is not None:
+        logits = softcap * np.tanh(logits / softcap)
+    for i in range(s):
+        for j in range(s):
+            if not ok_fn(i, j):
+                logits[:, :, i, j] = -np.inf
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, np.asarray(v, np.float64))
+
+
+def _mk_qkv(b, s, h, kv, hd, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("variant,ok", [
+    ("causal", lambda i, j: j <= i),
+    ("swa", lambda i, j: j <= i and j > i - 4),
+    ("chunk", lambda i, j: j <= i and j // 4 == i // 4),
+])
+def test_attention_masks(variant, ok):
+    b, s, h, kv, hd = 1, 12, 2, 2, 8
+    q, k, v = _mk_qkv(b, s, h, kv, hd)
+    spec = attention.AttnSpec(
+        d_model=h * hd, num_heads=h, num_kv_heads=kv, head_dim=hd,
+        sliding_window=4 if variant == "swa" else None,
+        chunk=4 if variant == "chunk" else None)
+    bias = attention._mask_bias(spec, jnp.arange(s), jnp.arange(s))
+    out = attention._sdpa(spec, q, attention._repeat_kv(k, h),
+                          attention._repeat_kv(v, h), bias)
+    ref = _brute_force(q, k, v, ok)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+
+
+def test_attention_softcap():
+    b, s, h, kv, hd = 1, 8, 2, 1, 8
+    q, k, v = _mk_qkv(b, s, h, kv, hd, seed=3)
+    spec = attention.AttnSpec(d_model=h * hd, num_heads=h, num_kv_heads=kv,
+                              head_dim=hd, softcap=5.0)
+    bias = attention._mask_bias(spec, jnp.arange(s), jnp.arange(s))
+    out = attention._sdpa(spec, q, attention._repeat_kv(k, h),
+                          attention._repeat_kv(v, h), bias)
+    ref = _brute_force(q, k, v, lambda i, j: j <= i, softcap=5.0)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+
+
+def test_gqa_repeat_matches_explicit():
+    k = jnp.arange(2 * 3 * 2 * 4, dtype=jnp.float32).reshape(2, 3, 2, 4)
+    r = attention._repeat_kv(k, 6)
+    assert r.shape == (2, 3, 6, 4)
+    # heads [0,1,2] share kv head 0; [3,4,5] share kv head 1
+    np.testing.assert_allclose(r[:, :, 0], r[:, :, 2])
+    np.testing.assert_allclose(r[:, :, 3], r[:, :, 5])
+    assert not np.allclose(r[:, :, 0], r[:, :, 3])
+
+
+def test_rope_preserves_norm_and_relativity():
+    hd = 16
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 6, 2, hd)),
+                    jnp.float32)
+    cos, sin = common.rope_angles(jnp.arange(6), hd)
+    y = common.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # inner products depend only on relative distance
+    q = jnp.ones((1, 8, 1, hd))
+    qr = common.apply_rope(q, *common.rope_angles(jnp.arange(8), hd))
+    dots = np.einsum("bshd,bthd->st", np.asarray(qr), np.asarray(qr))
+    assert abs(dots[2, 5] - dots[3, 6]) < 1e-4  # same distance 3
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def test_moe_lossless_capacity_matches_dense_mixture():
+    """With capacity >= tokens, scatter-dispatch MoE == per-token gated sum
+    of expert FFNs computed densely."""
+    spec = moe_lib.MoESpec(d_model=16, d_ff=32, num_experts=4, top_k=2,
+                           capacity_factor=8.0)
+    keygen = common.KeyGen(jax.random.PRNGKey(0))
+    params = moe_lib.init_moe(keygen, spec)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 6, 16)),
+                    jnp.float32)
+    y, aux = moe_lib.moe_forward(params, spec, x)
+
+    xt = np.asarray(x).reshape(-1, 16)
+    logits = xt @ np.asarray(params["router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    ref = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        top = np.argsort(-probs[t])[:2]
+        g = probs[t][top] / probs[t][top].sum()
+        for gi, e in zip(g, top):
+            a = xt[t] @ np.asarray(params["w_gate"][e])
+            u = xt[t] @ np.asarray(params["w_up"][e])
+            silu = a / (1 + np.exp(-a)) * u
+            ref[t] += gi * (silu @ np.asarray(params["w_down"][e]))
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, 16), ref, atol=2e-4)
+    assert float(aux) > 0.5  # load-balance stat near E * (1/E) * 1 = 1
+
+
+def test_moe_capacity_drops_tokens():
+    """Tiny capacity forces drops; output stays finite and drops show up as
+    tokens whose output is only the shared/zero path."""
+    spec = moe_lib.MoESpec(d_model=8, d_ff=16, num_experts=2, top_k=1,
+                           capacity_factor=0.25)
+    keygen = common.KeyGen(jax.random.PRNGKey(2))
+    params = moe_lib.init_moe(keygen, spec)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(1, 16, 8)),
+                    jnp.float32)
+    y, aux = moe_lib.moe_forward(params, spec, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # capacity = 16*1/2*0.25 = 2 per expert -> at most 4 non-dropped tokens
+    nonzero = np.abs(np.asarray(y)).sum(-1) > 1e-9
+    assert nonzero.sum() <= 4
+
+
+# ---------------------------------------------------------------------------
+# SSM mixers
+# ---------------------------------------------------------------------------
+
+def test_mamba_forward_step_consistency():
+    spec = ssm.MambaSpec(d_model=16, chunk_size=4)
+    keygen = common.KeyGen(jax.random.PRNGKey(3))
+    params = ssm.init_mamba(keygen, spec)
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(2, 8, 16)) * 0.5,
+                    jnp.float32)
+    y_full = ssm.mamba_forward(params, spec, x)
+    state = ssm.mamba_init_state(spec, 2)
+    ys = []
+    for t in range(8):
+        y_t, state = ssm.mamba_step(params, spec, x[:, t:t + 1], state)
+        ys.append(y_t)
+    y_steps = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_steps),
+                               atol=2e-5)
+
+
+def test_mamba_chunking_invariance():
+    spec4 = ssm.MambaSpec(d_model=12, chunk_size=4)
+    spec8 = ssm.MambaSpec(d_model=12, chunk_size=8)
+    keygen = common.KeyGen(jax.random.PRNGKey(4))
+    params = ssm.init_mamba(keygen, spec4)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(1, 8, 12)),
+                    jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ssm.mamba_forward(params, spec4, x)),
+        np.asarray(ssm.mamba_forward(params, spec8, x)), atol=1e-5)
+
+
+@pytest.mark.parametrize("mixer", ["mlstm", "slstm"])
+def test_xlstm_forward_step_consistency(mixer):
+    if mixer == "mlstm":
+        spec = ssm.MLstmSpec(d_model=16, num_heads=2)
+        init, fwd, st0, step = (ssm.init_mlstm, ssm.mlstm_forward,
+                                ssm.mlstm_init_state, ssm.mlstm_step)
+    else:
+        spec = ssm.SLstmSpec(d_model=16, num_heads=2)
+        init, fwd, st0, step = (ssm.init_slstm, ssm.slstm_forward,
+                                ssm.slstm_init_state, ssm.slstm_step)
+    keygen = common.KeyGen(jax.random.PRNGKey(5))
+    params = init(keygen, spec)
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(2, 6, 16)) * 0.5,
+                    jnp.float32)
+    y_full = fwd(params, spec, x)
+    state = st0(spec, 2)
+    ys = []
+    for t in range(6):
+        y_t, state = step(params, spec, x[:, t:t + 1], state)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# layer planning
+# ---------------------------------------------------------------------------
+
+def test_layer_plan_jamba_pattern():
+    from repro import configs
+    cfg = configs.get_config("jamba-1.5-large-398b")
+    plans = layer_plan(cfg)
+    assert len(plans) == 72
+    assert sum(p.mixer == "attn" for p in plans) == 9      # 1:7 interleave
+    assert sum(p.ffn == "moe" for p in plans) == 36        # every other layer
+    assert scan_group_size(cfg) == 8
+
+
+def test_layer_plan_gemma2_alternation():
+    from repro import configs
+    cfg = configs.get_config("gemma2-9b")
+    plans = layer_plan(cfg)
+    assert plans[0].attn.sliding_window == 4096             # local
+    assert plans[1].attn.sliding_window is None             # global
+    assert plans[0].attn.softcap == 50.0
+    assert scan_group_size(cfg) == 2
+
+
+def test_layer_plan_llama4_chunking():
+    from repro import configs
+    cfg = configs.get_config("llama4-scout-17b-a16e")
+    plans = layer_plan(cfg)
+    assert plans[0].attn.chunk == 8192 and plans[0].attn.use_rope
+    assert plans[3].attn.chunk is None and not plans[3].attn.use_rope  # NoPE global
+    assert all(p.ffn == "moe" for p in plans)               # scout: every layer
+    mav = configs.get_config("llama4-maverick-400b-a17b")
+    mplans = layer_plan(mav)
+    assert sum(p.ffn == "moe" for p in mplans) == 24        # alternating

@@ -1,0 +1,123 @@
+"""Hypothesis property-based tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gossip, graphs, prox as prox_lib
+from repro.kernels.fused_update import ops as fu_ops
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+finite_arrays = st.integers(2, 24).flatmap(
+    lambda n: st.lists(
+        st.floats(-50, 50, allow_nan=False, width=32), min_size=n, max_size=n))
+
+
+@given(z=finite_arrays, lam=st.floats(0.001, 2.0), alpha=st.floats(0.01, 2.0))
+@settings(**SETTINGS)
+def test_l1_prox_properties(z, lam, alpha):
+    p = prox_lib.l1(lam)
+    zz = jnp.asarray(z, jnp.float32)
+    out = np.asarray(p.apply(zz, alpha))
+    # shrinkage toward zero, sign preservation, exact threshold
+    assert np.all(np.abs(out) <= np.abs(z) + 1e-6)
+    assert np.all((out == 0) | (np.sign(out) == np.sign(z)))
+    assert np.all(out[np.abs(np.asarray(z)) <= alpha * lam] == 0)
+
+
+@given(z1=finite_arrays, seed=st.integers(0, 10), lam=st.floats(0.01, 1.0))
+@settings(**SETTINGS)
+def test_prox_nonexpansive_property(z1, seed, lam):
+    rng = np.random.default_rng(seed)
+    z2 = rng.normal(size=len(z1)).astype(np.float32) * 10
+    p = prox_lib.l1(lam)
+    a, b = jnp.asarray(z1, jnp.float32), jnp.asarray(z2)
+    d_out = float(jnp.linalg.norm(p.apply(a, 0.5) - p.apply(b, 0.5)))
+    assert d_out <= float(jnp.linalg.norm(a - b)) + 1e-4
+
+
+@given(m=st.integers(2, 12), b=st.integers(1, 6), seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_schedule_invariants(m, b, seed):
+    """Any generated schedule: doubly stochastic, products doubly stochastic,
+    consensus matrix rows converge to 1/m."""
+    sched = graphs.b_connected_ring_schedule(m, b=b, seed=seed)
+    for t in range(sched.period):
+        assert graphs.is_doubly_stochastic(sched.matrix(t))
+    phi = sched.phi(0, 3 * sched.period)
+    assert graphs.is_doubly_stochastic(phi)  # closure under products
+    far = sched.phi(0, 80 * max(b, 1) * m)
+    assert np.max(np.abs(far - 1.0 / m)) < 0.05
+
+
+@given(m=st.integers(2, 8), k=st.integers(1, 6), seed=st.integers(0, 10))
+@settings(**SETTINGS)
+def test_gossip_mean_invariant_property(m, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, 5)), jnp.float32)
+    sched = graphs.b_connected_ring_schedule(m, b=min(2, m), seed=seed)
+    phi = sched.consensus_rounds(seed, k)
+    mixed = gossip.mix_stacked(phi, {"x": x})["x"]
+    np.testing.assert_allclose(np.asarray(mixed).mean(0),
+                               np.asarray(x).mean(0), atol=1e-5)
+    # contraction: consensus distance never increases
+    assert graphs.consensus_distance(np.asarray(mixed)) <= \
+        graphs.consensus_distance(np.asarray(x)) + 1e-5
+
+
+@given(seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_flatten_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    nleaf = rng.integers(1, 5)
+    tree = {f"l{i}": jnp.asarray(
+        rng.normal(size=tuple(rng.integers(1, 7, size=rng.integers(1, 3)))),
+        jnp.float32) for i in range(nleaf)}
+    buf, aux = fu_ops.flatten_tree(tree)
+    back = fu_ops.unflatten_tree(buf, aux)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@given(x=finite_arrays, alpha=st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_svrg_step_kernel_matches_ref_property(x, alpha):
+    n = len(x)
+    rng = np.random.default_rng(n)
+    pad = -((n * 4) % (8 * 1024)) % (8 * 1024)
+
+    def mk(v):
+        arr = np.zeros(8 * 1024 * 2, np.float32)
+        arr[:n] = v
+        return jnp.asarray(arr.reshape(16, 1024))
+
+    xb = mk(np.asarray(x, np.float32))
+    gn, gs, mu = (mk(rng.normal(size=n).astype(np.float32)) for _ in range(3))
+    from repro.kernels.fused_update import ref as fu_ref
+    out = fu_ops.svrg_step(xb, gn, gs, mu, float(alpha))
+    ref = fu_ref.svrg_step_ref(xb, gn, gs, mu, float(alpha))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@given(m=st.integers(2, 12), seed=st.integers(0, 20), k=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_band_decomposition_reconstructs_w(m, seed, k):
+    """W = sum_d diag(c_d) P^d exactly, for any schedule product."""
+    sched = graphs.b_connected_ring_schedule(m, b=min(3, m), seed=seed)
+    phi = sched.consensus_rounds(seed, k)
+    offsets, coeffs = gossip.band_decompose(phi)
+    recon = np.zeros((m, m))
+    for d, c in zip(offsets, coeffs):
+        for i in range(m):
+            recon[i, (i + d) % m] += c[i]
+    np.testing.assert_allclose(recon, phi, atol=1e-12)
+    # banded apply == dense apply
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(m, 6)),
+                    jnp.float32)
+    dense = gossip.mix_stacked(phi, {"x": x})["x"]
+    banded = gossip.mix_stacked_banded(
+        offsets, gossip.bands_for_phi(phi, offsets), {"x": x})["x"]
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(banded),
+                               atol=1e-5)

@@ -1,0 +1,104 @@
+"""Unit tests for proximal operators (paper Section III-C, Lemmas 2-4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import prox as prox_lib
+
+
+def test_l1_soft_threshold_closed_form():
+    """Paper's closed form: shift by alpha*lam toward 0, clip at 0."""
+    p = prox_lib.l1(0.5)
+    z = jnp.asarray([3.0, 0.2, -0.2, -3.0, 0.0])
+    out = p.apply(z, 1.0)
+    np.testing.assert_allclose(out, [2.5, 0.0, 0.0, -2.5, 0.0], atol=1e-7)
+
+
+def test_l1_prox_optimality():
+    """prox minimizes (1/2a)||y-z||^2 + h(y): check vs grid search."""
+    lam, alpha = 0.3, 0.7
+    p = prox_lib.l1(lam)
+    z = jnp.asarray([1.3])
+    y_star = float(p.apply(z, alpha)[0])
+    ys = np.linspace(-3, 3, 20001)
+    obj = (ys - 1.3) ** 2 / (2 * alpha) + lam * np.abs(ys)
+    assert abs(ys[np.argmin(obj)] - y_star) < 1e-3
+
+
+def test_squared_l2_shrinkage():
+    p = prox_lib.squared_l2(2.0)
+    z = jnp.asarray([4.0, -2.0])
+    np.testing.assert_allclose(p.apply(z, 0.5), [2.0, -1.0], atol=1e-7)
+
+
+def test_elastic_net_matches_composition():
+    lam1, lam2, alpha = 0.2, 1.0, 0.5
+    enet = prox_lib.elastic_net(lam1, lam2)
+    z = jnp.asarray([2.0, -0.05, 0.5])
+    expected = prox_lib.squared_l2(lam2).apply(
+        prox_lib.l1(lam1).apply(z, alpha), alpha)
+    np.testing.assert_allclose(enet.apply(z, alpha), expected, atol=1e-7)
+
+
+def test_group_lasso_row_shrinkage():
+    p = prox_lib.group_lasso(1.0)
+    z = jnp.asarray([[3.0, 4.0], [0.1, 0.1]])  # norms 5, ~0.14
+    out = p.apply(z, 1.0)
+    np.testing.assert_allclose(out[0], [3.0 * 0.8, 4.0 * 0.8], atol=1e-6)
+    np.testing.assert_allclose(out[1], [0.0, 0.0], atol=1e-7)  # killed group
+
+
+def test_nuclear_svd_threshold():
+    p = prox_lib.nuclear(0.5)
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(6, 4)), jnp.float32)
+    out = p.apply(z, 1.0)
+    s_in = np.linalg.svd(np.asarray(z), compute_uv=False)
+    s_out = np.linalg.svd(np.asarray(out), compute_uv=False)
+    np.testing.assert_allclose(s_out, np.maximum(s_in - 0.5, 0), atol=1e-5)
+
+
+def test_box_projection():
+    p = prox_lib.box(-1.0, 1.0)
+    z = jnp.asarray([-5.0, 0.5, 5.0])
+    np.testing.assert_allclose(p.apply(z, 0.1), [-1.0, 0.5, 1.0])
+
+
+def test_nonexpansiveness_lemma4():
+    """Lemma 4: ||prox(z1) - prox(z2)|| <= ||z1 - z2|| for all operators."""
+    rng = np.random.default_rng(1)
+    ops = [prox_lib.l1(0.3), prox_lib.squared_l2(0.5),
+           prox_lib.elastic_net(0.2, 0.4), prox_lib.group_lasso(0.3),
+           prox_lib.box(-0.5, 0.5), prox_lib.none()]
+    for p in ops:
+        for _ in range(20):
+            z1 = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+            z2 = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+            d_out = float(jnp.linalg.norm(p.apply(z1, 0.7) - p.apply(z2, 0.7)))
+            d_in = float(jnp.linalg.norm(z1 - z2))
+            assert d_out <= d_in + 1e-5, p.name
+
+
+def test_prox_pytree_mapping():
+    p = prox_lib.l1(0.1)
+    tree = {"a": jnp.ones((3,)), "b": {"c": -jnp.ones((2, 2))}}
+    out = p.apply(tree, 1.0)
+    np.testing.assert_allclose(out["a"], 0.9 * np.ones(3), atol=1e-7)
+    np.testing.assert_allclose(out["b"]["c"], -0.9 * np.ones((2, 2)), atol=1e-7)
+    assert float(p.value(tree)) == pytest.approx(0.1 * 7.0)
+
+
+def test_second_prox_theorem_l1():
+    """Lemma 3 (2): (z - y)/alpha must be a subgradient of h at y = prox(z)."""
+    lam, alpha = 0.4, 0.6
+    p = prox_lib.l1(lam)
+    z = jnp.asarray([2.0, -0.1, 0.1, -2.0])
+    y = p.apply(z, alpha)
+    sub = (np.asarray(z) - np.asarray(y)) / alpha
+    for yi, si in zip(np.asarray(y), sub):
+        if yi != 0:
+            assert si == pytest.approx(lam * np.sign(yi), abs=1e-6)
+        else:
+            assert abs(si) <= lam + 1e-6
