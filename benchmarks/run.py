@@ -21,7 +21,7 @@ def main() -> None:
 
     from . import (baselines_compare, beyond_noniid, datasets_table,
                    fig1_convergence, fig2_comm, fig3_consensus, fig4_lambda,
-                   fig5_connectivity, kernel_bench)
+                   fig5_connectivity, kernel_bench, runner_bench)
     suites = {
         "table1": datasets_table.run,
         "fig1": fig1_convergence.run,
@@ -30,6 +30,7 @@ def main() -> None:
         "fig4": fig4_lambda.run,
         "fig5": fig5_connectivity.run,
         "kernel": kernel_bench.run,
+        "runner": runner_bench.run,
         "beyond": beyond_noniid.run,
         "baselines": baselines_compare.run,
     }

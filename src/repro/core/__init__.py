@@ -5,11 +5,37 @@ Submodules:
   prox       — closed-form proximal operators (l1, elastic net, group lasso, ...)
   svrg       — variance-reduced gradient estimator + snapshot state
   gossip     — consensus over stacked node parameters (einsum & ppermute paths)
-  dpsvrg     — Algorithm 1 + DSPG baseline + centralized prox-GD reference
+  algorithm  — the unified `DecentralizedAlgorithm` protocol + all methods
+  runner     — the single generic driver (host loop + lax.scan fast path)
+  dpsvrg     — Algorithm 1 + DSPG compatibility wrappers + centralized prox-GD
+  baselines  — DPG / GT-SVRG / loopless-DPSVRG compatibility wrappers
   inexact    — Algorithm 2 (Inexact Prox-SVRG) + executable Theorem 1
   schedules  — K_s growth, DSPG decaying steps, WSD / cosine LR schedules
+
+The Algorithm protocol (``core.algorithm``)
+-------------------------------------------
+Every decentralized method is three pure transitions over an
+algorithm-private state pytree (stacked node params, leading axis m):
+
+    algo.init()                      -> state    all nodes at x0
+    algo.step(state, batch, phi, a)  -> state    one inner iteration
+    algo.outer(state)                -> state    snapshot / full-grad refresh
+    algo.end_outer(state, K)         -> state    close an inner round
+
+plus declarative ``AlgoMeta`` (loop structure, grad-evals per step, gossip
+rounds policy, metric conventions).  ``runner.run(algo, problem, schedule)``
+owns batch sampling, time-varying gossip scheduling, epoch/communication
+accounting, pluggable metric recorders, and an optional ``lax.scan`` fast
+path that executes a whole record interval in one device dispatch.  Adding a
+baseline = writing a factory in ``core.algorithm`` and registering it in
+``algorithm.ALGORITHMS``; it then runs on every problem, schedule, benchmark
+figure, and recorder in the repo.  The LM trainer (``repro.train``) builds
+its jitted step from the same ``UPDATE_RULES`` + ``prox_gossip_update``, so
+paper-scale repro and LM-scale training share one update implementation.
 """
 
-from . import dpsvrg, gossip, graphs, inexact, prox, schedules, svrg
+from . import (algorithm, baselines, dpsvrg, gossip, graphs, inexact, prox,
+               runner, schedules, svrg)
 
-__all__ = ["dpsvrg", "gossip", "graphs", "inexact", "prox", "schedules", "svrg"]
+__all__ = ["algorithm", "baselines", "dpsvrg", "gossip", "graphs", "inexact",
+           "prox", "runner", "schedules", "svrg"]

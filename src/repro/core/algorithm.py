@@ -1,0 +1,553 @@
+"""The unified `DecentralizedAlgorithm` protocol.
+
+Every decentralized method in the repo — DPSVRG (paper Algorithm 1), DSPG
+[paper ref. 11], DPG [ref. 10], GT-SVRG [refs 18/19], and the beyond-paper
+loopless DPSVRG — is expressed as the same three pure transitions over an
+algorithm-private state pytree with stacked node parameters (leading axis m):
+
+    init()                        -> state        (all nodes at x0)
+    step(state, batch, phi, a)    -> state        (one inner iteration)
+    outer(state)                  -> state        (snapshot / full-grad refresh)
+    end_outer(state, K)           -> state        (close an inner round, e.g.
+                                                   Algorithm 1's tail average)
+
+plus declarative :class:`AlgoMeta` (loop structure, gradient-evaluation cost
+per step, gossip-rounds policy, step-size schedule, metric conventions).  The
+single driver in :mod:`repro.core.runner` consumes this protocol and owns
+everything the old bespoke ``*_run`` loops copy-pasted: batch sampling,
+time-varying gossip scheduling, epoch/communication accounting, metric
+recording, and an optional ``lax.scan`` fast path.
+
+A new baseline is now a ~50-line factory returning an :class:`Algorithm`;
+register it in :data:`ALGORITHMS` and it runs on every problem, schedule,
+benchmark, and recorder in the repo.
+
+The LM-scale trainer (``repro.train.steps``) shares the inner update via
+:data:`UPDATE_RULES` + :func:`prox_gossip_update` instead of re-implementing
+the SVRG correction a third time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gossip, prox as prox_lib, schedules, svrg
+
+__all__ = [
+    "Problem",
+    "UpdateRule",
+    "UPDATE_RULES",
+    "prox_gossip_update",
+    "AlgoMeta",
+    "Algorithm",
+    "DPSVRGHyperParams",
+    "DSPGHyperParams",
+    "build_node_grad_fn",
+    "build_node_full_grad_fn",
+    "build_dpsvrg_inner_step",
+    "build_dspg_step",
+    "dpsvrg_algorithm",
+    "dspg_algorithm",
+    "dpg_algorithm",
+    "gt_svrg_algorithm",
+    "loopless_dpsvrg_algorithm",
+    "ALGORITHMS",
+]
+
+
+# ---------------------------------------------------------------------------
+# Problem: what all algorithms run against
+# ---------------------------------------------------------------------------
+
+class Problem(NamedTuple):
+    """A decentralized composite problem min F = (1/m) sum_i f_i + h.
+
+    loss_fn:      ``loss_fn(params, batch) -> scalar`` per-node smooth loss
+    prox:         the non-smooth regularizer's proximal operator
+    x0:           stacked start point, leaves (m, ...)
+    full_data:    per-node datasets, leaves (m, n, ...)
+    objective_fn: optional override for the recorded objective F(x_bar)
+    """
+    loss_fn: Callable
+    prox: prox_lib.Prox
+    x0: Any
+    full_data: Any
+    objective_fn: Callable | None = None
+
+
+# ---------------------------------------------------------------------------
+# Hyper-parameters (canonical home; re-exported by core.dpsvrg for compat)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DPSVRGHyperParams:
+    alpha: float = 0.01          # constant step size (the VR payoff)
+    beta: float = 1.07           # inner-loop growth base
+    n0: int = 8                  # initial inner-loop length
+    num_outer: int = 30          # S
+    batch_size: int = 1          # paper uses single-sample inner steps
+    k_max: int | None = None     # multi-consensus cap (None = faithful, k rounds at step k)
+    single_consensus: bool = False  # Fig.3 ablation: one gossip round per step
+    compress_bits: int | None = None  # int-quantized gossip w/ error feedback
+
+
+@dataclasses.dataclass(frozen=True)
+class DSPGHyperParams:
+    alpha0: float = 0.01
+    decay: float = 0.5           # alpha_k = alpha0 / (k+1)^decay
+    batch_size: int = 1
+    constant_step: bool = False  # with a constant step DSPG stalls (inexact convergence)
+
+
+# ---------------------------------------------------------------------------
+# Update rules: the loss-agnostic inner update shared with the LM trainer
+# ---------------------------------------------------------------------------
+
+class UpdateRule(NamedTuple):
+    """Gradient-direction rule of the shared prox-gossip update.
+
+    ``direction(g_now, g_snap, mu) -> v`` computes the descent direction from
+    the minibatch gradient at the iterate, the minibatch gradient at the
+    snapshot, and the snapshot full gradient.  Rules that don't need the
+    snapshot (``needs_snapshot=False``) receive ``None`` for the latter two.
+    """
+    name: str
+    needs_snapshot: bool
+    direction: Callable
+
+
+def _svrg_direction(g_now, g_snap, mu):
+    return jax.tree.map(lambda a, b, c: a - b + c, g_now, g_snap, mu)
+
+
+def _sgd_direction(g_now, g_snap, mu):
+    return g_now
+
+
+DPSVRG_RULE = UpdateRule("dpsvrg", True, _svrg_direction)
+DSPG_RULE = UpdateRule("dspg", False, _sgd_direction)
+
+UPDATE_RULES: dict[str, UpdateRule] = {
+    "dpsvrg": DPSVRG_RULE,
+    "dspg": DSPG_RULE,
+}
+
+
+def prox_gossip_update(params, v, phi, alpha, prox: prox_lib.Prox,
+                       mix_fn: Callable = gossip.mix_stacked):
+    """Algorithm 1 lines 8-11 for all nodes at once (shared hot path):
+
+        q     = x - alpha * v
+        q_hat = gossip(phi, q)
+        x'    = prox_h^alpha(q_hat)
+
+    ``mix_fn`` pluggable so the LM trainer can swap the dense einsum for the
+    O(degree) banded-collective gossip without forking the update.
+    """
+    q = jax.tree.map(lambda x, vi: x - alpha * vi.astype(x.dtype), params, v)
+    q_hat = mix_fn(phi, q)
+    return prox.apply(q_hat, alpha)
+
+
+# ---------------------------------------------------------------------------
+# Gradient function builders (stacked over nodes via vmap)
+# ---------------------------------------------------------------------------
+
+def build_node_grad_fn(loss_fn: Callable) -> Callable:
+    """loss_fn(params, batch)->scalar  =>  grad over stacked params.
+
+    Stacked signature: params leaves (m, ...), batch leaves (m, B, ...).
+    vmap over the node axis keeps each node's gradient private, exactly as in
+    decentralized learning — under GSPMD the vmapped axis is the node mesh
+    axis, so no cross-node communication happens here.
+    """
+    g = jax.grad(loss_fn)
+    return jax.vmap(g)
+
+
+def build_node_full_grad_fn(loss_fn: Callable, full_batch) -> Callable:
+    """Full local gradient closure over each node's entire dataset."""
+    g = jax.vmap(jax.grad(loss_fn))
+
+    def full_grad(params):
+        return g(params, full_batch)
+
+    return full_grad
+
+
+# ---------------------------------------------------------------------------
+# Jitted step builders
+# ---------------------------------------------------------------------------
+
+def build_dpsvrg_inner_step(loss_fn: Callable, prox: prox_lib.Prox,
+                            compress_bits: int | None = None):
+    """Returns jitted ``step(params, svrg_state, batch, phi, alpha[, cstate])``
+    implementing Algorithm 1 lines 7-11 for all nodes at once.  With
+    ``compress_bits``, gossip carries quantized iterates with error feedback
+    (core.compression) and the step threads the compression state.
+    """
+    node_grad = build_node_grad_fn(loss_fn)
+
+    if compress_bits is None:
+        @jax.jit
+        def step(params, svrg_state, batch, phi, alpha):
+            v = svrg.corrected_gradient(node_grad, params, svrg_state, batch)
+            return prox_gossip_update(params, v, phi, alpha, prox)
+
+        return step
+
+    from . import compression
+
+    @jax.jit
+    def step_c(params, svrg_state, batch, phi, alpha, cstate):
+        v = svrg.corrected_gradient(node_grad, params, svrg_state, batch)
+        q = jax.tree.map(lambda x, vi: x - alpha * vi, params, v)
+        q_hat, cstate = compression.compressed_mix(phi, q, cstate,
+                                                   bits=compress_bits)
+        x = prox.apply(q_hat, alpha)
+        return x, cstate
+
+    return step_c
+
+
+def build_dspg_step(loss_fn: Callable, prox: prox_lib.Prox):
+    """DSPG [paper ref. 11]: plain stochastic gradient + single gossip + prox,
+    decaying step size."""
+    node_grad = build_node_grad_fn(loss_fn)
+
+    @jax.jit
+    def step(params, batch, w, alpha):
+        g = node_grad(params, batch)
+        return prox_gossip_update(params, g, w, alpha, prox)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Protocol: declarative metadata + the state/step/outer triple
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AlgoMeta:
+    """Everything the generic runner needs to know about a method, declared
+    up front instead of encoded in a bespoke loop.
+
+    Loop structure — exactly one of:
+      outer_lengths: inner-round lengths (K_1, ..., K_S); the runner calls
+                     ``outer()`` before each round and ``end_outer()`` after
+      num_steps:     flat loop length (``outer()`` only on coin flips)
+
+    Cost accounting (effective-epoch metric, per inner step):
+      step_grad_factor: single-sample grad evals per node per batch element
+                        (2 for SVRG-corrected steps, 1 for plain SGD)
+      outer_full_grad:  charge m*n evals at each ``outer()`` refresh
+      init_full_grad:   charge m*n evals at ``init()`` (loopless warm start)
+
+    Gossip policy:
+      gossip_rounds(k): consensus rounds at inner step k (in-round k for
+                        outer/inner methods, global t for flat ones); the
+                        runner turns rounds into one pre-multiplied Phi
+      slot_start:       first slot of the time-varying schedule consumed
+
+    Recording conventions (kept method-by-method identical to the historical
+    loops so downstream figure scripts are unaffected):
+      stepsize(t):      step size at global step t (1-based)
+      snapshot_prob:    loopless coin-flip probability (flat loops only)
+      track_consensus:  record mean ||x_i - x_bar|| (else zeros)
+      comm_metric:      "gossip" (cumulative rounds) | "steps"
+      epoch_metric:     "grad" (evals / (m n)) | "steps" (DPG: 1 epoch/step)
+      record_key:       "round" | "global" — which counter record_every keys on
+      final_record:     force a terminal record (deduplicated by the runner)
+    """
+    name: str
+    stepsize: Callable[[int], float]
+    outer_lengths: tuple[int, ...] | None = None
+    num_steps: int | None = None
+    batch_size: int = 1
+    step_grad_factor: int = 1
+    outer_full_grad: bool = False
+    init_full_grad: bool = False
+    gossip_rounds: Callable[[int], int] = lambda k: 1
+    slot_start: int = 0
+    snapshot_prob: float | None = None
+    track_consensus: bool = False
+    comm_metric: str = "steps"
+    epoch_metric: str = "grad"
+    record_key: str = "round"
+    final_record: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """A decentralized algorithm bound to a :class:`Problem`.
+
+    ``step`` must be jit-compatible (the runner traces it under ``lax.scan``
+    on the fast path); ``init``/``outer``/``end_outer`` run on host between
+    dispatches and may mix eager and jitted work.
+    """
+    meta: AlgoMeta
+    init: Callable[[], Any]
+    step: Callable[[Any, Any, Any, Any], Any]   # (state, batch, phi, alpha)
+    outer: Callable[[Any], Any] | None = None
+    end_outer: Callable[[Any, int], Any] | None = None
+    rule: UpdateRule | None = None
+
+    @staticmethod
+    def get_params(state):
+        return state.params
+
+
+# Algorithm-private states.  All carry stacked params; the rest is method
+# bookkeeping that rides through ``lax.scan`` as part of the carry.
+
+class ParamState(NamedTuple):
+    params: Any
+
+
+class DPSVRGState(NamedTuple):
+    params: Any
+    anchor: Any                       # snapshot point for the NEXT refresh
+    est: svrg.SvrgState | None        # current snapshot + full gradient
+    inner_sum: Any                    # tail-average accumulator (line 13)
+    cstate: Any                       # compression error-feedback state
+
+
+class GTSVRGState(NamedTuple):
+    params: Any
+    anchor: Any
+    est: svrg.SvrgState | None
+    tracker: Any                      # gradient-tracking direction y_i
+    v_prev: Any
+    inner_sum: Any
+
+
+class LooplessState(NamedTuple):
+    params: Any
+    est: svrg.SvrgState
+
+
+def _zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+# ---------------------------------------------------------------------------
+# Factories: one per method, each a ~40-line plugin
+# ---------------------------------------------------------------------------
+
+def dpsvrg_algorithm(problem: Problem, hp: DPSVRGHyperParams) -> Algorithm:
+    """Paper Algorithm 1: SVRG-corrected prox step + multi-consensus gossip,
+    growing inner rounds K_s = ceil(beta^s n0), tail-average snapshots."""
+    inner = build_dpsvrg_inner_step(problem.loss_fn, problem.prox,
+                                    compress_bits=hp.compress_bits)
+    full_grad_fn = build_node_full_grad_fn(problem.loss_fn, problem.full_data)
+    compressed = hp.compress_bits is not None
+
+    def init():
+        cstate = None
+        if compressed:
+            from . import compression
+            cstate = compression.init_state(problem.x0)
+        return DPSVRGState(params=problem.x0, anchor=problem.x0, est=None,
+                           inner_sum=_zeros_like(problem.x0), cstate=cstate)
+
+    def outer(state):
+        est = svrg.SvrgState(snapshot=state.anchor,
+                             full_grad=full_grad_fn(state.anchor))
+        return state._replace(est=est, inner_sum=_zeros_like(state.params))
+
+    def step(state, batch, phi, alpha):
+        if compressed:
+            params, cstate = inner(state.params, state.est, batch, phi, alpha,
+                                   state.cstate)
+        else:
+            params = inner(state.params, state.est, batch, phi, alpha)
+            cstate = state.cstate
+        return state._replace(params=params, cstate=cstate,
+                              inner_sum=svrg.tree_add(state.inner_sum, params))
+
+    def end_outer(state, K):
+        return state._replace(
+            anchor=jax.tree.map(lambda acc: acc / K, state.inner_sum))
+
+    if hp.single_consensus:
+        rounds = lambda k: 1
+    elif hp.k_max is None:
+        rounds = lambda k: k
+    else:
+        rounds = lambda k: min(k, hp.k_max)
+
+    meta = AlgoMeta(
+        name="dpsvrg",
+        stepsize=schedules.constant(hp.alpha),
+        outer_lengths=tuple(
+            schedules.inner_loop_lengths(hp.beta, hp.n0, hp.num_outer)),
+        batch_size=hp.batch_size,
+        step_grad_factor=2,
+        outer_full_grad=True,
+        gossip_rounds=rounds,
+        track_consensus=True,
+        comm_metric="gossip",
+        record_key="round",
+        final_record=True,
+    )
+    return Algorithm(meta=meta, init=init, step=step, outer=outer,
+                     end_outer=end_outer, rule=DPSVRG_RULE)
+
+
+def dspg_algorithm(problem: Problem, hp: DSPGHyperParams,
+                   num_steps: int) -> Algorithm:
+    """DSPG baseline: one stochastic prox-gradient + one gossip per step."""
+    step_fn = build_dspg_step(problem.loss_fn, problem.prox)
+
+    def step(state, batch, phi, alpha):
+        return ParamState(step_fn(state.params, batch, phi, alpha))
+
+    meta = AlgoMeta(
+        name="dspg",
+        stepsize=(schedules.constant(hp.alpha0) if hp.constant_step
+                  else schedules.dspg_stepsize(hp.alpha0, hp.decay)),
+        num_steps=num_steps,
+        batch_size=hp.batch_size,
+        step_grad_factor=1,
+        slot_start=1,
+        track_consensus=True,
+    )
+    return Algorithm(meta=meta, init=lambda: ParamState(problem.x0),
+                     step=step, rule=DSPG_RULE)
+
+
+def dpg_algorithm(problem: Problem, alpha: float, num_steps: int) -> Algorithm:
+    """DPG [paper ref. 10]: deterministic full local gradients, one gossip +
+    prox per step.  The smooth anchor: one effective epoch per step."""
+    full_grad_fn = build_node_full_grad_fn(problem.loss_fn, problem.full_data)
+    prox = problem.prox
+
+    @jax.jit
+    def _step(params, w, a):
+        g = full_grad_fn(params)
+        q = jax.tree.map(lambda x, gi: x - a * gi, params, g)
+        q_hat = gossip.mix_stacked(w, q)
+        return prox.apply(q_hat, a)
+
+    def step(state, batch, phi, alpha):
+        return ParamState(_step(state.params, phi, alpha))
+
+    meta = AlgoMeta(
+        name="dpg",
+        stepsize=schedules.constant(alpha),
+        num_steps=num_steps,
+        batch_size=0,
+        step_grad_factor=0,
+        slot_start=1,
+        epoch_metric="steps",
+    )
+    return Algorithm(meta=meta, init=lambda: ParamState(problem.x0),
+                     step=step)
+
+
+def gt_svrg_algorithm(problem: Problem, alpha: float, num_outer: int,
+                      inner_steps: int, batch_size: int = 1) -> Algorithm:
+    """GT-SVRG [paper refs 18/19]: SVRG estimator + gradient tracking; one
+    gossip round per step (tracking replaces multi-consensus)."""
+    node_grad = build_node_grad_fn(problem.loss_fn)
+    full_grad_fn = build_node_full_grad_fn(problem.loss_fn, problem.full_data)
+    prox = problem.prox
+
+    @jax.jit
+    def inner(params, tracker, v_prev, est, batch, w, a):
+        q = jax.tree.map(lambda x, y: x - a * y, params, tracker)
+        q_hat = gossip.mix_stacked(w, q)
+        new_params = prox.apply(q_hat, a)
+        v_new = svrg.corrected_gradient(node_grad, new_params, est, batch)
+        new_tracker = jax.tree.map(
+            lambda ty, vn, vp: ty + vn - vp,
+            gossip.mix_stacked(w, tracker), v_new, v_prev)
+        return new_params, new_tracker, v_new
+
+    def init():
+        # standard GT init: tracker starts at the x0 full gradient (computed
+        # once here, re-charged per outer round exactly like the host loops)
+        est = svrg.SvrgState(snapshot=problem.x0,
+                             full_grad=full_grad_fn(problem.x0))
+        return GTSVRGState(params=problem.x0, anchor=problem.x0, est=est,
+                           tracker=est.full_grad, v_prev=est.full_grad,
+                           inner_sum=_zeros_like(problem.x0))
+
+    def outer(state):
+        est = svrg.SvrgState(snapshot=state.anchor,
+                             full_grad=full_grad_fn(state.anchor))
+        return state._replace(est=est, inner_sum=_zeros_like(state.params))
+
+    def step(state, batch, phi, alpha):
+        params, tracker, v_prev = inner(state.params, state.tracker,
+                                        state.v_prev, state.est, batch, phi,
+                                        alpha)
+        return state._replace(params=params, tracker=tracker, v_prev=v_prev,
+                              inner_sum=svrg.tree_add(state.inner_sum, params))
+
+    def end_outer(state, K):
+        return state._replace(
+            anchor=jax.tree.map(lambda acc: acc / K, state.inner_sum))
+
+    meta = AlgoMeta(
+        name="gt_svrg",
+        stepsize=schedules.constant(alpha),
+        outer_lengths=(inner_steps,) * num_outer,
+        batch_size=batch_size,
+        step_grad_factor=2,
+        outer_full_grad=True,
+        record_key="global",
+        final_record=False,
+    )
+    return Algorithm(meta=meta, init=init, step=step, outer=outer,
+                     end_outer=end_outer, rule=DPSVRG_RULE)
+
+
+def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
+                              snapshot_prob: float = 0.05,
+                              consensus_rounds: int = 2,
+                              batch_size: int = 1) -> Algorithm:
+    """BEYOND-PAPER: L-SVRG-style coin-flip snapshots — fixed-shape steps,
+    no outer-loop bookkeeping (the variant the LM trainer approximates)."""
+    inner = build_dpsvrg_inner_step(problem.loss_fn, problem.prox)
+    full_grad_fn = build_node_full_grad_fn(problem.loss_fn, problem.full_data)
+
+    def init():
+        est = svrg.SvrgState(snapshot=problem.x0,
+                             full_grad=full_grad_fn(problem.x0))
+        return LooplessState(params=problem.x0, est=est)
+
+    def outer(state):
+        return state._replace(est=svrg.SvrgState(
+            snapshot=state.params, full_grad=full_grad_fn(state.params)))
+
+    def step(state, batch, phi, alpha):
+        return state._replace(
+            params=inner(state.params, state.est, batch, phi, alpha))
+
+    meta = AlgoMeta(
+        name="loopless_dpsvrg",
+        stepsize=schedules.constant(alpha),
+        num_steps=num_steps,
+        batch_size=batch_size,
+        step_grad_factor=2,
+        outer_full_grad=True,
+        init_full_grad=True,
+        gossip_rounds=lambda t: consensus_rounds,
+        snapshot_prob=snapshot_prob,
+    )
+    return Algorithm(meta=meta, init=init, step=step, outer=outer,
+                     rule=DPSVRG_RULE)
+
+
+ALGORITHMS: dict[str, Callable[..., Algorithm]] = {
+    "dpsvrg": dpsvrg_algorithm,
+    "dspg": dspg_algorithm,
+    "dpg": dpg_algorithm,
+    "gt_svrg": gt_svrg_algorithm,
+    "loopless_dpsvrg": loopless_dpsvrg_algorithm,
+}

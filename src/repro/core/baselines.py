@@ -1,4 +1,4 @@
-"""Additional decentralized baselines beyond DSPG.
+"""Decentralized baselines beyond DSPG — thin wrappers over the unified runner.
 
 * DPG  — Decentralized Proximal Gradient [paper ref. 10]: full local
   gradients (no stochasticity), gossip, prox.  The deterministic anchor:
@@ -13,20 +13,21 @@
   with v the SVRG-corrected local estimator.  Gradient tracking removes the
   bias from heterogeneous local objectives without multi-consensus — the
   natural head-to-head for DPSVRG on non-IID partitions.
+* loopless DPSVRG — BEYOND-PAPER L-SVRG-style coin-flip snapshots.
 
-Both reuse the stacked-parameter layout, so they run on the same problems,
-schedules, and metrics as core.dpsvrg (see benchmarks/baselines_compare.py).
+All three are ``Algorithm`` plugins in ``repro.core.algorithm``; the
+``*_run`` functions here are **deprecated** compatibility wrappers over
+``repro.core.runner.run`` that reproduce the pre-refactor histories
+seed-for-seed (see tests/test_algorithm_api.py).
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Callable
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from . import dpsvrg, gossip, graphs, prox as prox_lib, schedules, svrg
+from . import graphs, prox as prox_lib, runner as runner_lib
+from .algorithm import (Problem, dpg_algorithm, gt_svrg_algorithm,
+                        loopless_dpsvrg_algorithm)
 
 __all__ = ["dpg_run", "gt_svrg_run", "loopless_dpsvrg_run"]
 
@@ -43,8 +44,9 @@ def loopless_dpsvrg_run(loss_fn: Callable,
                         batch_size: int = 1,
                         seed: int = 0,
                         record_every: int = 10,
-                        objective_fn: Callable | None = None):
-    """BEYOND-PAPER: loopless DPSVRG (L-SVRG-style).
+                        objective_fn: Callable | None = None,
+                        scan: bool = False):
+    """Deprecated wrapper: loopless DPSVRG through the unified runner.
 
     Replaces Algorithm 1's growing inner loop K_s = ceil(beta^s n0) with a
     per-step coin flip: with probability p the snapshot/full gradient is
@@ -54,37 +56,14 @@ def loopless_dpsvrg_run(loss_fn: Callable,
     growing loop (this is the variant the LM trainer's fixed
     ``snapshot_every`` approximates deterministically).
     """
-    rng = np.random.default_rng(seed)
-    inner_step = dpsvrg.build_dpsvrg_inner_step(loss_fn, prox)
-    full_grad_fn = dpsvrg.build_node_full_grad_fn(loss_fn, full_data)
-    obj = objective_fn or (
-        lambda p: dpsvrg._objective(loss_fn, prox, p, full_data))
-
-    m = jax.tree.leaves(x0_stacked)[0].shape[0]
-    n = jax.tree.leaves(full_data)[0].shape[1]
-    params = x0_stacked
-    state = svrg.SvrgState(snapshot=params, full_grad=full_grad_fn(params))
-    grad_evals = m * n
-    slot = 0
-    hist_obj, hist_ep, hist_steps = [obj(params)], [grad_evals / (m * n)], [0]
-    for t in range(1, num_steps + 1):
-        batch = dpsvrg._sample_batch(rng, full_data, batch_size)
-        phi = schedule.consensus_rounds(slot, consensus_rounds)
-        slot += consensus_rounds
-        params = inner_step(params, state, batch,
-                            jnp.asarray(phi, jnp.float32), jnp.float32(alpha))
-        grad_evals += 2 * m * batch_size
-        if rng.random() < snapshot_prob:
-            state = svrg.SvrgState(snapshot=params,
-                                   full_grad=full_grad_fn(params))
-            grad_evals += m * n
-        if t % record_every == 0 or t == num_steps:
-            hist_obj.append(obj(params))
-            hist_ep.append(grad_evals / float(m * n))
-            hist_steps.append(t)
-    return params, dpsvrg.RunHistory(
-        np.array(hist_obj), np.zeros(len(hist_obj)), np.array(hist_ep),
-        np.array(hist_steps), np.array(hist_steps))
+    problem = Problem(loss_fn, prox, x0_stacked, full_data, objective_fn)
+    algo = loopless_dpsvrg_algorithm(problem, alpha, num_steps,
+                                     snapshot_prob=snapshot_prob,
+                                     consensus_rounds=consensus_rounds,
+                                     batch_size=batch_size)
+    res = runner_lib.run(algo, problem, schedule, seed=seed,
+                         record_every=record_every, scan=scan)
+    return res.params, res.history
 
 
 def dpg_run(loss_fn: Callable,
@@ -95,33 +74,14 @@ def dpg_run(loss_fn: Callable,
             alpha: float,
             num_steps: int,
             record_every: int = 10,
-            objective_fn: Callable | None = None):
-    """Deterministic decentralized proximal gradient."""
-    full_grad_fn = dpsvrg.build_node_full_grad_fn(loss_fn, full_data)
-    obj = objective_fn or (
-        lambda p: dpsvrg._objective(loss_fn, prox, p, full_data))
-
-    @jax.jit
-    def step(params, w, a):
-        g = full_grad_fn(params)
-        q = jax.tree.map(lambda x, gi: x - a * gi, params, g)
-        q_hat = gossip.mix_stacked(w, q)
-        return prox.apply(q_hat, a)
-
-    m = jax.tree.leaves(x0_stacked)[0].shape[0]
-    n = jax.tree.leaves(full_data)[0].shape[1]
-    params = x0_stacked
-    hist_obj, hist_ep, hist_steps = [obj(params)], [0.0], [0]
-    for t in range(1, num_steps + 1):
-        params = step(params, jnp.asarray(schedule.matrix(t), jnp.float32),
-                      jnp.float32(alpha))
-        if t % record_every == 0 or t == num_steps:
-            hist_obj.append(obj(params))
-            hist_ep.append(float(t))           # one epoch per step (full grad)
-            hist_steps.append(t)
-    return params, dpsvrg.RunHistory(
-        np.array(hist_obj), np.zeros(len(hist_obj)), np.array(hist_ep),
-        np.array(hist_steps), np.array(hist_steps))
+            objective_fn: Callable | None = None,
+            scan: bool = False):
+    """Deprecated wrapper: deterministic decentralized proximal gradient."""
+    problem = Problem(loss_fn, prox, x0_stacked, full_data, objective_fn)
+    algo = dpg_algorithm(problem, alpha, num_steps)
+    res = runner_lib.run(algo, problem, schedule,
+                         record_every=record_every, scan=scan)
+    return res.params, res.history
 
 
 def gt_svrg_run(loss_fn: Callable,
@@ -135,64 +95,16 @@ def gt_svrg_run(loss_fn: Callable,
                 batch_size: int = 1,
                 seed: int = 0,
                 record_every: int = 0,
-                objective_fn: Callable | None = None):
-    """Gradient-tracking SVRG over the same stacked layout.
+                objective_fn: Callable | None = None,
+                scan: bool = False):
+    """Deprecated wrapper: gradient-tracking SVRG through the unified runner.
 
     Outer rounds refresh the snapshot/full-gradient; inner steps do one
     gossip round each (no multi-consensus — tracking replaces it).
     """
-    rng = np.random.default_rng(seed)
-    node_grad = dpsvrg.build_node_grad_fn(loss_fn)
-    full_grad_fn = dpsvrg.build_node_full_grad_fn(loss_fn, full_data)
-    obj = objective_fn or (
-        lambda p: dpsvrg._objective(loss_fn, prox, p, full_data))
-
-    @jax.jit
-    def inner(params, tracker, v_prev, state, batch, w, a):
-        q = jax.tree.map(lambda x, y: x - a * y, params, tracker)
-        q_hat = gossip.mix_stacked(w, q)
-        new_params = prox.apply(q_hat, a)
-        v_new = svrg.corrected_gradient(node_grad, new_params, state, batch)
-        new_tracker = jax.tree.map(
-            lambda ty, vn, vp: ty + vn - vp,
-            gossip.mix_stacked(w, tracker), v_new, v_prev)
-        return new_params, new_tracker, v_new
-
-    m = jax.tree.leaves(x0_stacked)[0].shape[0]
-    n = jax.tree.leaves(full_data)[0].shape[1]
-    params = x0_stacked
-    snapshot = x0_stacked
-    hist_obj, hist_steps = [obj(params)], [0]
-    t = 0
-    grad_evals = 0
-    hist_ep = [0.0]
-    # initialize tracker with the snapshot full gradient (standard GT init)
-    state = svrg.SvrgState(snapshot=snapshot,
-                           full_grad=full_grad_fn(snapshot))
-    tracker = state.full_grad
-    v_prev = state.full_grad
-    for s in range(num_outer):
-        state = svrg.SvrgState(snapshot=snapshot,
-                               full_grad=full_grad_fn(snapshot))
-        grad_evals += m * n
-        inner_sum = jax.tree.map(jnp.zeros_like, params)
-        for k in range(inner_steps):
-            batch = dpsvrg._sample_batch(rng, full_data, batch_size)
-            w = jnp.asarray(schedule.matrix(t), jnp.float32)
-            params, tracker, v_prev = inner(
-                params, tracker, v_prev, state, batch, w, jnp.float32(alpha))
-            inner_sum = svrg.tree_add(inner_sum, params)
-            grad_evals += 2 * m * batch_size
-            t += 1
-            if record_every and t % record_every == 0:
-                hist_obj.append(obj(params))
-                hist_steps.append(t)
-                hist_ep.append(grad_evals / float(m * n))
-        snapshot = jax.tree.map(lambda acc: acc / inner_steps, inner_sum)
-        if not record_every:
-            hist_obj.append(obj(params))
-            hist_steps.append(t)
-            hist_ep.append(grad_evals / float(m * n))
-    return params, dpsvrg.RunHistory(
-        np.array(hist_obj), np.zeros(len(hist_obj)), np.array(hist_ep),
-        np.array(hist_steps), np.array(hist_steps))
+    problem = Problem(loss_fn, prox, x0_stacked, full_data, objective_fn)
+    algo = gt_svrg_algorithm(problem, alpha, num_outer, inner_steps,
+                             batch_size=batch_size)
+    res = runner_lib.run(algo, problem, schedule, seed=seed,
+                         record_every=record_every, scan=scan)
+    return res.params, res.history

@@ -1,11 +1,21 @@
-"""DPSVRG (paper Algorithm 1) and baselines (DSPG, DPG, centralized PGD).
+"""DPSVRG (paper Algorithm 1) and the DSPG baseline — thin wrappers.
 
-The module is purely functional: step builders consume a per-node minibatch
-gradient function and return jitted steps over *stacked* parameters (leading
-node axis of size m).  The same builders drive both the paper-faithful
-logistic-regression reproduction and the LM-scale trainer in
-``repro.train.steps`` — DPSVRG is the framework's decentralized data-parallel
-training rule, not a one-off script.
+The algorithms themselves now live behind the unified protocol in
+``repro.core.algorithm`` (state/step/outer + declarative metadata) and are
+driven by the single generic ``repro.core.runner.run`` loop, which owns batch
+sampling, time-varying gossip scheduling, metric recording, and the optional
+``lax.scan`` fast path.  This module keeps the historical entry points:
+
+* ``DPSVRGHyperParams`` / ``DSPGHyperParams`` — canonical home is
+  ``core.algorithm``; re-exported here.
+* ``build_dpsvrg_inner_step`` / ``build_dspg_step`` / ``build_node_grad_fn``
+  / ``build_node_full_grad_fn`` — re-exported step builders (also used by
+  ``core.inexact`` and the kernels' reference paths).
+* ``dpsvrg_run`` / ``dspg_run`` — **deprecated** compatibility wrappers over
+  ``runner.run``; seed-identical histories to the pre-refactor loops.
+  New code should build an ``Algorithm`` (``algorithm.ALGORITHMS``) and call
+  ``runner.run`` directly, which also exposes the scan fast path and
+  pluggable extra metric recorders.
 
 Algorithm 1 (per node i, inner step k of outer round s):
     v_i   = grad_B f_i(x_i) - grad_B f_i(x~_i) + full_grad_i(x~_i)
@@ -18,15 +28,19 @@ outer: x~_i^s = (1/K_s) sum_k x_i^(k,s),  K_s = ceil(beta^s n0),
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import gossip, graphs, prox as prox_lib, schedules, svrg
+from . import graphs, prox as prox_lib, runner as runner_lib
+from .algorithm import (DPSVRGHyperParams, DSPGHyperParams, Problem,
+                        build_dpsvrg_inner_step, build_dspg_step,
+                        build_node_full_grad_fn, build_node_grad_fn,
+                        dpsvrg_algorithm, dspg_algorithm)
+from .runner import RunHistory, objective_value as _runner_objective, \
+    sample_batch as _sample_batch_impl
 
 __all__ = [
     "DPSVRGHyperParams",
@@ -42,138 +56,14 @@ __all__ = [
 ]
 
 
-# ---------------------------------------------------------------------------
-# Hyper-parameters
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class DPSVRGHyperParams:
-    alpha: float = 0.01          # constant step size (the VR payoff)
-    beta: float = 1.07           # inner-loop growth base
-    n0: int = 8                  # initial inner-loop length
-    num_outer: int = 30          # S
-    batch_size: int = 1          # paper uses single-sample inner steps
-    k_max: int | None = None     # multi-consensus cap (None = faithful, k rounds at step k)
-    single_consensus: bool = False  # Fig.3 ablation: one gossip round per step
-    compress_bits: int | None = None  # int-quantized gossip w/ error feedback
-
-
-@dataclasses.dataclass(frozen=True)
-class DSPGHyperParams:
-    alpha0: float = 0.01
-    decay: float = 0.5           # alpha_k = alpha0 / (k+1)^decay
-    batch_size: int = 1
-    constant_step: bool = False  # with a constant step DSPG stalls (inexact convergence)
-
-
-# ---------------------------------------------------------------------------
-# Gradient function builders (stacked over nodes via vmap)
-# ---------------------------------------------------------------------------
-
-def build_node_grad_fn(loss_fn: Callable) -> Callable:
-    """loss_fn(params, batch)->scalar  =>  grad over stacked params.
-
-    Stacked signature: params leaves (m, ...), batch leaves (m, B, ...).
-    vmap over the node axis keeps each node's gradient private, exactly as in
-    decentralized learning — under GSPMD the vmapped axis is the node mesh
-    axis, so no cross-node communication happens here.
-    """
-    g = jax.grad(loss_fn)
-    return jax.vmap(g)
-
-
-def build_node_full_grad_fn(loss_fn: Callable, full_batch) -> Callable:
-    """Full local gradient closure over each node's entire dataset."""
-    g = jax.vmap(jax.grad(loss_fn))
-
-    def full_grad(params):
-        return g(params, full_batch)
-
-    return full_grad
-
-
-# ---------------------------------------------------------------------------
-# Jitted steps
-# ---------------------------------------------------------------------------
-
-def build_dpsvrg_inner_step(loss_fn: Callable, prox: prox_lib.Prox,
-                            compress_bits: int | None = None):
-    """Returns jitted ``step(params, svrg_state, batch, phi, alpha[, cstate])``
-    implementing Algorithm 1 lines 7-11 for all nodes at once.  With
-    ``compress_bits``, gossip carries quantized iterates with error feedback
-    (core.compression) and the step threads the compression state.
-    """
-    node_grad = build_node_grad_fn(loss_fn)
-
-    if compress_bits is None:
-        @jax.jit
-        def step(params, svrg_state, batch, phi, alpha):
-            v = svrg.corrected_gradient(node_grad, params, svrg_state, batch)
-            q = jax.tree.map(lambda x, vi: x - alpha * vi, params, v)
-            q_hat = gossip.mix_stacked(phi, q)
-            x = prox.apply(q_hat, alpha)
-            return x
-
-        return step
-
-    from . import compression
-
-    @jax.jit
-    def step_c(params, svrg_state, batch, phi, alpha, cstate):
-        v = svrg.corrected_gradient(node_grad, params, svrg_state, batch)
-        q = jax.tree.map(lambda x, vi: x - alpha * vi, params, v)
-        q_hat, cstate = compression.compressed_mix(phi, q, cstate,
-                                                   bits=compress_bits)
-        x = prox.apply(q_hat, alpha)
-        return x, cstate
-
-    return step_c
-
-
-def build_dspg_step(loss_fn: Callable, prox: prox_lib.Prox):
-    """DSPG [paper ref. 11]: plain stochastic gradient + single gossip + prox,
-    decaying step size."""
-    node_grad = build_node_grad_fn(loss_fn)
-
-    @jax.jit
-    def step(params, batch, w, alpha):
-        g = node_grad(params, batch)
-        q = jax.tree.map(lambda x, gi: x - alpha * gi, params, g)
-        q_hat = gossip.mix_stacked(w, q)
-        x = prox.apply(q_hat, alpha)
-        return x
-
-    return step
-
-
-# ---------------------------------------------------------------------------
-# Host-driven runs (paper-faithful reproduction scale)
-# ---------------------------------------------------------------------------
-
-class RunHistory(NamedTuple):
-    objective: np.ndarray          # F(x_bar) per recorded point
-    consensus: np.ndarray          # mean ||x_i - x_bar||
-    epochs: np.ndarray             # effective dataset passes at each point
-    comm_rounds: np.ndarray        # cumulative gossip rounds
-    steps: np.ndarray              # cumulative inner steps
-
-
 def _sample_batch(rng: np.random.Generator, data, batch_size: int):
-    """Sample per-node minibatch indices and gather. data leaves: (m, n, ...)."""
-    first = jax.tree.leaves(data)[0]
-    m, n = first.shape[0], first.shape[1]
-    idx = rng.integers(0, n, size=(m, batch_size))
-    return jax.tree.map(lambda a: np.take_along_axis(
-        a, idx.reshape(m, batch_size, *([1] * (a.ndim - 2))), axis=1), data)
+    """Deprecated alias of ``runner.sample_batch`` (kept for old imports)."""
+    return _sample_batch_impl(rng, data, batch_size)
 
 
 def _objective(loss_fn, prox, params, full_data) -> float:
-    """F(x_bar) = (1/m) sum_i f_i(x_bar) + h(x_bar)."""
-    xbar = gossip.node_mean(params)
-    m = jax.tree.leaves(params)[0].shape[0]
-    xbar_st = gossip.stack_tree(xbar, m)
-    losses = jax.vmap(loss_fn)(xbar_st, full_data)
-    return float(jnp.mean(losses) + prox.value(xbar))
+    """Deprecated alias of ``runner.objective_value``."""
+    return _runner_objective(loss_fn, prox, params, full_data)
 
 
 def dpsvrg_run(loss_fn: Callable,
@@ -184,80 +74,20 @@ def dpsvrg_run(loss_fn: Callable,
                hp: DPSVRGHyperParams,
                seed: int = 0,
                record_every: int = 1,
-               objective_fn: Callable | None = None) -> tuple[Any, RunHistory]:
-    """Faithful Algorithm 1.  ``full_data`` leaves: (m, n, ...) per-node data.
+               objective_fn: Callable | None = None,
+               scan: bool = False) -> tuple[Any, RunHistory]:
+    """Deprecated wrapper: faithful Algorithm 1 through the unified runner.
 
-    The snapshot x~^s for the next outer round is the *tail average* of the
-    inner iterates (line 13), not the final iterate; the final iterate
-    carries over as x^(0,s+1) (line 14).
+    ``full_data`` leaves: (m, n, ...) per-node data.  The snapshot x~^s for
+    the next outer round is the *tail average* of the inner iterates (line
+    13), not the final iterate; the final iterate carries over as x^(0,s+1)
+    (line 14).  ``scan=True`` enables the chunked ``lax.scan`` fast path.
     """
-    rng = np.random.default_rng(seed)
-    inner_step = build_dpsvrg_inner_step(loss_fn, prox,
-                                         compress_bits=hp.compress_bits)
-    full_grad_fn = build_node_full_grad_fn(loss_fn, full_data)
-    obj = objective_fn or (lambda p: _objective(loss_fn, prox, p, full_data))
-    cstate = None
-    if hp.compress_bits is not None:
-        from . import compression
-        cstate = compression.init_state(x0_stacked)
-
-    m = jax.tree.leaves(x0_stacked)[0].shape[0]
-    n = jax.tree.leaves(full_data)[0].shape[1]
-    params = x0_stacked           # x^(0,1)
-    snapshot_point = x0_stacked   # x~^0
-
-    hist_obj, hist_cons, hist_ep, hist_comm, hist_steps = [], [], [], [], []
-    grad_evals = 0       # single-sample gradient evaluations (epoch metric)
-    comm_rounds = 0
-    total_steps = 0
-    slot = 0             # time-varying schedule position
-
-    def record():
-        hist_obj.append(obj(params))
-        hist_cons.append(graphs.consensus_distance(
-            np.stack([np.concatenate([np.ravel(l[i]) for l in jax.tree.leaves(params)])
-                      for i in range(m)])))
-        hist_ep.append(grad_evals / float(m * n))
-        hist_comm.append(comm_rounds)
-        hist_steps.append(total_steps)
-
-    record()
-    ks = schedules.inner_loop_lengths(hp.beta, hp.n0, hp.num_outer)
-    for s, K_s in enumerate(ks, start=1):
-        # outer: full local gradient at the snapshot (line 5)
-        state = svrg.SvrgState(snapshot=snapshot_point,
-                               full_grad=full_grad_fn(snapshot_point))
-        grad_evals += m * n
-        inner_sum = jax.tree.map(jnp.zeros_like, params)
-        for k in range(1, K_s + 1):
-            batch = _sample_batch(rng, full_data, hp.batch_size)
-            rounds = 1 if hp.single_consensus else (
-                k if hp.k_max is None else min(k, hp.k_max))
-            phi = schedule.consensus_rounds(slot, rounds)
-            slot += rounds
-            comm_rounds += rounds
-            if cstate is None:
-                params = inner_step(params, state, batch,
-                                    jnp.asarray(phi, jnp.float32),
-                                    jnp.float32(hp.alpha))
-            else:
-                params, cstate = inner_step(params, state, batch,
-                                            jnp.asarray(phi, jnp.float32),
-                                            jnp.float32(hp.alpha), cstate)
-            inner_sum = svrg.tree_add(inner_sum, params)
-            grad_evals += 2 * m * hp.batch_size
-            total_steps += 1
-            if record_every and (k % record_every == 0):
-                record()
-        # x~^s = tail average (line 13); params carries over (line 14)
-        snapshot_point = jax.tree.map(lambda acc: acc / K_s, inner_sum)
-        if not record_every:
-            record()   # one point per outer round
-    if record_every:
-        record()
-    return params, RunHistory(np.array(hist_obj), np.array(hist_cons),
-                              np.array(hist_ep), np.array(hist_comm),
-                              np.array(hist_steps))
+    problem = Problem(loss_fn, prox, x0_stacked, full_data, objective_fn)
+    algo = dpsvrg_algorithm(problem, hp)
+    res = runner_lib.run(algo, problem, schedule, seed=seed,
+                         record_every=record_every, scan=scan)
+    return res.params, res.history
 
 
 def dspg_run(loss_fn: Callable,
@@ -269,41 +99,14 @@ def dspg_run(loss_fn: Callable,
              num_steps: int,
              seed: int = 0,
              record_every: int = 10,
-             objective_fn: Callable | None = None) -> tuple[Any, RunHistory]:
-    """DSPG baseline: one stochastic prox-gradient + one gossip per step."""
-    rng = np.random.default_rng(seed)
-    step_fn = build_dspg_step(loss_fn, prox)
-    obj = objective_fn or (lambda p: _objective(loss_fn, prox, p, full_data))
-    step_size = (schedules.constant(hp.alpha0) if hp.constant_step
-                 else schedules.dspg_stepsize(hp.alpha0, hp.decay))
-
-    m = jax.tree.leaves(x0_stacked)[0].shape[0]
-    n = jax.tree.leaves(full_data)[0].shape[1]
-    params = x0_stacked
-    hist_obj, hist_cons, hist_ep, hist_comm, hist_steps = [], [], [], [], []
-    grad_evals = 0
-
-    def record(t):
-        hist_obj.append(obj(params))
-        hist_cons.append(graphs.consensus_distance(
-            np.stack([np.concatenate([np.ravel(l[i]) for l in jax.tree.leaves(params)])
-                      for i in range(m)])))
-        hist_ep.append(grad_evals / float(m * n))
-        hist_comm.append(t)
-        hist_steps.append(t)
-
-    record(0)
-    for t in range(1, num_steps + 1):
-        batch = _sample_batch(rng, full_data, hp.batch_size)
-        w = schedule.matrix(t)
-        params = step_fn(params, batch, jnp.asarray(w, jnp.float32),
-                         jnp.float32(step_size(t)))
-        grad_evals += m * hp.batch_size
-        if t % record_every == 0 or t == num_steps:
-            record(t)
-    return params, RunHistory(np.array(hist_obj), np.array(hist_cons),
-                              np.array(hist_ep), np.array(hist_comm),
-                              np.array(hist_steps))
+             objective_fn: Callable | None = None,
+             scan: bool = False) -> tuple[Any, RunHistory]:
+    """Deprecated wrapper: DSPG baseline through the unified runner."""
+    problem = Problem(loss_fn, prox, x0_stacked, full_data, objective_fn)
+    algo = dspg_algorithm(problem, hp, num_steps)
+    res = runner_lib.run(algo, problem, schedule, seed=seed,
+                         record_every=record_every, scan=scan)
+    return res.params, res.history
 
 
 def centralized_prox_gd(loss_fn: Callable, prox: prox_lib.Prox, x0, full_data_flat,

@@ -31,6 +31,20 @@ from jax.sharding import PartitionSpec as P
 
 from . import graphs
 
+# jax.shard_map landed in newer releases (with check_vma); 0.4.x ships it as
+# jax.experimental.shard_map.shard_map (with check_rep).  Normalize both to
+# _shard_map(f, mesh, in_specs, out_specs) with replication checks off.
+if hasattr(jax, "shard_map"):
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _experimental_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                       out_specs=out_specs, check_rep=False)
+
 __all__ = [
     "mix_stacked",
     "multi_consensus_matrix",
@@ -194,7 +208,5 @@ def ring_mix_shardmap(x_flat: jax.Array, mesh, axis: str,
                 x = self_weight * x + side * up + side * dn
         return x
 
-    shard = jax.shard_map(
-        _local, mesh=mesh,
-        in_specs=P(axis), out_specs=P(axis), check_vma=False)
+    shard = _shard_map(_local, mesh, P(axis), P(axis))
     return shard(x_flat)

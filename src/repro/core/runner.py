@@ -1,0 +1,307 @@
+"""The single generic driver for every decentralized algorithm.
+
+``run(algo, problem, schedule, ...)`` owns what the five historical ``*_run``
+loops each re-implemented: per-node minibatch sampling, time-varying
+gossip-matrix scheduling (multi-consensus products off the schedule's slot
+stream), epoch / communication accounting, metric recording with pluggable
+extra recorders, and outer-round orchestration.  Algorithms only supply the
+:class:`~repro.core.algorithm.Algorithm` state/step/outer triple plus
+declarative metadata.
+
+Two execution paths:
+
+* **host loop** (default): one device dispatch per inner step, iterating the
+  algorithm's ``step`` exactly like the historical loops — bit-for-bit
+  reproducible against them at a fixed seed (tests/test_algorithm_api.py).
+* **``lax.scan`` fast path** (``scan=True``): between two metric records the
+  driver pre-samples the chunk of minibatches, pre-stacks the chunk's gossip
+  matrices and step sizes, and executes the whole chunk in ONE compiled
+  device dispatch — removing per-step Python/dispatch overhead from the hot
+  path.  Host-side rng draws happen in the same order as the host loop, so
+  both paths consume identical batches; results agree to float tolerance
+  (XLA may fuse the scanned body differently).  Chunks of distinct lengths
+  retrace the scan body once per length (pick ``record_every`` dividing the
+  loop lengths to compile once).
+
+The terminal record is deduplicated: the historical DPSVRG loop appended a
+final history point even when the last inner step had just been recorded,
+duplicating the last row whenever ``K_S % record_every == 0``.  The unified
+recorder only emits the terminal point if the last step wasn't recorded.
+"""
+
+from __future__ import annotations
+
+import weakref
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import algorithm as algorithm_lib, gossip, graphs
+
+__all__ = ["RunHistory", "RunResult", "Recorder", "run", "sample_batch"]
+
+
+class RunHistory(NamedTuple):
+    objective: np.ndarray          # F(x_bar) per recorded point
+    consensus: np.ndarray          # mean ||x_i - x_bar||
+    epochs: np.ndarray             # effective dataset passes at each point
+    comm_rounds: np.ndarray        # cumulative gossip rounds
+    steps: np.ndarray              # cumulative inner steps
+
+
+class RunResult(NamedTuple):
+    params: Any                    # final stacked iterate
+    history: RunHistory
+    extras: dict                   # name -> np.ndarray from extra recorders
+
+
+def sample_batch(rng: np.random.Generator, data, batch_size: int):
+    """Sample per-node minibatch indices and gather. data leaves: (m, n, ...)."""
+    first = jax.tree.leaves(data)[0]
+    m, n = first.shape[0], first.shape[1]
+    idx = rng.integers(0, n, size=(m, batch_size))
+    return jax.tree.map(lambda a: np.take_along_axis(
+        a, idx.reshape(m, batch_size, *([1] * (a.ndim - 2))), axis=1), data)
+
+
+def objective_value(loss_fn, prox, params, full_data) -> float:
+    """F(x_bar) = (1/m) sum_i f_i(x_bar) + h(x_bar)."""
+    xbar = gossip.node_mean(params)
+    m = jax.tree.leaves(params)[0].shape[0]
+    xbar_st = gossip.stack_tree(xbar, m)
+    losses = jax.vmap(loss_fn)(xbar_st, full_data)
+    return float(jnp.mean(losses) + prox.value(xbar))
+
+
+class Recorder:
+    """Accumulates the RunHistory columns under the algorithm's metric
+    conventions, plus arbitrary extra metrics ``name -> fn(params) -> float``.
+    """
+
+    def __init__(self, objective_fn: Callable, meta, m: int, n: int,
+                 extra_metrics: dict | None = None):
+        self._obj = objective_fn
+        self._meta = meta
+        self._m, self._n = m, n
+        self._extra = extra_metrics or {}
+        self._cols = {k: [] for k in RunHistory._fields}
+        self._extras = {k: [] for k in self._extra}
+
+    def record(self, params, *, t: int, grad_evals: int, comm_rounds: int):
+        meta = self._meta
+        self._cols["objective"].append(self._obj(params))
+        if meta.track_consensus:
+            cons = graphs.consensus_distance(np.stack(
+                [np.concatenate([np.ravel(l[i])
+                                 for l in jax.tree.leaves(params)])
+                 for i in range(self._m)]))
+        else:
+            cons = 0.0
+        self._cols["consensus"].append(cons)
+        self._cols["epochs"].append(
+            grad_evals / float(self._m * self._n)
+            if meta.epoch_metric == "grad" else float(t))
+        self._cols["comm_rounds"].append(
+            comm_rounds if meta.comm_metric == "gossip" else t)
+        self._cols["steps"].append(t)
+        for name, fn in self._extra.items():
+            self._extras[name].append(fn(params))
+
+    def history(self) -> RunHistory:
+        return RunHistory(**{k: np.array(v) for k, v in self._cols.items()})
+
+    def extras(self) -> dict:
+        return {k: np.array(v) for k, v in self._extras.items()}
+
+
+# Compiled chunk executors are cached per Algorithm instance: a fresh
+# ``jax.jit`` wrapper per run() would retrace every chunk shape on every run.
+_SCAN_EXEC_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _make_scan_exec(algo):
+    """One compiled dispatch executing a whole chunk of inner steps."""
+    cached = _SCAN_EXEC_CACHE.get(algo)
+    if cached is not None:
+        return cached
+    # close over the step function only, NOT the Algorithm: a cached value
+    # referencing the weak key would pin every Algorithm (and its closed-over
+    # dataset) forever
+    step_fn = algo.step
+    has_batch = algo.meta.batch_size > 0
+
+    def body(state, xs):
+        if has_batch:
+            batch, phi, alpha = xs
+        else:
+            phi, alpha = xs
+        return step_fn(state, batch if has_batch else None, phi, alpha), None
+
+    @jax.jit
+    def exec_chunk(state, xs):
+        return jax.lax.scan(body, state, xs)[0]
+
+    _SCAN_EXEC_CACHE[algo] = exec_chunk
+    return exec_chunk
+
+
+def _stack_inputs(meta, batches, phis, alphas):
+    phis = jnp.asarray(np.stack(phis), jnp.float32)
+    alphas = jnp.asarray(np.array(alphas, np.float32))
+    if meta.batch_size > 0:
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+        return (batch, phis, alphas)
+    return (phis, alphas)
+
+
+def run(algo: algorithm_lib.Algorithm,
+        problem: algorithm_lib.Problem,
+        schedule: graphs.MixingSchedule,
+        *,
+        seed: int = 0,
+        record_every: int = 1,
+        scan: bool = False,
+        extra_metrics: dict | None = None) -> RunResult:
+    """Drive ``algo`` on ``problem`` over the time-varying ``schedule``.
+
+    record_every: history cadence in inner steps; 0 = once per outer round
+                  (outer/inner methods only).
+    scan:         use the ``lax.scan`` chunked fast path.
+    extra_metrics: ``{name: fn(stacked_params) -> float}`` recorded alongside
+                  the standard history columns (returned in ``extras``).
+    """
+    meta = algo.meta
+    rng = np.random.default_rng(seed)
+    m = jax.tree.leaves(problem.x0)[0].shape[0]
+    n = jax.tree.leaves(problem.full_data)[0].shape[1]
+    obj = problem.objective_fn or (
+        lambda p: objective_value(problem.loss_fn, problem.prox, p,
+                                  problem.full_data))
+    rec = Recorder(obj, meta, m, n, extra_metrics)
+    exec_chunk = _make_scan_exec(algo) if scan else None
+    # sample minibatches from a host-side copy: per-step np gathers on device
+    # arrays would silently round-trip the whole dataset every step
+    host_data = (jax.tree.map(np.asarray, problem.full_data)
+                 if meta.batch_size > 0 else problem.full_data)
+
+    state = algo.init()
+    grad_evals = m * n if meta.init_full_grad else 0
+    full_grad_cost = m * n
+    comm = 0
+    slot = meta.slot_start
+    t = 0
+
+    def phi_for(rounds: int):
+        nonlocal slot, comm
+        phi = schedule.consensus_rounds(slot, rounds)
+        slot += rounds
+        comm += rounds
+        return phi
+
+    def do_record(params=None):
+        rec.record(params if params is not None else algo.get_params(state),
+                   t=t, grad_evals=grad_evals, comm_rounds=comm)
+
+    do_record()
+
+    if meta.outer_lengths is not None:
+        # ---- outer/inner structure (DPSVRG, GT-SVRG) ----------------------
+        just_recorded = False
+        for K in meta.outer_lengths:
+            state = algo.outer(state)
+            if meta.outer_full_grad:
+                grad_evals += full_grad_cost
+            k = 0
+            while k < K:
+                if scan:
+                    key0 = k if meta.record_key == "round" else t
+                    until = (record_every - key0 % record_every
+                             if record_every else K - k)
+                    chunk = min(K - k, until)
+                    batches, phis, alphas = [], [], []
+                    for j in range(chunk):
+                        if meta.batch_size > 0:
+                            batches.append(sample_batch(
+                                rng, host_data, meta.batch_size))
+                        phis.append(phi_for(meta.gossip_rounds(k + j + 1)))
+                        alphas.append(meta.stepsize(t + j + 1))
+                    state = exec_chunk(
+                        state, _stack_inputs(meta, batches, phis, alphas))
+                    k += chunk
+                    t += chunk
+                    grad_evals += (chunk * meta.step_grad_factor * m
+                                   * meta.batch_size)
+                else:
+                    k += 1
+                    t += 1
+                    batch = (sample_batch(rng, host_data, meta.batch_size)
+                             if meta.batch_size > 0 else None)
+                    phi = jnp.asarray(phi_for(meta.gossip_rounds(k)),
+                                      jnp.float32)
+                    state = algo.step(state, batch, phi,
+                                      jnp.float32(meta.stepsize(t)))
+                    grad_evals += meta.step_grad_factor * m * meta.batch_size
+                key = k if meta.record_key == "round" else t
+                if record_every and key % record_every == 0:
+                    do_record()
+                    just_recorded = True
+                else:
+                    just_recorded = False
+            if algo.end_outer is not None:
+                state = algo.end_outer(state, K)
+            if not record_every:
+                do_record()
+        if record_every and meta.final_record and not just_recorded:
+            do_record()
+    else:
+        # ---- flat loop (DSPG, DPG, loopless DPSVRG) -----------------------
+        if record_every < 1:
+            raise ValueError(
+                f"{meta.name}: flat loops need record_every >= 1")
+        num_steps = meta.num_steps
+        while t < num_steps:
+            if scan:
+                until = record_every - t % record_every
+                chunk_max = min(num_steps - t, until)
+                batches, phis, alphas = [], [], []
+                refresh = False
+                chunk = 0
+                for j in range(chunk_max):
+                    if meta.batch_size > 0:
+                        batches.append(sample_batch(
+                            rng, host_data, meta.batch_size))
+                    phis.append(phi_for(meta.gossip_rounds(t + j + 1)))
+                    alphas.append(meta.stepsize(t + j + 1))
+                    chunk += 1
+                    if (meta.snapshot_prob is not None
+                            and rng.random() < meta.snapshot_prob):
+                        refresh = True   # snapshot lands here: cut the chunk
+                        break
+                state = exec_chunk(
+                    state, _stack_inputs(meta, batches, phis, alphas))
+                t += chunk
+                grad_evals += chunk * meta.step_grad_factor * m * meta.batch_size
+                if refresh:
+                    state = algo.outer(state)
+                    if meta.outer_full_grad:
+                        grad_evals += full_grad_cost
+            else:
+                t += 1
+                batch = (sample_batch(rng, host_data, meta.batch_size)
+                         if meta.batch_size > 0 else None)
+                phi = jnp.asarray(phi_for(meta.gossip_rounds(t)), jnp.float32)
+                state = algo.step(state, batch, phi,
+                                  jnp.float32(meta.stepsize(t)))
+                grad_evals += meta.step_grad_factor * m * meta.batch_size
+                if (meta.snapshot_prob is not None
+                        and rng.random() < meta.snapshot_prob):
+                    state = algo.outer(state)
+                    if meta.outer_full_grad:
+                        grad_evals += full_grad_cost
+            if t % record_every == 0 or t == num_steps:
+                do_record()
+
+    return RunResult(params=algo.get_params(state), history=rec.history(),
+                     extras=rec.extras())

@@ -1,0 +1,28 @@
+"""Cross-version Pallas TPU compatibility shims.
+
+JAX 0.4.x exposes the TPU lowering knobs as ``pltpu.TPUCompilerParams``;
+newer releases renamed the class to ``pltpu.CompilerParams``.  All three
+kernel packages (flash_attention, fused_update, rmsnorm) build their
+``compiler_params`` through this shim so a JAX upgrade touches one line.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# Newer JAX renamed TPUCompilerParams -> CompilerParams; pick whichever the
+# installed version ships.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["compiler_params"]
+
+
+def compiler_params(dimension_semantics: tuple[str, ...], **kwargs):
+    """Build TPU compiler params portably.
+
+    ``dimension_semantics`` marks each grid axis "parallel" or "arbitrary"
+    (sequential); extra kwargs pass through to the underlying class.
+    """
+    return _COMPILER_PARAMS_CLS(dimension_semantics=dimension_semantics,
+                                **kwargs)

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..compat import compiler_params
+
 __all__ = ["svrg_step_kernel_call", "mix_prox_kernel_call", "BLOCK_ROWS",
            "BLOCK_COLS"]
 
@@ -56,6 +58,8 @@ def _grid_call(kernel, scalars, operands, interpret: bool):
         in_specs=[scalar_spec] + [block] * len(operands),
         out_specs=block,
         out_shape=jax.ShapeDtypeStruct(operands[0].shape, operands[0].dtype),
+        # elementwise over independent row blocks: fully parallel grid
+        compiler_params=compiler_params(("parallel",)),
         interpret=interpret,
     )(scalars, *operands)
 

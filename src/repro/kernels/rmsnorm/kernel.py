@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..compat import compiler_params
+
 __all__ = ["rmsnorm_kernel_call", "BLOCK_ROWS"]
 
 BLOCK_ROWS = 8
@@ -46,5 +48,7 @@ def rmsnorm_kernel_call(x, weight, eps: float = 1e-6, *, interpret: bool):
         ],
         out_specs=pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        # per-row reduction only: the row grid is embarrassingly parallel
+        compiler_params=compiler_params(("parallel",)),
         interpret=interpret,
     )(x, weight)

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import gossip, prox as prox_lib, svrg
+from repro.core import algorithm as algo_lib, gossip, prox as prox_lib, svrg
 from repro.models import transformer
 from repro.models.api import ModelConfig
 from . import sharding
@@ -85,11 +85,14 @@ def build_train_step(cfg: ModelConfig,
                      m: int,
                      plan: sharding.MeshPlan | None = None,
                      mesh=None,
-                     algorithm: str = "dpsvrg",
+                     algorithm: str | algo_lib.UpdateRule = "dpsvrg",
                      gossip_offsets: tuple | None = None,
                      donate: bool = True) -> TrainBundle:
-    """``algorithm``: dpsvrg | dspg (no variance reduction, for the baseline
-    roofline/convergence comparisons).
+    """``algorithm``: an ``UpdateRule`` from ``repro.core.algorithm`` (or its
+    registry name: dpsvrg | dspg).  The LM train step is the SAME prox-gossip
+    update the repro-scale runner executes — ``algo_lib.prox_gossip_update``
+    with the rule's gradient direction — so decentralized LM training and the
+    paper reproduction cannot drift apart.
 
     ``gossip_offsets``: None -> dense `phi @ stacked` einsum (paper-faithful
     baseline lowering; GSPMD all-gathers all m copies).  A tuple of cyclic
@@ -97,25 +100,23 @@ def build_train_step(cfg: ModelConfig,
     argument becomes the (n_bands, m) coefficient matrix
     (`gossip.bands_for_phi`), each band lowering to one collective-permute —
     numerically identical, O(degree) instead of O(m) communication."""
+    rule = (algo_lib.UPDATE_RULES[algorithm] if isinstance(algorithm, str)
+            else algorithm)
     loss = transformer.loss_fn(cfg)
     vgrad = jax.vmap(jax.value_and_grad(loss))
     grad_only = jax.vmap(jax.grad(loss))
+    if gossip_offsets is None:
+        mix_fn = gossip.mix_stacked
+    else:
+        mix_fn = functools.partial(gossip.mix_stacked_banded, gossip_offsets)
 
     def train_step(state: TrainState, batch, phi, alpha):
         losses, g_now = vgrad(state.params, batch)
-        if algorithm == "dpsvrg":
-            g_snap = grad_only(state.snapshot, batch)
-            v = jax.tree.map(lambda a, b, mu: a - b + mu,
-                             g_now, g_snap, state.full_grad)
-        else:  # dspg: raw stochastic gradient
-            v = g_now
-        q = jax.tree.map(lambda x, vi: x - alpha * vi.astype(x.dtype),
-                         state.params, v)
-        if gossip_offsets is None:
-            q_hat = gossip.mix_stacked(phi, q)
-        else:
-            q_hat = gossip.mix_stacked_banded(gossip_offsets, phi, q)
-        new_params = prox.apply(q_hat, alpha)
+        g_snap = grad_only(state.snapshot, batch) if rule.needs_snapshot \
+            else None
+        v = rule.direction(g_now, g_snap, state.full_grad)
+        new_params = algo_lib.prox_gossip_update(state.params, v, phi, alpha,
+                                                 prox, mix_fn=mix_fn)
         metrics = {
             "loss": jnp.mean(losses),
             "v_norm": svrg.tree_norm(v),

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt_lib
-from repro.core import gossip, graphs, prox as prox_lib, schedules
+from repro.core import algorithm as algo_lib, gossip, graphs, \
+    prox as prox_lib, schedules
 from repro.models.api import ModelConfig
 from . import steps as steps_lib
 
@@ -32,7 +33,7 @@ class TrainerConfig:
     snapshot_batch_mult: int = 4    # "full" gradient ~ mult x minibatch
     alpha: float = 0.05
     consensus_rounds: int = 2       # capped multi-consensus
-    algorithm: str = "dpsvrg"       # dpsvrg | dspg
+    algorithm: str = "dpsvrg"       # core.algorithm.UPDATE_RULES name (or an UpdateRule)
     gossip: str = "dense"           # dense | banded (O(degree) collectives)
     lr_schedule: str = "constant"   # constant | wsd | cosine
     log_every: int = 10
@@ -63,11 +64,15 @@ def train_loop(cfg: ModelConfig,
     (leaves (m, B, ...)); ``snapshot_batch_iter`` yields the large batches
     for the outer-loop gradient refresh (defaults to batch_iter)."""
     m = schedule.m
+    # the LM step shares the decentralized update rule with the repro-scale
+    # runner — resolve it once here so an unknown name fails fast
+    rule = algo_lib.UPDATE_RULES[tc.algorithm] \
+        if isinstance(tc.algorithm, str) else tc.algorithm
     offsets = None
     if tc.gossip == "banded":
         offsets = gossip.schedule_band_offsets(schedule, tc.consensus_rounds)
     bundle = steps_lib.build_train_step(cfg, prox, m, plan=plan, mesh=mesh,
-                                        algorithm=tc.algorithm,
+                                        algorithm=rule,
                                         gossip_offsets=offsets, donate=False)
     state = bundle.init_state(jax.random.PRNGKey(tc.seed))
     snapshot_batch_iter = snapshot_batch_iter or batch_iter
@@ -77,7 +82,7 @@ def train_loop(cfg: ModelConfig,
     slot = 0
     t0 = time.time()
     for step in range(tc.num_steps):
-        if tc.algorithm == "dpsvrg" and step % tc.snapshot_every == 0:
+        if rule.needs_snapshot and step % tc.snapshot_every == 0:
             big = next(snapshot_batch_iter)
             big = jax.tree.map(jnp.asarray, big)
             state = bundle.snapshot_step(state, big)
@@ -86,7 +91,9 @@ def train_loop(cfg: ModelConfig,
         if offsets is not None:
             phi = gossip.bands_for_phi(phi, offsets)
         slot += tc.consensus_rounds
-        alpha = lr(step) if tc.algorithm == "dpsvrg" else \
+        # VR-type rules (snapshot-corrected) take the configured LR schedule;
+        # plain stochastic rules need the DSPG decaying step to converge
+        alpha = lr(step) if rule.needs_snapshot else \
             schedules.dspg_stepsize(tc.alpha)(step)
         state, metrics = bundle.train_step(
             state, batch, jnp.asarray(phi, jnp.float32), jnp.float32(alpha))

@@ -1,0 +1,252 @@
+"""Frozen pre-refactor host loops — the bit-for-bit oracle for the unified
+``repro.core.runner`` driver.
+
+These are verbatim copies of the bespoke ``*_run`` loops that shipped before
+the `Algorithm` protocol existed (one copy-pasted loop per method).  They are
+kept ONLY as the reference implementation for
+``tests/test_algorithm_api.py``: at a fixed seed the new runner must
+reproduce each loop's ``RunHistory`` exactly (modulo the documented
+double-final-record fix).  Do not use these in library code.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dpsvrg, graphs, prox as prox_lib, schedules, svrg
+from repro.core.dpsvrg import (RunHistory, _objective, _sample_batch,
+                               build_dpsvrg_inner_step, build_dspg_step,
+                               build_node_full_grad_fn, build_node_grad_fn)
+
+
+def legacy_dpsvrg_run(loss_fn, prox, x0_stacked, full_data, schedule, hp,
+                      seed=0, record_every=1, objective_fn=None):
+    rng = np.random.default_rng(seed)
+    inner_step = build_dpsvrg_inner_step(loss_fn, prox,
+                                         compress_bits=hp.compress_bits)
+    full_grad_fn = build_node_full_grad_fn(loss_fn, full_data)
+    obj = objective_fn or (lambda p: _objective(loss_fn, prox, p, full_data))
+    cstate = None
+    if hp.compress_bits is not None:
+        from repro.core import compression
+        cstate = compression.init_state(x0_stacked)
+
+    m = jax.tree.leaves(x0_stacked)[0].shape[0]
+    n = jax.tree.leaves(full_data)[0].shape[1]
+    params = x0_stacked
+    snapshot_point = x0_stacked
+
+    hist_obj, hist_cons, hist_ep, hist_comm, hist_steps = [], [], [], [], []
+    grad_evals = 0
+    comm_rounds = 0
+    total_steps = 0
+    slot = 0
+
+    def record():
+        hist_obj.append(obj(params))
+        hist_cons.append(graphs.consensus_distance(
+            np.stack([np.concatenate([np.ravel(l[i]) for l in jax.tree.leaves(params)])
+                      for i in range(m)])))
+        hist_ep.append(grad_evals / float(m * n))
+        hist_comm.append(comm_rounds)
+        hist_steps.append(total_steps)
+
+    record()
+    ks = schedules.inner_loop_lengths(hp.beta, hp.n0, hp.num_outer)
+    for s, K_s in enumerate(ks, start=1):
+        state = svrg.SvrgState(snapshot=snapshot_point,
+                               full_grad=full_grad_fn(snapshot_point))
+        grad_evals += m * n
+        inner_sum = jax.tree.map(jnp.zeros_like, params)
+        for k in range(1, K_s + 1):
+            batch = _sample_batch(rng, full_data, hp.batch_size)
+            rounds = 1 if hp.single_consensus else (
+                k if hp.k_max is None else min(k, hp.k_max))
+            phi = schedule.consensus_rounds(slot, rounds)
+            slot += rounds
+            comm_rounds += rounds
+            if cstate is None:
+                params = inner_step(params, state, batch,
+                                    jnp.asarray(phi, jnp.float32),
+                                    jnp.float32(hp.alpha))
+            else:
+                params, cstate = inner_step(params, state, batch,
+                                            jnp.asarray(phi, jnp.float32),
+                                            jnp.float32(hp.alpha), cstate)
+            inner_sum = svrg.tree_add(inner_sum, params)
+            grad_evals += 2 * m * hp.batch_size
+            total_steps += 1
+            if record_every and (k % record_every == 0):
+                record()
+        snapshot_point = jax.tree.map(lambda acc: acc / K_s, inner_sum)
+        if not record_every:
+            record()
+    if record_every:
+        record()   # NOTE: duplicates the last point when K_s % record_every == 0
+    return params, RunHistory(np.array(hist_obj), np.array(hist_cons),
+                              np.array(hist_ep), np.array(hist_comm),
+                              np.array(hist_steps))
+
+
+def legacy_dspg_run(loss_fn, prox, x0_stacked, full_data, schedule, hp,
+                    num_steps, seed=0, record_every=10, objective_fn=None):
+    rng = np.random.default_rng(seed)
+    step_fn = build_dspg_step(loss_fn, prox)
+    obj = objective_fn or (lambda p: _objective(loss_fn, prox, p, full_data))
+    step_size = (schedules.constant(hp.alpha0) if hp.constant_step
+                 else schedules.dspg_stepsize(hp.alpha0, hp.decay))
+
+    m = jax.tree.leaves(x0_stacked)[0].shape[0]
+    n = jax.tree.leaves(full_data)[0].shape[1]
+    params = x0_stacked
+    hist_obj, hist_cons, hist_ep, hist_comm, hist_steps = [], [], [], [], []
+    grad_evals = 0
+
+    def record(t):
+        hist_obj.append(obj(params))
+        hist_cons.append(graphs.consensus_distance(
+            np.stack([np.concatenate([np.ravel(l[i]) for l in jax.tree.leaves(params)])
+                      for i in range(m)])))
+        hist_ep.append(grad_evals / float(m * n))
+        hist_comm.append(t)
+        hist_steps.append(t)
+
+    record(0)
+    for t in range(1, num_steps + 1):
+        batch = _sample_batch(rng, full_data, hp.batch_size)
+        w = schedule.matrix(t)
+        params = step_fn(params, batch, jnp.asarray(w, jnp.float32),
+                         jnp.float32(step_size(t)))
+        grad_evals += m * hp.batch_size
+        if t % record_every == 0 or t == num_steps:
+            record(t)
+    return params, RunHistory(np.array(hist_obj), np.array(hist_cons),
+                              np.array(hist_ep), np.array(hist_comm),
+                              np.array(hist_steps))
+
+
+def legacy_loopless_dpsvrg_run(loss_fn, prox, x0_stacked, full_data, schedule,
+                               alpha, num_steps, snapshot_prob=0.05,
+                               consensus_rounds=2, batch_size=1, seed=0,
+                               record_every=10, objective_fn=None):
+    rng = np.random.default_rng(seed)
+    inner_step = build_dpsvrg_inner_step(loss_fn, prox)
+    full_grad_fn = build_node_full_grad_fn(loss_fn, full_data)
+    obj = objective_fn or (lambda p: _objective(loss_fn, prox, p, full_data))
+
+    m = jax.tree.leaves(x0_stacked)[0].shape[0]
+    n = jax.tree.leaves(full_data)[0].shape[1]
+    params = x0_stacked
+    state = svrg.SvrgState(snapshot=params, full_grad=full_grad_fn(params))
+    grad_evals = m * n
+    slot = 0
+    hist_obj, hist_ep, hist_steps = [obj(params)], [grad_evals / (m * n)], [0]
+    for t in range(1, num_steps + 1):
+        batch = _sample_batch(rng, full_data, batch_size)
+        phi = schedule.consensus_rounds(slot, consensus_rounds)
+        slot += consensus_rounds
+        params = inner_step(params, state, batch,
+                            jnp.asarray(phi, jnp.float32), jnp.float32(alpha))
+        grad_evals += 2 * m * batch_size
+        if rng.random() < snapshot_prob:
+            state = svrg.SvrgState(snapshot=params,
+                                   full_grad=full_grad_fn(params))
+            grad_evals += m * n
+        if t % record_every == 0 or t == num_steps:
+            hist_obj.append(obj(params))
+            hist_ep.append(grad_evals / float(m * n))
+            hist_steps.append(t)
+    return params, RunHistory(
+        np.array(hist_obj), np.zeros(len(hist_obj)), np.array(hist_ep),
+        np.array(hist_steps), np.array(hist_steps))
+
+
+def legacy_dpg_run(loss_fn, prox, x0_stacked, full_data, schedule, alpha,
+                   num_steps, record_every=10, objective_fn=None):
+    full_grad_fn = build_node_full_grad_fn(loss_fn, full_data)
+    obj = objective_fn or (lambda p: _objective(loss_fn, prox, p, full_data))
+    from repro.core import gossip
+
+    @jax.jit
+    def step(params, w, a):
+        g = full_grad_fn(params)
+        q = jax.tree.map(lambda x, gi: x - a * gi, params, g)
+        q_hat = gossip.mix_stacked(w, q)
+        return prox.apply(q_hat, a)
+
+    m = jax.tree.leaves(x0_stacked)[0].shape[0]
+    params = x0_stacked
+    hist_obj, hist_ep, hist_steps = [obj(params)], [0.0], [0]
+    for t in range(1, num_steps + 1):
+        params = step(params, jnp.asarray(schedule.matrix(t), jnp.float32),
+                      jnp.float32(alpha))
+        if t % record_every == 0 or t == num_steps:
+            hist_obj.append(obj(params))
+            hist_ep.append(float(t))
+            hist_steps.append(t)
+    return params, RunHistory(
+        np.array(hist_obj), np.zeros(len(hist_obj)), np.array(hist_ep),
+        np.array(hist_steps), np.array(hist_steps))
+
+
+def legacy_gt_svrg_run(loss_fn, prox, x0_stacked, full_data, schedule, alpha,
+                       num_outer, inner_steps, batch_size=1, seed=0,
+                       record_every=0, objective_fn=None):
+    rng = np.random.default_rng(seed)
+    node_grad = build_node_grad_fn(loss_fn)
+    full_grad_fn = build_node_full_grad_fn(loss_fn, full_data)
+    obj = objective_fn or (lambda p: _objective(loss_fn, prox, p, full_data))
+    from repro.core import gossip
+
+    @jax.jit
+    def inner(params, tracker, v_prev, state, batch, w, a):
+        q = jax.tree.map(lambda x, y: x - a * y, params, tracker)
+        q_hat = gossip.mix_stacked(w, q)
+        new_params = prox.apply(q_hat, a)
+        v_new = svrg.corrected_gradient(node_grad, new_params, state, batch)
+        new_tracker = jax.tree.map(
+            lambda ty, vn, vp: ty + vn - vp,
+            gossip.mix_stacked(w, tracker), v_new, v_prev)
+        return new_params, new_tracker, v_new
+
+    m = jax.tree.leaves(x0_stacked)[0].shape[0]
+    n = jax.tree.leaves(full_data)[0].shape[1]
+    params = x0_stacked
+    snapshot = x0_stacked
+    hist_obj, hist_steps = [obj(params)], [0]
+    t = 0
+    grad_evals = 0
+    hist_ep = [0.0]
+    state = svrg.SvrgState(snapshot=snapshot,
+                           full_grad=full_grad_fn(snapshot))
+    tracker = state.full_grad
+    v_prev = state.full_grad
+    for s in range(num_outer):
+        state = svrg.SvrgState(snapshot=snapshot,
+                               full_grad=full_grad_fn(snapshot))
+        grad_evals += m * n
+        inner_sum = jax.tree.map(jnp.zeros_like, params)
+        for k in range(inner_steps):
+            batch = _sample_batch(rng, full_data, batch_size)
+            w = jnp.asarray(schedule.matrix(t), jnp.float32)
+            params, tracker, v_prev = inner(
+                params, tracker, v_prev, state, batch, w, jnp.float32(alpha))
+            inner_sum = svrg.tree_add(inner_sum, params)
+            grad_evals += 2 * m * batch_size
+            t += 1
+            if record_every and t % record_every == 0:
+                hist_obj.append(obj(params))
+                hist_steps.append(t)
+                hist_ep.append(grad_evals / float(m * n))
+        snapshot = jax.tree.map(lambda acc: acc / inner_steps, inner_sum)
+        if not record_every:
+            hist_obj.append(obj(params))
+            hist_steps.append(t)
+            hist_ep.append(grad_evals / float(m * n))
+    return params, RunHistory(
+        np.array(hist_obj), np.zeros(len(hist_obj)), np.array(hist_ep),
+        np.array(hist_steps), np.array(hist_steps))

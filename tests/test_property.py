@@ -3,6 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dependency; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import gossip, graphs, prox as prox_lib
