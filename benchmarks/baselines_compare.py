@@ -7,9 +7,7 @@ the cost axis on which variance reduction wins."""
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.core import baselines, dpsvrg, gossip, graphs, prox
+from repro.core import dpsvrg, graphs
 from . import common
 
 
@@ -18,21 +16,21 @@ def run(scale: float = 0.02, alpha: float = 0.2):
     data, flat, h, x0, d = common.setup_problem("adult_like", scale)
     fs = common.f_star(flat, h, d)
     sched = graphs.b_connected_ring_schedule(8, b=1)
+    problem = common.make_problem(data, h, x0)
 
     hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4, num_outer=10)
-    _, hv = dpsvrg.dpsvrg_run(common.logreg_loss, h, x0, data, sched, hp,
-                              record_every=0)
+    hv = common.run_algorithm("dpsvrg", problem, sched, hp,
+                              record_every=0).history
     steps = int(hv.steps[-1])
-    _, hd = dpsvrg.dspg_run(common.logreg_loss, h, x0, data, sched,
-                            dpsvrg.DSPGHyperParams(alpha0=alpha),
-                            num_steps=steps)
-    _, hg = baselines.gt_svrg_run(common.logreg_loss, h, x0, data, sched,
-                                  alpha=alpha, num_outer=10,
-                                  inner_steps=max(steps // 10, 1))
+    hd = common.run_algorithm("dspg", problem, sched,
+                              dpsvrg.DSPGHyperParams(alpha0=alpha), steps,
+                              record_every=10).history
+    hg = common.run_algorithm("gt_svrg", problem, sched, alpha, 10,
+                              max(steps // 10, 1), record_every=0).history
     # DPG: match on EPOCHS (its per-step cost is one full epoch)
-    _, hp_ = baselines.dpg_run(common.logreg_loss, h, x0, data, sched,
-                               alpha=alpha * 2,
-                               num_steps=int(hv.epochs[-1]) + 1)
+    hp_ = common.run_algorithm("dpg", problem, sched, alpha * 2,
+                               int(hv.epochs[-1]) + 1,
+                               record_every=10).history
     for name, hist in (("dpsvrg", hv), ("dspg", hd), ("gt_svrg", hg),
                        ("dpg", hp_)):
         rows.append(common.Row(

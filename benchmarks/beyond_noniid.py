@@ -27,17 +27,18 @@ def run(scale: float = 0.02, alpha: float = 0.2):
         fs = common.f_star(flat, h, ds.dim)
         x0 = gossip.stack_tree(jnp.zeros(ds.dim), 8)
         sched = graphs.b_connected_ring_schedule(8, b=1)
+        problem = common.make_problem(data, h, x0)
         hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                       num_outer=9)
-        _, hv = dpsvrg.dpsvrg_run(common.logreg_loss, h, x0, data, sched, hp,
-                                  record_every=0)
-        _, hd = dpsvrg.dspg_run(common.logreg_loss, h, x0, data, sched,
-                                dpsvrg.DSPGHyperParams(alpha0=alpha),
-                                num_steps=int(hv.steps[-1]))
+        hv = common.run_algorithm("dpsvrg", problem, sched, hp,
+                                  record_every=0).history
+        hd = common.run_algorithm("dspg", problem, sched,
+                                  dpsvrg.DSPGHyperParams(alpha0=alpha),
+                                  int(hv.steps[-1]), record_every=10).history
         hp8 = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                        num_outer=9, compress_bits=8)
-        _, h8 = dpsvrg.dpsvrg_run(common.logreg_loss, h, x0, data, sched,
-                                  hp8, record_every=0)
+        h8 = common.run_algorithm("dpsvrg", problem, sched, hp8,
+                                  record_every=0).history
         rows.append(common.Row(
             f"beyond/noniid_het={het}", 0.0,
             f"gap_dpsvrg={hv.objective[-1] - fs:.5f} "

@@ -16,7 +16,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dpsvrg, gossip, graphs, prox
+from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner
 from repro.data import synthetic
 
 
@@ -43,6 +43,21 @@ def setup_problem(dataset: str, scale: float, m: int = 8, lam: float = 0.01,
     d = ds.dim
     x0 = gossip.stack_tree(jnp.zeros(d), m)
     return data, flat, h, x0, d
+
+
+def make_problem(data, h, x0, objective_fn=None) -> algorithm.Problem:
+    return algorithm.Problem(logreg_loss, h, x0, data, objective_fn)
+
+
+def run_algorithm(name: str, problem, sched, *factory_args, seed=0,
+                  record_every=1, scan=False, gossip_mode="dense",
+                  **factory_kw) -> runner.RunResult:
+    """Build ``ALGORITHMS[name]`` and drive it through ``runner.run`` — the
+    one calling convention every figure script shares."""
+    algo = algorithm.ALGORITHMS[name](problem, *factory_args, **factory_kw)
+    return runner.run(algo, problem, sched, seed=seed,
+                      record_every=record_every, scan=scan,
+                      gossip_mode=gossip_mode)
 
 
 def f_star(flat, h, d, alpha=0.4, steps=4000):

@@ -22,16 +22,17 @@ def run(scale: float = 0.02, num_outer: int = 10, alpha: float = 0.2):
         data, flat, h, x0, d = common.setup_problem(dataset, scale)
         fs = common.f_star(flat, h, d)
         sched = graphs.b_connected_ring_schedule(8, b=1)
+        problem = common.make_problem(data, h, x0)
         t0 = time.time()
         hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                       num_outer=num_outer)
-        _, hv = dpsvrg.dpsvrg_run(common.logreg_loss, h, x0, data, sched, hp,
-                                  record_every=4)
+        hv = common.run_algorithm("dpsvrg", problem, sched, hp,
+                                  record_every=4).history
         t_vr = (time.time() - t0) * 1e6 / max(int(hv.steps[-1]), 1)
         t0 = time.time()
-        _, hd = dpsvrg.dspg_run(common.logreg_loss, h, x0, data, sched,
-                                dpsvrg.DSPGHyperParams(alpha0=alpha),
-                                num_steps=int(hv.steps[-1]), record_every=8)
+        hd = common.run_algorithm("dspg", problem, sched,
+                                  dpsvrg.DSPGHyperParams(alpha0=alpha),
+                                  int(hv.steps[-1]), record_every=8).history
         t_ds = (time.time() - t0) * 1e6 / max(int(hv.steps[-1]), 1)
         gap_vr = hv.objective[-1] - fs
         gap_ds = hd.objective[-1] - fs

@@ -17,14 +17,15 @@ def run(scale: float = 0.02, alpha: float = 0.2):
     data, flat, h, x0, d = common.setup_problem("mnist_like", scale)
     fs = common.f_star(flat, h, d)
     sched = graphs.b_connected_ring_schedule(8, b=1)
+    problem = common.make_problem(data, h, x0)
     hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4, num_outer=10)
-    _, hv = dpsvrg.dpsvrg_run(common.logreg_loss, h, x0, data, sched, hp,
-                              record_every=4)
+    hv = common.run_algorithm("dpsvrg", problem, sched, hp,
+                              record_every=4).history
     comm_vr = int(hv.comm_rounds[-1])
     # give DSPG the SAME total communication budget
-    _, hd = dpsvrg.dspg_run(common.logreg_loss, h, x0, data, sched,
-                            dpsvrg.DSPGHyperParams(alpha0=alpha),
-                            num_steps=comm_vr, record_every=16)
+    hd = common.run_algorithm("dspg", problem, sched,
+                              dpsvrg.DSPGHyperParams(alpha0=alpha),
+                              comm_vr, record_every=16).history
     gap_vr = hv.objective[-1] - fs
     gap_ds = hd.objective[-1] - fs
     # gap at matched communication points (quartiles of the budget)

@@ -15,11 +15,12 @@ def run(scale: float = 0.02, alpha: float = 0.2):
     data, flat, h, x0, d = common.setup_problem("mnist_like", scale)
     fs = common.f_star(flat, h, d)
     sched = graphs.b_connected_ring_schedule(8, b=3, seed=0)
+    problem = common.make_problem(data, h, x0)
     for name, single in (("multi", False), ("single", True)):
         hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                       num_outer=8, single_consensus=single)
-        _, hist = dpsvrg.dpsvrg_run(common.logreg_loss, h, x0, data, sched,
-                                    hp, record_every=0)
+        hist = common.run_algorithm("dpsvrg", problem, sched, hp,
+                                    record_every=0).history
         rows.append(common.Row(
             f"fig3/mnist_like/{name}_consensus", 0.0,
             f"gap={hist.objective[-1] - fs:.5f} "

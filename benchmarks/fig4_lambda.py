@@ -17,14 +17,15 @@ def run(scale: float = 0.02, alpha: float = 0.2):
         data, flat, h, x0, d = common.setup_problem("mnist_like", scale,
                                                     lam=lam)
         sched = graphs.b_connected_ring_schedule(8, b=1)
+        problem = common.make_problem(data, h, x0)
         hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                       num_outer=9)
-        _, hv = dpsvrg.dpsvrg_run(common.logreg_loss, h, x0, data, sched, hp,
-                                  record_every=4)
-        _, hd = dpsvrg.dspg_run(common.logreg_loss, h, x0, data, sched,
-                                dpsvrg.DSPGHyperParams(alpha0=alpha,
-                                                       constant_step=True),
-                                num_steps=int(hv.steps[-1]), record_every=8)
+        hv = common.run_algorithm("dpsvrg", problem, sched, hp,
+                                  record_every=4).history
+        hd = common.run_algorithm("dspg", problem, sched,
+                                  dpsvrg.DSPGHyperParams(alpha0=alpha,
+                                                         constant_step=True),
+                                  int(hv.steps[-1]), record_every=8).history
         osc = lambda hh: float(np.std(hh.objective[-len(hh.objective) // 3:]))
         rows.append(common.Row(
             f"fig4/lambda={lam}", 0.0,

@@ -13,15 +13,17 @@ def run(scale: float = 0.02, alpha: float = 0.2):
     rows = []
     data, flat, h, x0, d = common.setup_problem("mnist_like", scale)
     fs = common.f_star(flat, h, d)
+    problem = common.make_problem(data, h, x0)
     for b in (1, 3, 7, 50):
         sched = graphs.b_connected_ring_schedule(8, b=b, seed=b)
         hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                       num_outer=9)
-        _, hv = dpsvrg.dpsvrg_run(common.logreg_loss, h, x0, data, sched, hp,
-                                  record_every=0, seed=b)
-        _, hd = dpsvrg.dspg_run(common.logreg_loss, h, x0, data, sched,
-                                dpsvrg.DSPGHyperParams(alpha0=alpha),
-                                num_steps=int(hv.steps[-1]), seed=b)
+        hv = common.run_algorithm("dpsvrg", problem, sched, hp,
+                                  record_every=0, seed=b).history
+        hd = common.run_algorithm("dspg", problem, sched,
+                                  dpsvrg.DSPGHyperParams(alpha0=alpha),
+                                  int(hv.steps[-1]), record_every=10,
+                                  seed=b).history
         gv, gd = hv.objective[-1] - fs, hd.objective[-1] - fs
         rows.append(common.Row(
             f"fig5/b={b}", 0.0,

@@ -1,30 +1,40 @@
-"""Unified-runner microbenchmark: host loop vs ``lax.scan`` fast path.
+"""Unified-runner microbenchmark: host loop vs ``lax.scan`` fast path, dense
+vs banded gossip, and bucketed chunk compilation.
 
-Times the SAME algorithm/problem/schedule through ``runner.run`` with
-``scan=False`` (one device dispatch per inner step, the historical loop
-shape) and ``scan=True`` (the driver pre-samples a record_every-step chunk of
-batches, pre-stacks the chunk's gossip matrices, and executes the chunk in
-one compiled dispatch).  On the CPU container the win is pure per-step
-Python/dispatch overhead removal — exactly the overhead that dominates the
-paper-scale logreg problem, where each step is a tiny (m, d) update.
+Times the SAME algorithm/problem/schedule through ``runner.run``:
+
+* ``scan=False`` — one device dispatch per inner step (the historical loop
+  shape) vs ``scan=True`` — the driver pre-samples a record_every-step chunk
+  of batches, pre-stacks the chunk's gossip inputs, and executes the chunk
+  in one compiled dispatch.  On the CPU container the win is pure per-step
+  Python/dispatch overhead removal — exactly the overhead that dominates the
+  paper-scale logreg problem, where each step is a tiny (m, d) update.
+* ``gossip_mode="dense"`` vs ``"banded"`` on a TDMA edge-matching ring
+  (degree <= 2): banded feeds per-band coefficients through the scan xs and
+  gossips via ``mix_stacked_banded`` — O(degree) cyclic-shift collectives
+  instead of an O(m) dense contraction.
+* DPSVRG with per-round chunks (``record_every=0``): growing K_s rounds are
+  padded to power-of-two buckets, so the scan body compiles O(#buckets)
+  executables instead of one per distinct round length
+  (``runner.scan_executable_count``); the cold row includes compile time.
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.core import algorithm, dpsvrg, graphs, runner
+from repro.core import algorithm, dpsvrg, gossip, graphs, runner, schedules
 from . import common
 
 
-def _time_run(algo, problem, sched, *, record_every, scan, iters=3):
+def _time_run(algo, problem, sched, *, record_every, scan, iters=3, **kw):
     # warm-up compiles both paths' jitted steps
     runner.run(algo, problem, sched, seed=0, record_every=record_every,
-               scan=scan)
+               scan=scan, **kw)
     t0 = time.time()
     for i in range(iters):
         runner.run(algo, problem, sched, seed=0, record_every=record_every,
-                   scan=scan)
+                   scan=scan, **kw)
     return (time.time() - t0) / iters * 1e6
 
 
@@ -44,14 +54,46 @@ def run(scale: float = 0.02):
     rows.append(common.Row("runner/dspg_scan_600steps", t_scan,
                            f"100-step chunks speedup={t_host / t_scan:.1f}x"))
 
-    # DPSVRG: growing inner rounds, per-round chunks (record_every=0)
+    # banded vs dense gossip on the TDMA edge-matching ring (degree <= 2):
+    # same algorithm, same schedule, O(degree) collectives vs O(m) einsum
+    match = graphs.MixingSchedule(
+        tuple(graphs.edge_matching_matrices(8)), b=2, eta=0.5,
+        name="tdma-matching8")
+    algo = algorithm.dspg_algorithm(
+        problem, dpsvrg.DSPGHyperParams(alpha0=0.2), num_steps=600)
+    t_host = _time_run(algo, problem, match, record_every=100, scan=False)
+    t_dense = _time_run(algo, problem, match, record_every=100, scan=True)
+    t_band = _time_run(algo, problem, match, record_every=100, scan=True,
+                       gossip_mode="banded")
+    n_bands = len(gossip.schedule_band_offsets(match, 1))
+    rows.append(common.Row("runner/matching_host", t_host,
+                           "dense gossip, one dispatch per step"))
+    rows.append(common.Row("runner/matching_scan_dense", t_dense,
+                           f"speedup={t_host / t_dense:.1f}x vs host"))
+    rows.append(common.Row(
+        "runner/matching_scan_banded", t_band,
+        f"{n_bands} bands (deg<=2) speedup={t_host / t_band:.1f}x vs host "
+        f"{t_dense / t_band:.2f}x vs dense-scan"))
+
+    # DPSVRG: growing inner rounds, per-round chunks (record_every=0) —
+    # bucketing compiles O(#buckets) executables across all K_s lengths
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4, num_outer=10,
                                   k_max=4)
+    ks = schedules.inner_loop_lengths(hp.beta, hp.n0, hp.num_outer)
     algo = algorithm.dpsvrg_algorithm(problem, hp)
     t_host = _time_run(algo, problem, sched, record_every=0, scan=False)
+    algo_cold = algorithm.dpsvrg_algorithm(problem, hp)
+    t0 = time.time()
+    runner.run(algo_cold, problem, sched, seed=0, record_every=0, scan=True)
+    t_cold = (time.time() - t0) * 1e6
     t_scan = _time_run(algo, problem, sched, record_every=0, scan=True)
+    execs = runner.scan_executable_count(algo)
     rows.append(common.Row("runner/dpsvrg_host_10outer", t_host,
                            "one dispatch per inner step"))
-    rows.append(common.Row("runner/dpsvrg_scan_10outer", t_scan,
-                           f"per-round chunks speedup={t_host / t_scan:.1f}x"))
+    rows.append(common.Row(
+        "runner/dpsvrg_scan_10outer", t_scan,
+        f"per-round chunks speedup={t_host / t_scan:.1f}x"))
+    rows.append(common.Row(
+        "runner/dpsvrg_scan_cold", t_cold,
+        f"{execs} compiled buckets for {len(set(ks))} distinct K_s"))
     return rows

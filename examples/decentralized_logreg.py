@@ -9,7 +9,7 @@ import argparse
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dpsvrg, gossip, graphs, prox
+from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner
 from repro.data import synthetic
 try:
     from examples.quickstart import loss_fn
@@ -24,13 +24,17 @@ def run_setting(dataset, m, b, lam, alpha, num_outer, scale, single=False):
     h = prox.l1(lam)
     sched = graphs.b_connected_ring_schedule(m, b=b, seed=b)
     x0 = gossip.stack_tree(jnp.zeros(ds.dim), m)
+    problem = algorithm.Problem(loss_fn, h, x0, data)
     hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                   num_outer=num_outer,
                                   single_consensus=single)
-    _, hv = dpsvrg.dpsvrg_run(loss_fn, h, x0, data, sched, hp, record_every=0)
-    _, hd = dpsvrg.dspg_run(loss_fn, h, x0, data, sched,
-                            dpsvrg.DSPGHyperParams(alpha0=alpha),
-                            num_steps=int(hv.steps[-1]), seed=b)
+    hv = runner.run(algorithm.ALGORITHMS["dpsvrg"](problem, hp), problem,
+                    sched, record_every=0).history
+    hd = runner.run(
+        algorithm.ALGORITHMS["dspg"](
+            problem, dpsvrg.DSPGHyperParams(alpha0=alpha),
+            int(hv.steps[-1])),
+        problem, sched, seed=b, record_every=10).history
     return hv, hd
 
 

@@ -8,7 +8,7 @@ The paper's core experiment in ~40 lines of public API:
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dpsvrg, gossip, graphs, prox
+from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner
 from repro.data import synthetic
 
 
@@ -26,13 +26,16 @@ def main():
     h = prox.l1(0.01)                       # the non-smooth regularizer
     schedule = graphs.b_connected_ring_schedule(m, b=1)   # ring, connected
     x0 = gossip.stack_tree(jnp.zeros(ds.dim), m)
+    problem = algorithm.Problem(loss_fn, h, x0, data)
 
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4, num_outer=10)
-    _, hist = dpsvrg.dpsvrg_run(loss_fn, h, x0, data, schedule, hp,
-                                record_every=0)
-    _, base = dpsvrg.dspg_run(loss_fn, h, x0, data, schedule,
-                              dpsvrg.DSPGHyperParams(alpha0=0.2),
-                              num_steps=int(hist.steps[-1]))
+    algo = algorithm.ALGORITHMS["dpsvrg"](problem, hp)
+    hist = runner.run(algo, problem, schedule, record_every=0).history
+    base_algo = algorithm.ALGORITHMS["dspg"](
+        problem, dpsvrg.DSPGHyperParams(alpha0=0.2),
+        int(hist.steps[-1]))
+    base = runner.run(base_algo, problem, schedule,
+                      record_every=10).history
 
     flat = {k: v.reshape(-1, *v.shape[2:]) for k, v in data.items()}
     _, ref = dpsvrg.centralized_prox_gd(loss_fn, h, jnp.zeros(ds.dim), flat,

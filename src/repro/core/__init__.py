@@ -6,10 +6,11 @@ Submodules:
   svrg       — variance-reduced gradient estimator + snapshot state
   gossip     — consensus over stacked node parameters (einsum & ppermute paths)
   algorithm  — the unified `DecentralizedAlgorithm` protocol + all methods
-  runner     — the single generic driver (host loop + lax.scan fast path)
-  dpsvrg     — Algorithm 1 + DSPG compatibility wrappers + centralized prox-GD
-  baselines  — DPG / GT-SVRG / loopless-DPSVRG compatibility wrappers
-  inexact    — Algorithm 2 (Inexact Prox-SVRG) + executable Theorem 1
+  runner     — the single generic driver (host loop + lax.scan fast path,
+               dense or banded gossip, bucketed chunk compilation)
+  dpsvrg     — Algorithm 1 hyper-params / step builders + centralized prox-GD
+  inexact    — Algorithm 2 (Inexact Prox-SVRG) on the protocol + executable
+               Theorem 1 (registered as ALGORITHMS["inexact_prox_svrg"])
   schedules  — K_s growth, DSPG decaying steps, WSD / cosine LR schedules
 
 The Algorithm protocol (``core.algorithm``)
@@ -34,8 +35,8 @@ its jitted step from the same ``UPDATE_RULES`` + ``prox_gossip_update``, so
 paper-scale repro and LM-scale training share one update implementation.
 """
 
-from . import (algorithm, baselines, dpsvrg, gossip, graphs, inexact, prox,
-               runner, schedules, svrg)
+from . import (algorithm, dpsvrg, gossip, graphs, inexact, prox, runner,
+               schedules, svrg)
 
-__all__ = ["algorithm", "baselines", "dpsvrg", "gossip", "graphs", "inexact",
-           "prox", "runner", "schedules", "svrg"]
+__all__ = ["algorithm", "dpsvrg", "gossip", "graphs", "inexact", "prox",
+           "runner", "schedules", "svrg"]

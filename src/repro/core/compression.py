@@ -35,13 +35,20 @@ def init_state(tree) -> CompressionState:
 
 
 def quantize_leaf(x, bits: int = 8):
-    """Symmetric per-leaf (per-node-row for stacked leaves) quantization.
+    """Symmetric per-node-row quantization for stacked leaves.
+
+    The max-abs scale is reduced over everything EXCEPT the leading node
+    axis: in a decentralized run node i only knows its own row, so a scale
+    pooled across rows would be information no node can have.  That includes
+    1-D stacked leaves (one scalar parameter per node, shape ``(m,)``):
+    each node's scale is its own |x_i| — reducing over axis 0 there would
+    silently couple the nodes through a global scale (and crush small-
+    magnitude nodes to zero next to large ones).
 
     Returns the dequantized value (what the wire carries, reconstructed) —
     the roofline accounting uses bits/32 of the f32 bytes."""
     levels = float(2 ** (bits - 1) - 1)
-    # per-node scale for stacked leaves: reduce over all but the lead axis
-    axes = tuple(range(1, x.ndim)) if x.ndim > 1 else (0,)
+    axes = tuple(range(1, x.ndim))  # empty for 1-D: per-element == per-node
     scale = jnp.max(jnp.abs(x), axis=axes, keepdims=True) / levels
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.round(x / scale)

@@ -1,21 +1,28 @@
-"""DPSVRG (paper Algorithm 1) and the DSPG baseline — thin wrappers.
+"""DPSVRG (paper Algorithm 1) public surface + the centralized reference.
 
-The algorithms themselves now live behind the unified protocol in
+The algorithms themselves live behind the unified protocol in
 ``repro.core.algorithm`` (state/step/outer + declarative metadata) and are
 driven by the single generic ``repro.core.runner.run`` loop, which owns batch
-sampling, time-varying gossip scheduling, metric recording, and the optional
-``lax.scan`` fast path.  This module keeps the historical entry points:
+sampling, time-varying gossip scheduling, metric recording, the optional
+``lax.scan`` fast path, and dense/banded gossip dispatch.  This module keeps
+the canonical names stable:
 
 * ``DPSVRGHyperParams`` / ``DSPGHyperParams`` — canonical home is
   ``core.algorithm``; re-exported here.
 * ``build_dpsvrg_inner_step`` / ``build_dspg_step`` / ``build_node_grad_fn``
   / ``build_node_full_grad_fn`` — re-exported step builders (also used by
-  ``core.inexact`` and the kernels' reference paths).
-* ``dpsvrg_run`` / ``dspg_run`` — **deprecated** compatibility wrappers over
-  ``runner.run``; seed-identical histories to the pre-refactor loops.
-  New code should build an ``Algorithm`` (``algorithm.ALGORITHMS``) and call
-  ``runner.run`` directly, which also exposes the scan fast path and
-  pluggable extra metric recorders.
+  ``core.inexact``, the kernels' reference paths, and the frozen
+  pre-refactor oracle in ``tests/_legacy_runs.py``).
+* ``centralized_prox_gd`` — the full-batch proximal-gradient reference used
+  to estimate F(x*) for the optimality-gap metric.
+
+The historical ``dpsvrg_run`` / ``dspg_run`` wrappers are GONE: build an
+``Algorithm`` via ``algorithm.ALGORITHMS`` and call ``runner.run`` —
+
+    problem = algorithm.Problem(loss_fn, prox, x0_stacked, full_data)
+    algo = algorithm.ALGORITHMS["dpsvrg"](problem, DPSVRGHyperParams(...))
+    res = runner.run(algo, problem, schedule, record_every=..., scan=True)
+    res.params, res.history
 
 Algorithm 1 (per node i, inner step k of outer round s):
     v_i   = grad_B f_i(x_i) - grad_B f_i(x~_i) + full_grad_i(x~_i)
@@ -31,14 +38,12 @@ from __future__ import annotations
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import graphs, prox as prox_lib, runner as runner_lib
+from . import prox as prox_lib
 from .algorithm import (DPSVRGHyperParams, DSPGHyperParams, Problem,
                         build_dpsvrg_inner_step, build_dspg_step,
-                        build_node_full_grad_fn, build_node_grad_fn,
-                        dpsvrg_algorithm, dspg_algorithm)
+                        build_node_full_grad_fn, build_node_grad_fn)
 from .runner import RunHistory, objective_value as _runner_objective, \
     sample_batch as _sample_batch_impl
 
@@ -49,64 +54,19 @@ __all__ = [
     "build_dspg_step",
     "build_node_grad_fn",
     "build_node_full_grad_fn",
-    "dpsvrg_run",
-    "dspg_run",
     "centralized_prox_gd",
     "RunHistory",
 ]
 
 
 def _sample_batch(rng: np.random.Generator, data, batch_size: int):
-    """Deprecated alias of ``runner.sample_batch`` (kept for old imports)."""
+    """Alias of ``runner.sample_batch`` (kept for the frozen legacy oracle)."""
     return _sample_batch_impl(rng, data, batch_size)
 
 
 def _objective(loss_fn, prox, params, full_data) -> float:
-    """Deprecated alias of ``runner.objective_value``."""
+    """Alias of ``runner.objective_value`` (kept for the frozen legacy oracle)."""
     return _runner_objective(loss_fn, prox, params, full_data)
-
-
-def dpsvrg_run(loss_fn: Callable,
-               prox: prox_lib.Prox,
-               x0_stacked,
-               full_data,
-               schedule: graphs.MixingSchedule,
-               hp: DPSVRGHyperParams,
-               seed: int = 0,
-               record_every: int = 1,
-               objective_fn: Callable | None = None,
-               scan: bool = False) -> tuple[Any, RunHistory]:
-    """Deprecated wrapper: faithful Algorithm 1 through the unified runner.
-
-    ``full_data`` leaves: (m, n, ...) per-node data.  The snapshot x~^s for
-    the next outer round is the *tail average* of the inner iterates (line
-    13), not the final iterate; the final iterate carries over as x^(0,s+1)
-    (line 14).  ``scan=True`` enables the chunked ``lax.scan`` fast path.
-    """
-    problem = Problem(loss_fn, prox, x0_stacked, full_data, objective_fn)
-    algo = dpsvrg_algorithm(problem, hp)
-    res = runner_lib.run(algo, problem, schedule, seed=seed,
-                         record_every=record_every, scan=scan)
-    return res.params, res.history
-
-
-def dspg_run(loss_fn: Callable,
-             prox: prox_lib.Prox,
-             x0_stacked,
-             full_data,
-             schedule: graphs.MixingSchedule,
-             hp: DSPGHyperParams,
-             num_steps: int,
-             seed: int = 0,
-             record_every: int = 10,
-             objective_fn: Callable | None = None,
-             scan: bool = False) -> tuple[Any, RunHistory]:
-    """Deprecated wrapper: DSPG baseline through the unified runner."""
-    problem = Problem(loss_fn, prox, x0_stacked, full_data, objective_fn)
-    algo = dspg_algorithm(problem, hp, num_steps)
-    res = runner_lib.run(algo, problem, schedule, seed=seed,
-                         record_every=record_every, scan=scan)
-    return res.params, res.history
 
 
 def centralized_prox_gd(loss_fn: Callable, prox: prox_lib.Prox, x0, full_data_flat,

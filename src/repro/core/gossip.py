@@ -52,6 +52,7 @@ __all__ = [
     "band_decompose",
     "schedule_band_offsets",
     "bands_for_phi",
+    "BandedPhi",
     "mix_stacked_banded",
     "stack_tree",
     "unstack_tree",
@@ -85,8 +86,12 @@ def mix_stacked(phi, tree):
     """One consensus application: leaf <- einsum('ij,j...->i...', phi, leaf).
 
     ``phi`` may be a numpy or jnp (m, m) matrix — typically the host-side
-    multi-consensus product, so arbitrary k-round gossip is one contraction.
+    multi-consensus product, so arbitrary k-round gossip is one contraction —
+    or a :class:`BandedPhi`, in which case the contraction is dispatched to
+    the O(degree) cyclic-band collectives of :func:`mix_stacked_banded`.
     """
+    if isinstance(phi, BandedPhi):
+        return mix_stacked_banded(phi.offsets, phi.coeffs, tree)
     phi = jnp.asarray(phi, dtype=jnp.float32)
 
     def _mix(leaf):
@@ -159,6 +164,44 @@ def bands_for_phi(phi: np.ndarray, offsets: tuple) -> np.ndarray:
     for d, c in zip(full_off, full_c):
         out[idx[d]] = c
     return out
+
+
+@jax.tree_util.register_pytree_node_class
+class BandedPhi:
+    """A mixing matrix in cyclic-band form, usable anywhere a dense phi is.
+
+    ``offsets`` is the STATIC band-offset set (pytree aux data, so jitted
+    steps specialize on it and each ``jnp.roll`` shift stays a compile-time
+    constant); ``coeffs`` is the dynamic per-band coefficient array — either
+    ``(n_bands, m)`` for a single step or ``(T, n_bands, m)`` when stacked as
+    ``lax.scan`` xs, where scan's leaf slicing yields per-step ``(n_bands,
+    m)`` coefficients while the offsets ride along as aux.  ``mix_stacked``
+    dispatches instances to :func:`mix_stacked_banded`, so every algorithm
+    step built on ``prox_gossip_update`` (or calling ``mix_stacked``
+    directly) gossips in O(degree) collectives without code changes.
+    """
+
+    __slots__ = ("offsets", "coeffs")
+
+    def __init__(self, offsets: tuple, coeffs):
+        self.offsets = tuple(offsets)
+        self.coeffs = coeffs
+
+    def tree_flatten(self):
+        return (self.coeffs,), self.offsets
+
+    @classmethod
+    def tree_unflatten(cls, offsets, children):
+        return cls(offsets, children[0])
+
+    @classmethod
+    def from_dense(cls, phi: np.ndarray, offsets: tuple) -> "BandedPhi":
+        """Project a dense phi onto a fixed offset set (raises on leakage)."""
+        return cls(offsets, bands_for_phi(np.asarray(phi), offsets))
+
+    def __repr__(self):
+        shape = getattr(self.coeffs, "shape", None)
+        return f"BandedPhi(offsets={self.offsets}, coeffs.shape={shape})"
 
 
 def mix_stacked_banded(offsets: tuple, coeffs, tree):

@@ -110,11 +110,20 @@ def exponential_graph_matrices(m: int) -> list[np.ndarray]:
 
 
 def edge_matching_matrices(m: int) -> list[np.ndarray]:
-    """Even/odd edge matchings of a ring: two matrices whose union is the ring.
+    """Edge matchings of a ring: disjoint-pair matrices whose union is the
+    full ring.
 
     Models TDMA-style link activation (only non-interfering links are active
-    simultaneously) — the paper's motivating time-varying scenario.  The
-    sequence is b-connected with b = 2.
+    simultaneously) — the paper's motivating time-varying scenario.  For even
+    m the even/odd matchings cover all m ring edges, so the sequence is
+    b-connected with b = 2.  For odd m the closing edge (m-1, 0) conflicts
+    with BOTH matchings (node 0 is matched in the even one, node m-1 in the
+    odd one), so a third matching carries it and b = 3.  (Before this fix
+    the closing edge was silently dropped for odd m: the union degenerated
+    from the advertised ring to a path, whose far-end nodes only exchange
+    information through every intermediate hop — a strictly weaker topology
+    than claimed, with a correspondingly worse Lemma-1 contraction.)  Use
+    ``b = len(result)``.
     """
     even = np.eye(m)
     odd = np.eye(m)
@@ -124,11 +133,18 @@ def edge_matching_matrices(m: int) -> list[np.ndarray]:
     for i in range(1, m - 1, 2):
         odd[i, i] = odd[i + 1, i + 1] = 0.5
         odd[i, i + 1] = odd[i + 1, i] = 0.5
-    if m > 2 and m % 2 == 0:
-        # close the ring in the odd matching
-        odd[0, 0] = odd[m - 1, m - 1] = 0.5
-        odd[0, m - 1] = odd[m - 1, 0] = 0.5
-    return [even, odd]
+    mats = [even, odd]
+    if m > 2:
+        if m % 2 == 0:
+            # close the ring in the odd matching (0 and m-1 are both free)
+            odd[0, 0] = odd[m - 1, m - 1] = 0.5
+            odd[0, m - 1] = odd[m - 1, 0] = 0.5
+        else:
+            closing = np.eye(m)
+            closing[0, 0] = closing[m - 1, m - 1] = 0.5
+            closing[0, m - 1] = closing[m - 1, 0] = 0.5
+            mats.append(closing)
+    return mats
 
 
 # ---------------------------------------------------------------------------

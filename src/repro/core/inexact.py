@@ -5,12 +5,21 @@ the average parameter and runs Prox-SVRG with two injected error sequences —
 the gradient error ``e^(k,s)`` (Eq. 10a) and the proximal error ``eps^(k,s)``
 (Eq. 10b) — which absorb the dissensus of the decentralized copies.
 
-This module provides:
+Both entry points now run through the unified ``Algorithm``/``runner.run``
+protocol instead of bespoke loops:
 
-* ``inexact_prox_svrg_run`` — Algorithm 2 with a pluggable error model
-  (zero errors ⇒ exact centralized Prox-SVRG).
-* ``verify_theorem1`` — runs DPSVRG (Algorithm 1) while simultaneously
-  checking, step by step, the constructive content of Theorem 1:
+* ``inexact_prox_svrg_algorithm`` — Algorithm 2 as a protocol plugin (one
+  virtual node: stacked trees with m = 1, identity gossip), registered in
+  ``algorithm.ALGORITHMS`` as ``"inexact_prox_svrg"``.  Error injection is
+  part of the step (the state carries the global step counter), so the same
+  sampling, scheduling, and recording machinery drives it as Algorithm 1;
+  with a jax-traceable ``grad_error_fn`` (or none) it runs on the
+  ``lax.scan`` fast path too.
+* ``inexact_prox_svrg_run`` — thin convenience entry over ``runner.run``
+  with the historical (final_params, objective_history) return shape.
+* ``verify_theorem1`` — runs DPSVRG (Algorithm 1) through ``runner.run``
+  with a diagnostic step wrapper that checks, step by step, the constructive
+  content of Theorem 1:
     (i)  with ``e`` from Eq. (10a), the Algorithm-2 gradient step reproduces
          the node-average pre-consensus iterate:  q̄ = x̄ − α(v + e);
     (ii) gossip preserves the node average (doubly stochastic Φ): mean(q̂)=q̄;
@@ -19,6 +28,10 @@ This module provides:
           copies reach consensus.
   Returns per-step diagnostics so tests can assert all three claims and the
   summability of the error sequences (Assumption 6 / Theorem 3's Eq. 25).
+  The Eq. (10b) epsilon needs a subgradient p ∈ ∂h(x̄): it is taken from the
+  prox's registered ``subgrad`` (l1, elastic net, group lasso, ...) and the
+  check raises loudly for proxes without one instead of silently assuming
+  h = 0.
 """
 
 from __future__ import annotations
@@ -30,14 +43,115 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import dpsvrg, gossip, graphs, prox as prox_lib, schedules, svrg
+from . import (algorithm as algorithm_lib, gossip, graphs, prox as prox_lib,
+               runner as runner_lib, schedules, svrg)
+from .algorithm import (AlgoMeta, Algorithm, DPSVRGHyperParams, Problem,
+                        build_node_full_grad_fn, build_node_grad_fn,
+                        prox_gossip_update)
 
-__all__ = ["inexact_prox_svrg_run", "verify_theorem1", "Theorem1Diagnostics"]
+__all__ = [
+    "InexactHyperParams",
+    "inexact_prox_svrg_algorithm",
+    "inexact_prox_svrg_run",
+    "verify_theorem1",
+    "Theorem1Diagnostics",
+]
 
 
 # ---------------------------------------------------------------------------
-# Algorithm 2
+# Algorithm 2 on the protocol
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InexactHyperParams:
+    """Algorithm 2 shares Algorithm 1's loop geometry (K_s = ceil(beta^s n0),
+    constant step, tail-average snapshots) on a single virtual node."""
+    alpha: float = 0.01
+    beta: float = 1.07
+    n0: int = 8
+    num_outer: int = 30
+    batch_size: int = 1
+
+
+class InexactState(NamedTuple):
+    params: Any                  # stacked (1, ...) virtual-node iterate
+    anchor: Any                  # snapshot point for the NEXT refresh
+    est: svrg.SvrgState | None   # current snapshot + full gradient
+    inner_sum: Any               # tail-average accumulator
+    t: Any                       # global step counter (drives error injection)
+
+
+def inexact_prox_svrg_algorithm(problem: Problem, hp: InexactHyperParams,
+                                grad_error_fn: Callable | None = None
+                                ) -> Algorithm:
+    """Paper Algorithm 2 as an :class:`Algorithm` plugin.
+
+    ``problem`` is a standard stacked problem with m = 1 (the virtual node
+    holding the average); drive it with an identity schedule, e.g.
+    ``graphs.static_schedule(np.eye(1))``.  ``grad_error_fn(t, params) ->
+    pytree`` injects the Eq. (10a) gradient error e^(k,s) at global step t
+    (0-based) given the UNSTACKED iterate; None means exact.  Host-side
+    (non-traceable) error models require ``runner.run(scan=False)``; the
+    proximal error eps^(k,s) is not injected here (our prox operators are
+    exact closed forms; Algorithm 2's eps models the *decentralized* prox
+    gap, which ``verify_theorem1`` measures on the real DPSVRG run instead).
+    """
+    node_grad = build_node_grad_fn(problem.loss_fn)
+    full_grad_fn = build_node_full_grad_fn(problem.loss_fn, problem.full_data)
+    prox = problem.prox
+
+    @jax.jit
+    def _step(params, est, batch, phi, alpha, err):
+        v = svrg.corrected_gradient(node_grad, params, est, batch)
+        v = svrg.tree_add(v, err)
+        return prox_gossip_update(params, v, phi, alpha, prox)
+
+    def _zeros(tree):
+        return jax.tree.map(jnp.zeros_like, tree)
+
+    def init():
+        return InexactState(params=problem.x0, anchor=problem.x0, est=None,
+                            inner_sum=_zeros(problem.x0),
+                            t=jnp.asarray(0, jnp.int32))
+
+    def outer(state):
+        est = svrg.SvrgState(snapshot=state.anchor,
+                             full_grad=full_grad_fn(state.anchor))
+        return state._replace(est=est, inner_sum=_zeros(state.params))
+
+    def step(state, batch, phi, alpha):
+        if grad_error_fn is None:
+            err = _zeros(state.params)
+        else:
+            err = grad_error_fn(state.t, gossip.unstack_tree(state.params))
+            err = jax.tree.map(lambda e: jnp.asarray(e)[None], err)
+        params = _step(state.params, state.est, batch, phi, alpha, err)
+        return state._replace(params=params, t=state.t + 1,
+                              inner_sum=svrg.tree_add(state.inner_sum, params))
+
+    def end_outer(state, K):
+        return state._replace(
+            anchor=jax.tree.map(lambda acc: acc / K, state.inner_sum))
+
+    meta = AlgoMeta(
+        name="inexact_prox_svrg",
+        stepsize=schedules.constant(hp.alpha),
+        outer_lengths=tuple(
+            schedules.inner_loop_lengths(hp.beta, hp.n0, hp.num_outer)),
+        batch_size=hp.batch_size,
+        step_grad_factor=2,
+        outer_full_grad=True,
+        record_key="round",
+        final_record=True,
+    )
+    return Algorithm(meta=meta, init=init, step=step, outer=outer,
+                     end_outer=end_outer)
+
+
+# Registered alongside the decentralized methods: Algorithm 2 is just another
+# protocol plugin to the runner (import of this module wires it up).
+algorithm_lib.ALGORITHMS["inexact_prox_svrg"] = inexact_prox_svrg_algorithm
+
 
 def inexact_prox_svrg_run(loss_fn: Callable,
                           prox: prox_lib.Prox,
@@ -51,52 +165,29 @@ def inexact_prox_svrg_run(loss_fn: Callable,
                           grad_error_fn: Callable | None = None,
                           seed: int = 0,
                           objective_fn: Callable | None = None):
-    """Centralized Algorithm 2.  ``full_data_flat`` leaves: (n, ...).
+    """Centralized Algorithm 2 through the unified runner.
 
-    ``grad_error_fn(step, params) -> pytree`` injects e^(k,s) (None = exact).
-    The proximal error is not injected here (our prox operators are exact
-    closed forms; Algorithm 2's eps models the *decentralized* prox gap,
-    which ``verify_theorem1`` measures on the real DPSVRG run instead).
-
-    Returns (final_params, objective_history np.ndarray over inner steps).
+    ``full_data_flat`` leaves: (n, ...); ``x0`` and ``grad_error_fn`` use the
+    unstacked (centralized) parameter shape.  Returns
+    (final_params, objective_history np.ndarray over inner steps).
     """
-    rng = np.random.default_rng(seed)
-    g = jax.grad(loss_fn)
-
-    @jax.jit
-    def step(x, snapshot, mu, batch, err, a):
-        v = jax.tree.map(lambda gn, gs, m_: gn - gs + m_,
-                         g(x, batch), g(snapshot, batch), mu)
-        q = jax.tree.map(lambda xi, vi, ei: xi - a * (vi + ei), x, v, err)
-        return prox.apply(q, a)
-
-    n = jax.tree.leaves(full_data_flat)[0].shape[0]
-    obj = objective_fn or (
-        lambda p: float(loss_fn(p, full_data_flat) + prox.value(p)))
-
-    x = x0
-    snapshot = x0
-    hist = [obj(x)]
-    t = 0
-    for s in range(1, num_outer + 1):
-        mu = g(snapshot, full_data_flat)
-        K_s = int(np.ceil((beta ** s) * n0))
-        inner_sum = jax.tree.map(jnp.zeros_like, x)
-        for _ in range(K_s):
-            idx = rng.integers(0, n, size=(batch_size,))
-            batch = jax.tree.map(lambda a_: a_[idx], full_data_flat)
-            err = (grad_error_fn(t, x) if grad_error_fn is not None
-                   else jax.tree.map(jnp.zeros_like, x))
-            x = step(x, snapshot, mu, batch, err, jnp.float32(alpha))
-            inner_sum = svrg.tree_add(inner_sum, x)
-            hist.append(obj(x))
-            t += 1
-        snapshot = jax.tree.map(lambda acc: acc / K_s, inner_sum)
-    return x, np.array(hist)
+    x0_st = jax.tree.map(lambda a: jnp.asarray(a)[None], x0)
+    data_st = jax.tree.map(lambda a: jnp.asarray(a)[None], full_data_flat)
+    obj = None
+    if objective_fn is not None:
+        obj = lambda p_st: objective_fn(gossip.unstack_tree(p_st))
+    problem = Problem(loss_fn, prox, x0_st, data_st, obj)
+    hp = InexactHyperParams(alpha=alpha, beta=beta, n0=n0,
+                            num_outer=num_outer, batch_size=batch_size)
+    algo = inexact_prox_svrg_algorithm(problem, hp,
+                                       grad_error_fn=grad_error_fn)
+    sched = graphs.static_schedule(np.eye(1), name="centralized")
+    res = runner_lib.run(algo, problem, sched, seed=seed, record_every=1)
+    return gossip.unstack_tree(res.params), res.history.objective
 
 
 # ---------------------------------------------------------------------------
-# Executable Theorem 1
+# Executable Theorem 1: a diagnostic step wrapper over Algorithm 1
 # ---------------------------------------------------------------------------
 
 class Theorem1Diagnostics(NamedTuple):
@@ -112,111 +203,131 @@ def _tree_flat(tree) -> jnp.ndarray:
     return jnp.concatenate([jnp.ravel(l) for l in jax.tree.leaves(tree)])
 
 
+def _prox_subgradient(prox: prox_lib.Prox, tree):
+    """A canonical p ∈ ∂h(x) from the prox's registered subgradient.
+
+    Raises for proxes without one: Eq. (10b)'s eps (and the inequality-(9)
+    slack built on it) is WRONG if h's subgradient is silently taken as 0 —
+    the historical bug this replaces did exactly that for every non-l1 prox.
+    """
+    if prox.subgrad is None:
+        raise NotImplementedError(
+            f"prox '{prox.name}' registers no subgradient; Theorem-1's "
+            f"Eq. (10b) eps needs p ∈ ∂h(x̄) — add a `subgrad` to the Prox "
+            f"or use one of l1 / elastic_net / group_lasso / squared_l2")
+    return prox.subgrad(tree)
+
+
 def verify_theorem1(loss_fn: Callable,
                     prox: prox_lib.Prox,
                     x0_stacked,
                     full_data,
                     schedule: graphs.MixingSchedule,
-                    hp: dpsvrg.DPSVRGHyperParams,
+                    hp: DPSVRGHyperParams,
                     seed: int = 0) -> Theorem1Diagnostics:
-    """Run Algorithm 1 and check the Theorem-1 construction at every step."""
-    rng = np.random.default_rng(seed)
-    node_grad = dpsvrg.build_node_grad_fn(loss_fn)
-    full_grad_fn = dpsvrg.build_node_full_grad_fn(loss_fn, full_data)
+    """Run Algorithm 1 via ``runner.run`` and check the Theorem-1
+    construction at every inner step.
 
+    Implemented as a step wrapper around the stock ``dpsvrg_algorithm``: the
+    wrapped step first advances the real algorithm, then recomputes the
+    step's intermediates (v_i, q_i, q̂_i) from the same (state, batch, phi)
+    to evaluate claims (i)-(iii).  Sampling, scheduling, and accounting are
+    therefore EXACTLY the production runner's — the diagnostics measure the
+    real Algorithm-1 trajectory, not a parallel reimplementation.  Host loop
+    only (the checks are host-side); requires uncompressed gossip.
+    """
+    if hp.compress_bits is not None:
+        raise ValueError("verify_theorem1 checks the exact-gossip Theorem-1 "
+                         "construction; quantized gossip (compress_bits) "
+                         "does not preserve the node mean per step")
+    node_grad = build_node_grad_fn(loss_fn)
+    full_grad_fn = build_node_full_grad_fn(loss_fn, full_data)
     m = jax.tree.leaves(x0_stacked)[0].shape[0]
-    params = x0_stacked
-    snapshot_point = x0_stacked
-    slot = 0
+
+    problem = Problem(loss_fn, prox, x0_stacked, full_data)
+    algo = algorithm_lib.dpsvrg_algorithm(problem, hp)
+    base_step = algo.step
 
     d_qbar, d_mix, d_eps, d_slack, d_enorm, d_cons = [], [], [], [], [], []
 
-    ks = schedules.inner_loop_lengths(hp.beta, hp.n0, hp.num_outer)
-    for s, K_s in enumerate(ks, start=1):
-        state = svrg.SvrgState(snapshot=snapshot_point,
-                               full_grad=full_grad_fn(snapshot_point))
-        inner_sum = jax.tree.map(jnp.zeros_like, params)
-        for k in range(1, K_s + 1):
-            batch = dpsvrg._sample_batch(rng, full_data, hp.batch_size)
-            rounds = k if hp.k_max is None else min(k, hp.k_max)
-            phi = jnp.asarray(schedule.consensus_rounds(slot, rounds), jnp.float32)
-            slot += rounds
+    def diagnostic_step(state, batch, phi, alpha):
+        new_state = base_step(state, batch, phi, alpha)
 
-            xbar_prev = gossip.node_mean(params)
+        params, est = state.params, state.est
+        xbar_prev = gossip.node_mean(params)
 
-            # --- Algorithm 1 step, with intermediates exposed -------------
-            v_i = svrg.corrected_gradient(node_grad, params, state, batch)
-            q_i = jax.tree.map(lambda x, vv: x - hp.alpha * vv, params, v_i)
-            q_hat = gossip.mix_stacked(phi, q_i)
-            x_new = prox.apply(q_hat, hp.alpha)
+        # --- Algorithm 1 step intermediates, recomputed -------------------
+        v_i = svrg.corrected_gradient(node_grad, params, est, batch)
+        q_i = jax.tree.map(lambda x, vv: x - hp.alpha * vv, params, v_i)
+        q_hat = gossip.mix_stacked(phi, q_i)
+        x_new = new_state.params
 
-            # --- Theorem-1 claim (i): centralized v + e reproduce q̄ ------
-            # v^(k,s) of Algorithm 2 uses the same samples at the averaged
-            # iterates; e^(k,s) (Eq. 10a) is exactly the difference
-            # mean_i v_i - v, so q̄ = x̄_prev - α(mean_i v_i) must equal
-            # x̄_prev - α(v + e).  We verify Eq. 10a's decomposition directly:
-            xbar_prev_st = gossip.stack_tree(xbar_prev, m)
-            snapbar = gossip.node_mean(state.snapshot)
-            snapbar_st = gossip.stack_tree(snapbar, m)
-            g_xbar = node_grad(xbar_prev_st, batch)           # ∇f_i^{l_i}(x̄)
-            g_snapbar = node_grad(snapbar_st, batch)          # ∇f_i^{l_i}(x̃)
-            full_at_snap_i = state.full_grad                  # ∇f_i(x̃_i)
-            full_at_snapbar = full_grad_fn(snapbar_st)        # ∇f_i(x̃)
-            g_now = node_grad(params, batch)
-            g_snap_i = node_grad(state.snapshot, batch)
+        # --- Theorem-1 claim (i): centralized v + e reproduce q̄ ----------
+        # v^(k,s) of Algorithm 2 uses the same samples at the averaged
+        # iterates; e^(k,s) (Eq. 10a) is exactly the difference
+        # mean_i v_i - v, so q̄ = x̄_prev - α(mean_i v_i) must equal
+        # x̄_prev - α(v + e).  We verify Eq. 10a's decomposition directly:
+        xbar_prev_st = gossip.stack_tree(xbar_prev, m)
+        snapbar = gossip.node_mean(est.snapshot)
+        snapbar_st = gossip.stack_tree(snapbar, m)
+        g_xbar = node_grad(xbar_prev_st, batch)           # ∇f_i^{l_i}(x̄)
+        g_snapbar = node_grad(snapbar_st, batch)          # ∇f_i^{l_i}(x̃)
+        full_at_snap_i = est.full_grad                    # ∇f_i(x̃_i)
+        full_at_snapbar = full_grad_fn(snapbar_st)        # ∇f_i(x̃)
+        g_now = node_grad(params, batch)
+        g_snap_i = node_grad(est.snapshot, batch)
 
-            # Eq. (10a): e = mean_i[(∇f_i^l(x_i)-∇f_i^l(x̄))
-            #                       + (∇f_i^l(x̃) - ∇f_i^l(x̃_i))
-            #                       + (∇f_i(x̃_i) - ∇f_i(x̃))]
-            e_tree = jax.tree.map(
-                lambda a, b, c, d_, e_, f_: jnp.mean(
-                    (a - b) + (c - d_) + (e_ - f_), axis=0),
-                g_now, g_xbar, g_snapbar, g_snap_i, full_at_snap_i,
-                full_at_snapbar)
-            # centralized estimator v = mean_i[∇f_i^l(x̄) - ∇f_i^l(x̃) + ∇f_i(x̃)]
-            v_central = jax.tree.map(
-                lambda a, b, c: jnp.mean(a - b + c, axis=0),
-                g_xbar, g_snapbar, full_at_snapbar)
-            qbar_from_alg2 = jax.tree.map(
-                lambda x, vv, ee: x - hp.alpha * (vv + ee),
-                xbar_prev, v_central, e_tree)
-            qbar_actual = gossip.node_mean(q_i)
-            d_qbar.append(float(svrg.tree_norm(
-                svrg.tree_sub(qbar_actual, qbar_from_alg2))))
-            d_enorm.append(float(svrg.tree_norm(e_tree)))
+        # Eq. (10a): e = mean_i[(∇f_i^l(x_i)-∇f_i^l(x̄))
+        #                       + (∇f_i^l(x̃) - ∇f_i^l(x̃_i))
+        #                       + (∇f_i(x̃_i) - ∇f_i(x̃))]
+        e_tree = jax.tree.map(
+            lambda a, b, c, d_, e_, f_: jnp.mean(
+                (a - b) + (c - d_) + (e_ - f_), axis=0),
+            g_now, g_xbar, g_snapbar, g_snap_i, full_at_snap_i,
+            full_at_snapbar)
+        # centralized estimator v = mean_i[∇f_i^l(x̄) - ∇f_i^l(x̃) + ∇f_i(x̃)]
+        v_central = jax.tree.map(
+            lambda a, b, c: jnp.mean(a - b + c, axis=0),
+            g_xbar, g_snapbar, full_at_snapbar)
+        qbar_from_alg2 = jax.tree.map(
+            lambda x, vv, ee: x - hp.alpha * (vv + ee),
+            xbar_prev, v_central, e_tree)
+        qbar_actual = gossip.node_mean(q_i)
+        d_qbar.append(float(svrg.tree_norm(
+            svrg.tree_sub(qbar_actual, qbar_from_alg2))))
+        d_enorm.append(float(svrg.tree_norm(e_tree)))
 
-            # --- claim (ii): doubly-stochastic mixing preserves the mean --
-            d_mix.append(float(svrg.tree_norm(
-                svrg.tree_sub(gossip.node_mean(q_hat), qbar_actual))))
+        # --- claim (ii): doubly-stochastic mixing preserves the mean ------
+        d_mix.append(float(svrg.tree_norm(
+            svrg.tree_sub(gossip.node_mean(q_hat), qbar_actual))))
 
-            # --- claim (iii): x̄ is an ε-inexact prox of q̄ ----------------
-            xbar_new = gossip.node_mean(x_new)
-            y = prox.apply(qbar_actual, hp.alpha)  # exact prox of q̄
-            # Eq. (10b): ε = 1/(2α)||x̄-y||² + <x̄-y, (y-q̄)/α + p>, p ∈ ∂h(x̄)
-            diff = _tree_flat(svrg.tree_sub(xbar_new, y))
-            yq = _tree_flat(svrg.tree_sub(y, qbar_actual))
-            # subgradient of h at x̄ (for l1: sign; valid subgradient at 0 is 0)
-            lam = _l1_lambda(prox)
-            p_vec = lam * jnp.sign(_tree_flat(xbar_new))
-            eps = float(jnp.vdot(diff, diff) / (2 * hp.alpha)
-                        + jnp.vdot(diff, yq / hp.alpha + p_vec))
-            d_eps.append(eps)
-            # inexactness inequality (9):
-            # 1/(2α)||x̄-q̄||² + h(x̄) ≤ min_y {...} + ε
-            def _proxobj(pt):
-                dd = _tree_flat(svrg.tree_sub(pt, qbar_actual))
-                return float(jnp.vdot(dd, dd) / (2 * hp.alpha) + prox.value(pt))
-            lhs = _proxobj(xbar_new)
-            rhs = _proxobj(y) + eps
-            d_slack.append(rhs - lhs)
+        # --- claim (iii): x̄ is an ε-inexact prox of q̄ --------------------
+        xbar_new = gossip.node_mean(x_new)
+        y = prox.apply(qbar_actual, hp.alpha)  # exact prox of q̄
+        # Eq. (10b): ε = 1/(2α)||x̄-y||² + <x̄-y, (y-q̄)/α + p>, p ∈ ∂h(x̄)
+        diff = _tree_flat(svrg.tree_sub(xbar_new, y))
+        yq = _tree_flat(svrg.tree_sub(y, qbar_actual))
+        p_vec = _tree_flat(_prox_subgradient(prox, xbar_new))
+        eps = float(jnp.vdot(diff, diff) / (2 * hp.alpha)
+                    + jnp.vdot(diff, yq / hp.alpha + p_vec))
+        d_eps.append(eps)
+        # inexactness inequality (9):
+        # 1/(2α)||x̄-q̄||² + h(x̄) ≤ min_y {...} + ε
+        def _proxobj(pt):
+            dd = _tree_flat(svrg.tree_sub(pt, qbar_actual))
+            return float(jnp.vdot(dd, dd) / (2 * hp.alpha) + prox.value(pt))
+        lhs = _proxobj(xbar_new)
+        rhs = _proxobj(y) + eps
+        d_slack.append(rhs - lhs)
 
-            d_cons.append(graphs.consensus_distance(np.stack(
-                [np.asarray(_tree_flat(gossip.unstack_tree(x_new, i)))
-                 for i in range(m)])))
+        d_cons.append(graphs.consensus_distance(np.stack(
+            [np.asarray(_tree_flat(gossip.unstack_tree(x_new, i)))
+             for i in range(m)])))
 
-            params = x_new
-            inner_sum = svrg.tree_add(inner_sum, params)
-        snapshot_point = jax.tree.map(lambda acc: acc / K_s, inner_sum)
+        return new_state
+
+    wrapped = dataclasses.replace(algo, step=diagnostic_step)
+    runner_lib.run(wrapped, problem, schedule, seed=seed, record_every=0)
 
     return Theorem1Diagnostics(
         qbar_residual=np.array(d_qbar),
@@ -225,11 +336,3 @@ def verify_theorem1(loss_fn: Callable,
         ineq9_slack=np.array(d_slack),
         grad_err_norm=np.array(d_enorm),
         consensus=np.array(d_cons))
-
-
-def _l1_lambda(prox: prox_lib.Prox) -> float:
-    """Extract lambda from an l1 prox name 'l1(lam)'; 0 for others."""
-    name = prox.name
-    if name.startswith("l1(") and name.endswith(")"):
-        return float(name[3:-1])
-    return 0.0

@@ -40,11 +40,17 @@ class Prox:
 
     ``apply(tree, alpha)``: leaf-wise prox with step ``alpha``.
     ``value(tree)``: h(tree) summed over leaves (scalar).
+    ``subgrad(tree)``: a canonical element of the subdifferential ∂h at
+    ``tree`` (the minimal-norm element on kinks, e.g. 0 where the leaf is 0
+    for l1), or ``None`` when no closed form is registered.  Consumers that
+    need a subgradient — e.g. the executable Theorem 1's Eq. (10b) epsilon —
+    must raise loudly on ``None`` rather than silently assume h = 0.
     """
 
     name: str
     apply: Callable
     value: Callable
+    subgrad: Callable | None = None
 
     def __call__(self, tree, alpha):
         return self.apply(tree, alpha)
@@ -77,7 +83,12 @@ def l1(lam: float) -> Prox:
     def _value(leaf):
         return lam * jnp.sum(jnp.abs(leaf))
 
-    return Prox(name=f"l1({lam})", apply=_treewise(_apply), value=_treesum(_value))
+    def _subgrad(z):
+        # minimal-norm element: lam*sign off the kink, 0 at the kink
+        return lam * jnp.sign(z)
+
+    return Prox(name=f"l1({lam})", apply=_treewise(_apply),
+                value=_treesum(_value), subgrad=_treewise(_subgrad))
 
 
 def squared_l2(lam: float) -> Prox:
@@ -88,7 +99,9 @@ def squared_l2(lam: float) -> Prox:
     def _value(leaf):
         return 0.5 * lam * jnp.sum(leaf * leaf)
 
-    return Prox(name=f"sql2({lam})", apply=_treewise(_apply), value=_treesum(_value))
+    return Prox(name=f"sql2({lam})", apply=_treewise(_apply),
+                value=_treesum(_value),
+                subgrad=_treewise(lambda z: lam * z))
 
 
 def elastic_net(lam1: float, lam2: float) -> Prox:
@@ -101,8 +114,11 @@ def elastic_net(lam1: float, lam2: float) -> Prox:
     def _value(leaf):
         return lam1 * jnp.sum(jnp.abs(leaf)) + 0.5 * lam2 * jnp.sum(leaf * leaf)
 
+    def _subgrad(z):
+        return lam1 * jnp.sign(z) + lam2 * z
+
     return Prox(name=f"enet({lam1},{lam2})", apply=_treewise(_apply),
-                value=_treesum(_value))
+                value=_treesum(_value), subgrad=_treewise(_subgrad))
 
 
 def group_lasso(lam: float) -> Prox:
@@ -122,8 +138,16 @@ def group_lasso(lam: float) -> Prox:
         z2 = leaf.reshape(-1, leaf.shape[-1]) if leaf.ndim >= 2 else leaf.reshape(1, -1)
         return lam * jnp.sum(jnp.linalg.norm(z2, axis=-1))
 
+    def _subgrad(z):
+        # lam * x_g / ||x_g|| per group; minimal-norm element 0 at x_g = 0
+        shp = z.shape
+        z2 = z.reshape(-1, shp[-1]) if z.ndim >= 2 else z.reshape(1, -1)
+        nrm = jnp.linalg.norm(z2, axis=-1, keepdims=True)
+        return jnp.where(nrm > 0, lam * z2 / jnp.maximum(nrm, 1e-30),
+                         0.0).reshape(shp)
+
     return Prox(name=f"glasso({lam})", apply=_treewise(_apply),
-                value=_treesum(_value))
+                value=_treesum(_value), subgrad=_treewise(_subgrad))
 
 
 def nuclear(lam: float) -> Prox:
@@ -163,8 +187,10 @@ def box(lo: float, hi: float) -> Prox:
     def _value(leaf):
         return jnp.zeros(())
 
+    # the normal cone of [lo, hi]^d always contains 0 at feasible points
     return Prox(name=f"box({lo},{hi})", apply=_treewise(_apply),
-                value=_treesum(_value))
+                value=_treesum(_value),
+                subgrad=_treewise(lambda z: jnp.zeros_like(z)))
 
 
 def none() -> Prox:
@@ -175,7 +201,8 @@ def none() -> Prox:
     def _value(leaf):
         return jnp.zeros(())
 
-    return Prox(name="none", apply=_treewise(_apply), value=_treesum(_value))
+    return Prox(name="none", apply=_treewise(_apply), value=_treesum(_value),
+                subgrad=_treewise(lambda z: jnp.zeros_like(z)))
 
 
 PROX_REGISTRY = {

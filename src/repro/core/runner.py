@@ -19,9 +19,29 @@ Two execution paths:
   device dispatch — removing per-step Python/dispatch overhead from the hot
   path.  Host-side rng draws happen in the same order as the host loop, so
   both paths consume identical batches; results agree to float tolerance
-  (XLA may fuse the scanned body differently).  Chunks of distinct lengths
-  retrace the scan body once per length (pick ``record_every`` dividing the
-  loop lengths to compile once).
+  (XLA may fuse the scanned body differently).
+
+Two gossip wire formats (``gossip_mode``):
+
+* ``"dense"``: each step's multi-consensus product is a dense ``(m, m)``
+  matrix contracted against the stacked parameters — O(m) communication.
+* ``"banded"``: the driver precomputes the schedule's static band-offset
+  union (:func:`~repro.core.gossip.schedule_band_offsets`) once, converts
+  each step's phi to per-band coefficients (``bands_for_phi``), and feeds a
+  :class:`~repro.core.gossip.BandedPhi` through the step (and through the
+  scan ``xs``) so ``mix_stacked`` dispatches the O(degree) cyclic-shift
+  collectives of ``mix_stacked_banded``.  On ring / edge-matching schedules
+  (degree <= 2) this shrinks per-step communication from O(m) to O(1)
+  collectives inside the same compiled chunk; histories agree with dense to
+  float tolerance.
+
+Scan chunks of distinct lengths are padded to a small set of bucket lengths
+(next power of two; the steady-state ``record_every`` chunk stays exact) with
+a per-step keep-mask, so e.g. DPSVRG's growing ``K_s`` rounds compile
+O(log max K_s) scan executables instead of one per distinct round length.
+Padded steps are skipped at runtime via ``lax.cond`` and consume no rng
+draws, so histories are unchanged.  ``scan_executable_count`` exposes the
+compiled-variant count for benchmarks and tests.
 
 The terminal record is deduplicated: the historical DPSVRG loop appended a
 final history point even when the last inner step had just been recorded,
@@ -31,6 +51,7 @@ recorder only emits the terminal point if the last step wasn't recorded.
 
 from __future__ import annotations
 
+import warnings
 import weakref
 from typing import Any, Callable, NamedTuple
 
@@ -40,7 +61,8 @@ import numpy as np
 
 from . import algorithm as algorithm_lib, gossip, graphs
 
-__all__ = ["RunHistory", "RunResult", "Recorder", "run", "sample_batch"]
+__all__ = ["RunHistory", "RunResult", "Recorder", "run", "sample_batch",
+           "scan_executable_count"]
 
 
 class RunHistory(NamedTuple):
@@ -122,7 +144,7 @@ _SCAN_EXEC_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
 def _make_scan_exec(algo):
-    """One compiled dispatch executing a whole chunk of inner steps."""
+    """One compiled dispatch executing a whole (possibly padded) chunk."""
     cached = _SCAN_EXEC_CACHE.get(algo)
     if cached is not None:
         return cached
@@ -134,10 +156,17 @@ def _make_scan_exec(algo):
 
     def body(state, xs):
         if has_batch:
-            batch, phi, alpha = xs
+            batch, phi, alpha, keep = xs
         else:
-            phi, alpha = xs
-        return step_fn(state, batch if has_batch else None, phi, alpha), None
+            phi, alpha, keep = xs
+        # padded steps (keep=False) skip the update entirely at runtime, so
+        # bucketed chunks stay numerically identical to unpadded ones
+        new_state = jax.lax.cond(
+            keep,
+            lambda s: step_fn(s, batch if has_batch else None, phi, alpha),
+            lambda s: s,
+            state)
+        return new_state, None
 
     @jax.jit
     def exec_chunk(state, xs):
@@ -147,13 +176,60 @@ def _make_scan_exec(algo):
     return exec_chunk
 
 
-def _stack_inputs(meta, batches, phis, alphas):
-    phis = jnp.asarray(np.stack(phis), jnp.float32)
+def scan_executable_count(algo) -> int:
+    """Number of scan-chunk variants compiled for ``algo`` so far (0 if the
+    scan path never ran).  Chunk-length bucketing keeps this O(#buckets)
+    instead of O(#distinct chunk lengths).  Returns -1 when the running jax
+    no longer exposes the jit cache-size introspection (it is a private
+    API); callers must treat -1 as "unknown", not as a count."""
+    exec_chunk = _SCAN_EXEC_CACHE.get(algo)
+    if exec_chunk is None:
+        return 0
+    cache_size = getattr(exec_chunk, "_cache_size", None)
+    if cache_size is None:
+        return -1
+    return cache_size()
+
+
+def _bucket_length(chunk: int, record_every: int) -> int:
+    """Pad-to-bucket policy: the steady-state chunk (== record_every) keeps
+    its exact length; every other length rounds up to the next power of two,
+    bounding compiled scan variants at O(log max-chunk) + 1."""
+    if record_every and chunk == record_every:
+        return chunk
+    return 1 << max(chunk - 1, 0).bit_length()
+
+
+def _stack_phis(phis):
+    if isinstance(phis[0], gossip.BandedPhi):
+        return gossip.BandedPhi(
+            phis[0].offsets,
+            jnp.asarray(np.stack([p.coeffs for p in phis]), jnp.float32))
+    return jnp.asarray(np.stack(phis), jnp.float32)
+
+
+def _stack_inputs(meta, batches, phis, alphas, keep):
+    phis = _stack_phis(phis)
     alphas = jnp.asarray(np.array(alphas, np.float32))
+    keep = jnp.asarray(np.array(keep, np.bool_))
     if meta.batch_size > 0:
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
-        return (batch, phis, alphas)
-    return (phis, alphas)
+        return (batch, phis, alphas, keep)
+    return (phis, alphas, keep)
+
+
+def _band_offsets_for(meta, schedule: graphs.MixingSchedule) -> tuple:
+    """The static band-offset union a compiled banded step must support:
+    offsets of every `rounds`-product the schedule can produce, for every
+    rounds value the algorithm's gossip policy will request."""
+    if meta.outer_lengths is not None:
+        ks = range(1, max(meta.outer_lengths) + 1)
+    else:
+        ks = range(1, meta.num_steps + 1)
+    offs: set = set()
+    for rounds in sorted({meta.gossip_rounds(k) for k in ks}):
+        offs.update(gossip.schedule_band_offsets(schedule, rounds))
+    return tuple(sorted(offs))
 
 
 def run(algo: algorithm_lib.Algorithm,
@@ -163,16 +239,22 @@ def run(algo: algorithm_lib.Algorithm,
         seed: int = 0,
         record_every: int = 1,
         scan: bool = False,
+        gossip_mode: str = "dense",
         extra_metrics: dict | None = None) -> RunResult:
     """Drive ``algo`` on ``problem`` over the time-varying ``schedule``.
 
     record_every: history cadence in inner steps; 0 = once per outer round
                   (outer/inner methods only).
     scan:         use the ``lax.scan`` chunked fast path.
+    gossip_mode:  "dense" ((m, m) contraction per step) or "banded"
+                  (O(degree) cyclic-band collectives via ``BandedPhi``).
     extra_metrics: ``{name: fn(stacked_params) -> float}`` recorded alongside
                   the standard history columns (returned in ``extras``).
     """
     meta = algo.meta
+    if gossip_mode not in ("dense", "banded"):
+        raise ValueError(f"gossip_mode must be 'dense' or 'banded', "
+                         f"got {gossip_mode!r}")
     rng = np.random.default_rng(seed)
     m = jax.tree.leaves(problem.x0)[0].shape[0]
     n = jax.tree.leaves(problem.full_data)[0].shape[1]
@@ -181,6 +263,18 @@ def run(algo: algorithm_lib.Algorithm,
                                   problem.full_data))
     rec = Recorder(obj, meta, m, n, extra_metrics)
     exec_chunk = _make_scan_exec(algo) if scan else None
+    band_offsets = (_band_offsets_for(meta, schedule)
+                    if gossip_mode == "banded" else None)
+    if band_offsets is not None and len(band_offsets) >= m:
+        # e.g. faithful DPSVRG multi-consensus (k_max=None): k-round products
+        # acquire bandwidth k, the offset union saturates, and m cyclic-shift
+        # passes per step are strictly slower than one dense (m, m) einsum
+        warnings.warn(
+            f"{meta.name}/{schedule.name}: banded gossip needs all "
+            f"{len(band_offsets)} of {m} band offsets — no O(degree) "
+            f"structure to exploit; dense gossip_mode will be faster "
+            f"(cap multi-consensus rounds, e.g. k_max, to keep products "
+            f"banded)", RuntimeWarning, stacklevel=2)
     # sample minibatches from a host-side copy: per-step np gathers on device
     # arrays would silently round-trip the whole dataset every step
     host_data = (jax.tree.map(np.asarray, problem.full_data)
@@ -198,7 +292,26 @@ def run(algo: algorithm_lib.Algorithm,
         phi = schedule.consensus_rounds(slot, rounds)
         slot += rounds
         comm += rounds
+        if band_offsets is not None:
+            return gossip.BandedPhi.from_dense(phi, band_offsets)
         return phi
+
+    def device_phi(phi):
+        if isinstance(phi, gossip.BandedPhi):
+            return phi
+        return jnp.asarray(phi, jnp.float32)
+
+    def pad_chunk(batches, phis, alphas, chunk):
+        """Pad collected inputs to the bucket length with masked-out repeats
+        of the last real entry (no extra rng draws, no extra gossip slots)."""
+        bucket = _bucket_length(chunk, record_every)
+        pad = bucket - chunk
+        if pad:
+            if batches:
+                batches.extend(batches[-1:] * pad)
+            phis.extend(phis[-1:] * pad)
+            alphas.extend(alphas[-1:] * pad)
+        return [True] * chunk + [False] * pad
 
     def do_record(params=None):
         rec.record(params if params is not None else algo.get_params(state),
@@ -227,8 +340,10 @@ def run(algo: algorithm_lib.Algorithm,
                                 rng, host_data, meta.batch_size))
                         phis.append(phi_for(meta.gossip_rounds(k + j + 1)))
                         alphas.append(meta.stepsize(t + j + 1))
+                    keep = pad_chunk(batches, phis, alphas, chunk)
                     state = exec_chunk(
-                        state, _stack_inputs(meta, batches, phis, alphas))
+                        state, _stack_inputs(meta, batches, phis, alphas,
+                                             keep))
                     k += chunk
                     t += chunk
                     grad_evals += (chunk * meta.step_grad_factor * m
@@ -238,8 +353,7 @@ def run(algo: algorithm_lib.Algorithm,
                     t += 1
                     batch = (sample_batch(rng, host_data, meta.batch_size)
                              if meta.batch_size > 0 else None)
-                    phi = jnp.asarray(phi_for(meta.gossip_rounds(k)),
-                                      jnp.float32)
+                    phi = device_phi(phi_for(meta.gossip_rounds(k)))
                     state = algo.step(state, batch, phi,
                                       jnp.float32(meta.stepsize(t)))
                     grad_evals += meta.step_grad_factor * m * meta.batch_size
@@ -279,8 +393,9 @@ def run(algo: algorithm_lib.Algorithm,
                             and rng.random() < meta.snapshot_prob):
                         refresh = True   # snapshot lands here: cut the chunk
                         break
+                keep = pad_chunk(batches, phis, alphas, chunk)
                 state = exec_chunk(
-                    state, _stack_inputs(meta, batches, phis, alphas))
+                    state, _stack_inputs(meta, batches, phis, alphas, keep))
                 t += chunk
                 grad_evals += chunk * meta.step_grad_factor * m * meta.batch_size
                 if refresh:
@@ -291,7 +406,7 @@ def run(algo: algorithm_lib.Algorithm,
                 t += 1
                 batch = (sample_batch(rng, host_data, meta.batch_size)
                          if meta.batch_size > 0 else None)
-                phi = jnp.asarray(phi_for(meta.gossip_rounds(t)), jnp.float32)
+                phi = device_phi(phi_for(meta.gossip_rounds(t)))
                 state = algo.step(state, batch, phi,
                                   jnp.float32(meta.stepsize(t)))
                 grad_evals += meta.step_grad_factor * m * meta.batch_size

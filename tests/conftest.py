@@ -8,3 +8,17 @@ import sys
 _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+
+def run_named_algorithm(loss_fn, name, data, h, x0, sched, *factory_args,
+                        seed=0, record_every=1, scan=False,
+                        gossip_mode="dense", **factory_kw):
+    """Shared build-ALGORITHMS-and-drive-runner.run shim for the test suite
+    (single place to update when runner.run's signature grows).  Returns the
+    full RunResult."""
+    from repro.core import algorithm, runner
+    problem = algorithm.Problem(loss_fn, h, x0, data)
+    algo = algorithm.ALGORITHMS[name](problem, *factory_args, **factory_kw)
+    return runner.run(algo, problem, sched, seed=seed,
+                      record_every=record_every, scan=scan,
+                      gossip_mode=gossip_mode)

@@ -1,6 +1,9 @@
 """Unified Algorithm/runner API: bit-for-bit equivalence with the frozen
 pre-refactor loops (tests/_legacy_runs.py), scan-vs-host agreement, the
-double-final-record fix, and the pluggable recorder/registry surface."""
+double-final-record fix, and the pluggable recorder/registry surface.
+
+All comparisons drive ``algorithm.ALGORITHMS`` factories through
+``runner.run`` directly — the deprecated ``*_run`` wrappers are gone."""
 
 import functools
 
@@ -8,10 +11,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import algorithm, baselines, dpsvrg, gossip, graphs, prox, \
-    runner
+from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner
 from repro.data import synthetic
-from tests import _legacy_runs as legacy
+from tests import _legacy_runs as legacy, conftest
 
 
 def logreg_loss(w, batch):
@@ -29,6 +31,13 @@ def _setup(m=4, n=128, d=12, seed=0):
     sched = graphs.b_connected_ring_schedule(m, b=2, seed=0)
     x0 = gossip.stack_tree(jnp.zeros(d), m)
     return data, h, sched, x0
+
+
+def _run(name, data, h, x0, sched, *factory_args, **kw):
+    """runner.run with the historical (params, history) return shape."""
+    res = conftest.run_named_algorithm(logreg_loss, name, data, h, x0, sched,
+                                       *factory_args, **kw)
+    return res.params, res.history
 
 
 def _assert_hist_equal(a, b):
@@ -52,8 +61,7 @@ def test_dpsvrg_matches_legacy_inner_records():
     # so legacy emits no duplicate and the histories must match exactly.
     pl_, hl = legacy.legacy_dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
                                        seed=1, record_every=3)
-    pn, hn = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                               seed=1, record_every=3)
+    pn, hn = _run("dpsvrg", data, h, x0, sched, hp, seed=1, record_every=3)
     _assert_hist_equal(hl, hn)
     _assert_params_equal(pl_, pn)
 
@@ -64,8 +72,7 @@ def test_dpsvrg_matches_legacy_per_round():
                                   k_max=3)
     pl_, hl = legacy.legacy_dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
                                        seed=7, record_every=0)
-    pn, hn = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                               seed=7, record_every=0)
+    pn, hn = _run("dpsvrg", data, h, x0, sched, hp, seed=7, record_every=0)
     _assert_hist_equal(hl, hn)
     _assert_params_equal(pl_, pn)
 
@@ -79,8 +86,7 @@ def test_dpsvrg_final_record_deduplicated():
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=2, num_outer=1)
     _, hl = legacy.legacy_dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
                                      seed=1, record_every=3)
-    _, hn = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                              seed=1, record_every=3)
+    _, hn = _run("dpsvrg", data, h, x0, sched, hp, seed=1, record_every=3)
     assert hl.objective[-1] == hl.objective[-2]          # legacy duplicate
     assert hl.steps[-1] == hl.steps[-2]
     dedup = runner.RunHistory(*(col[:-1] for col in hl))
@@ -92,8 +98,7 @@ def test_dspg_matches_legacy():
     hp = dpsvrg.DSPGHyperParams(alpha0=0.3)
     pl_, hl = legacy.legacy_dspg_run(logreg_loss, h, x0, data, sched, hp,
                                      num_steps=40, seed=2, record_every=7)
-    pn, hn = dpsvrg.dspg_run(logreg_loss, h, x0, data, sched, hp,
-                             num_steps=40, seed=2, record_every=7)
+    pn, hn = _run("dspg", data, h, x0, sched, hp, 40, seed=2, record_every=7)
     _assert_hist_equal(hl, hn)
     _assert_params_equal(pl_, pn)
 
@@ -102,8 +107,7 @@ def test_dpg_matches_legacy():
     data, h, sched, x0 = _setup()
     pl_, hl = legacy.legacy_dpg_run(logreg_loss, h, x0, data, sched,
                                     alpha=0.3, num_steps=25, record_every=4)
-    pn, hn = baselines.dpg_run(logreg_loss, h, x0, data, sched,
-                               alpha=0.3, num_steps=25, record_every=4)
+    pn, hn = _run("dpg", data, h, x0, sched, 0.3, 25, record_every=4)
     _assert_hist_equal(hl, hn)
     _assert_params_equal(pl_, pn)
 
@@ -114,9 +118,8 @@ def test_gt_svrg_matches_legacy(record_every):
     pl_, hl = legacy.legacy_gt_svrg_run(logreg_loss, h, x0, data, sched,
                                         alpha=0.2, num_outer=3, inner_steps=7,
                                         seed=3, record_every=record_every)
-    pn, hn = baselines.gt_svrg_run(logreg_loss, h, x0, data, sched,
-                                   alpha=0.2, num_outer=3, inner_steps=7,
-                                   seed=3, record_every=record_every)
+    pn, hn = _run("gt_svrg", data, h, x0, sched, 0.2, 3, 7, seed=3,
+                  record_every=record_every)
     _assert_hist_equal(hl, hn)
     _assert_params_equal(pl_, pn)
 
@@ -126,9 +129,8 @@ def test_loopless_matches_legacy():
     pl_, hl = legacy.legacy_loopless_dpsvrg_run(
         logreg_loss, h, x0, data, sched, alpha=0.3, num_steps=30,
         snapshot_prob=0.15, seed=4, record_every=6)
-    pn, hn = baselines.loopless_dpsvrg_run(
-        logreg_loss, h, x0, data, sched, alpha=0.3, num_steps=30,
-        snapshot_prob=0.15, seed=4, record_every=6)
+    pn, hn = _run("loopless_dpsvrg", data, h, x0, sched, 0.3, 30,
+                  snapshot_prob=0.15, seed=4, record_every=6)
     _assert_hist_equal(hl, hn)
     _assert_params_equal(pl_, pn)
 
@@ -139,8 +141,7 @@ def test_compressed_dpsvrg_matches_legacy():
                                   compress_bits=8)
     pl_, hl = legacy.legacy_dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
                                        seed=5, record_every=0)
-    pn, hn = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                               seed=5, record_every=0)
+    pn, hn = _run("dpsvrg", data, h, x0, sched, hp, seed=5, record_every=0)
     _assert_hist_equal(hl, hn)
     _assert_params_equal(pl_, pn)
 
@@ -160,20 +161,18 @@ def _assert_scan_agrees(a, b):
 def test_scan_path_matches_host_dpsvrg():
     data, h, sched, x0 = _setup()
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=3, num_outer=4)
-    _, host = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                                seed=1, record_every=3)
-    _, scan = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                                seed=1, record_every=3, scan=True)
+    _, host = _run("dpsvrg", data, h, x0, sched, hp, seed=1, record_every=3)
+    _, scan = _run("dpsvrg", data, h, x0, sched, hp, seed=1, record_every=3,
+                   scan=True)
     _assert_scan_agrees(host, scan)
 
 
 def test_scan_path_matches_host_dspg():
     data, h, sched, x0 = _setup()
     hp = dpsvrg.DSPGHyperParams(alpha0=0.3)
-    _, host = dpsvrg.dspg_run(logreg_loss, h, x0, data, sched, hp,
-                              num_steps=40, seed=2, record_every=8)
-    _, scan = dpsvrg.dspg_run(logreg_loss, h, x0, data, sched, hp,
-                              num_steps=40, seed=2, record_every=8, scan=True)
+    _, host = _run("dspg", data, h, x0, sched, hp, 40, seed=2, record_every=8)
+    _, scan = _run("dspg", data, h, x0, sched, hp, 40, seed=2, record_every=8,
+                   scan=True)
     _assert_scan_agrees(host, scan)
 
 
@@ -181,12 +180,10 @@ def test_scan_path_matches_host_loopless_coin_flips():
     """Coin-flip snapshot refreshes cut scan chunks mid-interval; the rng
     draw order (batch, coin, batch, ...) must still match the host loop."""
     data, h, sched, x0 = _setup()
-    _, host = baselines.loopless_dpsvrg_run(
-        logreg_loss, h, x0, data, sched, alpha=0.3, num_steps=30,
-        snapshot_prob=0.2, seed=4, record_every=6)
-    _, scan = baselines.loopless_dpsvrg_run(
-        logreg_loss, h, x0, data, sched, alpha=0.3, num_steps=30,
-        snapshot_prob=0.2, seed=4, record_every=6, scan=True)
+    _, host = _run("loopless_dpsvrg", data, h, x0, sched, 0.3, 30,
+                   snapshot_prob=0.2, seed=4, record_every=6)
+    _, scan = _run("loopless_dpsvrg", data, h, x0, sched, 0.3, 30,
+                   snapshot_prob=0.2, seed=4, record_every=6, scan=True)
     _assert_scan_agrees(host, scan)
 
 
@@ -194,9 +191,10 @@ def test_scan_path_matches_host_loopless_coin_flips():
 # Protocol surface: registry, metadata, pluggable recorders
 # ---------------------------------------------------------------------------
 
-def test_registry_covers_all_five_algorithms():
-    assert set(algorithm.ALGORITHMS) == {
-        "dpsvrg", "dspg", "dpg", "gt_svrg", "loopless_dpsvrg"}
+def test_registry_covers_all_algorithms():
+    assert set(algorithm.ALGORITHMS) >= {
+        "dpsvrg", "dspg", "dpg", "gt_svrg", "loopless_dpsvrg",
+        "inexact_prox_svrg"}
     data, h, sched, x0 = _setup()
     problem = algorithm.Problem(logreg_loss, h, x0, data)
     algo = algorithm.ALGORITHMS["dspg"](
@@ -233,13 +231,12 @@ def test_extra_metric_recorders():
     assert res.extras["max_abs"][-1] > 0.0
 
 
-def test_run_result_params_match_wrapper():
+def test_run_result_shapes():
     data, h, sched, x0 = _setup()
     problem = algorithm.Problem(logreg_loss, h, x0, data)
     hp = dpsvrg.DSPGHyperParams(alpha0=0.3)
     res = runner.run(algorithm.dspg_algorithm(problem, hp, 15), problem,
                      sched, seed=9, record_every=5)
-    p_wrap, h_wrap = dpsvrg.dspg_run(logreg_loss, h, x0, data, sched, hp,
-                                     num_steps=15, seed=9, record_every=5)
-    _assert_params_equal(res.params, p_wrap)
-    _assert_hist_equal(res.history, h_wrap)
+    assert np.asarray(res.params).shape == np.asarray(x0).shape
+    # initial record + every 5 steps
+    np.testing.assert_array_equal(res.history.steps, [0, 5, 10, 15])

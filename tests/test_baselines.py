@@ -1,19 +1,19 @@
-"""DPG + GT-SVRG baseline behaviour (paper refs [10], [18]/[19])."""
+"""DPG + GT-SVRG baseline behaviour (paper refs [10], [18]/[19]), driven
+through ``algorithm.ALGORITHMS`` + ``runner.run``."""
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, dpsvrg, gossip, graphs, prox
+from repro.core import gossip, graphs, prox
 from repro.data import synthetic
-from tests.test_dpsvrg_convergence import _setup, logreg_loss
+from tests.test_dpsvrg_convergence import _setup, logreg_loss, run_algo
 
 
 def test_dpg_converges_smoothly():
     data, h, f_star, d, m = _setup()
     sched = graphs.b_connected_ring_schedule(m, b=1)
     x0 = gossip.stack_tree(jnp.zeros(d), m)
-    _, hist = baselines.dpg_run(logreg_loss, h, x0, data, sched,
-                                alpha=0.5, num_steps=250, record_every=10)
+    hist = run_algo("dpg", data, h, x0, sched, 0.5, 250, record_every=10)
     gaps = hist.objective - f_star
     assert gaps[-1] < 0.5 * gaps[1]
     # deterministic full gradients: monotone decrease
@@ -24,8 +24,8 @@ def test_gt_svrg_converges_and_tracks():
     data, h, f_star, d, m = _setup()
     sched = graphs.b_connected_ring_schedule(m, b=3, seed=1)
     x0 = gossip.stack_tree(jnp.zeros(d), m)
-    _, hist = baselines.gt_svrg_run(logreg_loss, h, x0, data, sched,
-                                    alpha=0.3, num_outer=8, inner_steps=20)
+    hist = run_algo("gt_svrg", data, h, x0, sched, 0.3, 8, 20,
+                    record_every=0)
     gaps = hist.objective - f_star
     assert gaps[-1] < 0.65 * gaps[1]
     assert gaps[-1] < 0.1
@@ -41,9 +41,8 @@ def test_gt_svrg_handles_noniid():
     h = prox.l1(0.01)
     sched = graphs.b_connected_ring_schedule(m, b=1)
     x0 = gossip.stack_tree(jnp.zeros(30), m)
-    _, hist = baselines.gt_svrg_run(logreg_loss, h, x0, data, sched,
-                                    alpha=0.3, num_outer=8, inner_steps=20,
-                                    seed=3)
+    hist = run_algo("gt_svrg", data, h, x0, sched, 0.3, 8, 20, seed=3,
+                    record_every=0)
     assert hist.objective[-1] < hist.objective[0] - 0.05
 
 
@@ -53,9 +52,8 @@ def test_loopless_dpsvrg_converges():
     data, h, f_star, d, m = _setup()
     sched = graphs.b_connected_ring_schedule(m, b=1)
     x0 = gossip.stack_tree(jnp.zeros(d), m)
-    _, hist = baselines.loopless_dpsvrg_run(
-        logreg_loss, h, x0, data, sched, alpha=0.4, num_steps=200,
-        snapshot_prob=0.05, seed=0)
+    hist = run_algo("loopless_dpsvrg", data, h, x0, sched, 0.4, 200,
+                    snapshot_prob=0.05, seed=0, record_every=10)
     gaps = hist.objective - f_star
     assert gaps[-1] < 0.5 * gaps[1]
     assert gaps[-1] < 0.05

@@ -6,7 +6,7 @@ import numpy as np
 
 from repro.core import compression, dpsvrg, gossip, graphs, prox
 from repro.data import synthetic
-from tests.test_dpsvrg_convergence import logreg_loss
+from tests.test_dpsvrg_convergence import logreg_loss, run_algo
 
 
 def test_quantize_bounds_error():
@@ -17,6 +17,24 @@ def test_quantize_bounds_error():
     scale = np.abs(np.asarray(x)).max(axis=1) / 127.0
     err = np.abs(np.asarray(q - x)).max(axis=1)
     assert np.all(err <= scale * 0.5 + 1e-7)
+
+
+def test_quantize_1d_scale_is_node_local():
+    """Regression: a stacked (m,) leaf (one scalar parameter per node) must
+    be quantized with each node's OWN scale.  The old axis-0 reduction pooled
+    max-abs across all nodes — information no node has in a decentralized
+    run — and crushed small-magnitude nodes to zero next to large ones."""
+    x = jnp.asarray([1e3, 1e-3, -5e2, -2e-4, 0.0], jnp.float32)
+    q = np.asarray(compression.quantize_leaf(x, bits=8))
+    # with a node-local scale a single scalar quantizes exactly
+    np.testing.assert_allclose(q, np.asarray(x), rtol=1e-6, atol=1e-12)
+    # and must match quantizing each node's row in isolation
+    per_node = np.array([
+        float(compression.quantize_leaf(x[i:i + 1], bits=8)[0])
+        for i in range(x.shape[0])])
+    np.testing.assert_allclose(q, per_node, rtol=1e-6, atol=1e-12)
+    # the old global scale (1e3/127 ~ 7.9) would have zeroed node 1:
+    assert abs(q[1] - 1e-3) < 1e-9
 
 
 def test_error_feedback_accumulates_residual():
@@ -38,12 +56,10 @@ def test_compressed_dpsvrg_tracks_uncompressed():
     sched = graphs.b_connected_ring_schedule(m, b=1)
     x0 = gossip.stack_tree(jnp.zeros(30), m)
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=4, num_outer=10)
-    _, full = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                                record_every=0)
+    full = run_algo("dpsvrg", data, h, x0, sched, hp, record_every=0)
     hp8 = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=4, num_outer=10,
                                    compress_bits=8)
-    _, comp = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp8,
-                                record_every=0)
+    comp = run_algo("dpsvrg", data, h, x0, sched, hp8, record_every=0)
     # int8 gossip (4x fewer wire bytes) tracks the f32 run closely
     assert abs(comp.objective[-1] - full.objective[-1]) < 5e-3
     assert comp.objective[-1] < comp.objective[0] - 0.03

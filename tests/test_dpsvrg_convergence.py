@@ -11,6 +11,7 @@ import pytest
 
 from repro.core import dpsvrg, gossip, graphs, prox
 from repro.data import synthetic
+from tests import conftest
 
 
 def logreg_loss(w, batch):
@@ -31,16 +32,21 @@ def _setup(seed=0, n=512, d=30, m=8):
     return data, h, float(chist[-1]), d, m
 
 
+def run_algo(name, data, h, x0, sched, *factory_args, **kw):
+    """History-only view of the shared conftest shim."""
+    return conftest.run_named_algorithm(logreg_loss, name, data, h, x0,
+                                        sched, *factory_args, **kw).history
+
+
 def test_dpsvrg_beats_dspg():
     data, h, f_star, d, m = _setup()
     sched = graphs.b_connected_ring_schedule(m, b=1)
     x0 = gossip.stack_tree(jnp.zeros(d), m)
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.5, beta=1.2, n0=4, num_outer=12)
-    _, hist = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                                record_every=0)
-    _, hist2 = dpsvrg.dspg_run(
-        logreg_loss, h, x0, data, sched,
-        dpsvrg.DSPGHyperParams(alpha0=0.5), num_steps=int(hist.steps[-1]))
+    hist = run_algo("dpsvrg", data, h, x0, sched, hp, record_every=0)
+    hist2 = run_algo("dspg", data, h, x0, sched,
+                     dpsvrg.DSPGHyperParams(alpha0=0.5),
+                     int(hist.steps[-1]), record_every=10)
     gap_vr = hist.objective[-1] - f_star
     gap_base = hist2.objective[-1] - f_star
     assert gap_vr > -1e-4               # cannot beat the optimum
@@ -52,8 +58,7 @@ def test_dpsvrg_converges_with_constant_step():
     sched = graphs.b_connected_ring_schedule(m, b=1)
     x0 = gossip.stack_tree(jnp.zeros(d), m)
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.5, beta=1.25, n0=4, num_outer=14)
-    _, hist = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                                record_every=0)
+    hist = run_algo("dpsvrg", data, h, x0, sched, hp, record_every=0)
     gaps = hist.objective - f_star
     # outer-round gaps must shrink monotonically-ish and end small
     assert gaps[-1] < 0.15 * gaps[1]
@@ -67,17 +72,16 @@ def test_dspg_constant_step_stalls():
     data, h, f_star, d, m = _setup()
     sched = graphs.b_connected_ring_schedule(m, b=1)
     x0 = gossip.stack_tree(jnp.zeros(d), m)
-    _, hist_c = dpsvrg.dspg_run(
-        logreg_loss, h, x0, data, sched,
-        dpsvrg.DSPGHyperParams(alpha0=0.5, constant_step=True),
-        num_steps=700, record_every=5, seed=5)
+    hist_c = run_algo("dspg", data, h, x0, sched,
+                      dpsvrg.DSPGHyperParams(alpha0=0.5, constant_step=True),
+                      700, record_every=5, seed=5)
     gaps = hist_c.objective - f_star
     tail = gaps[-20:]
     # DPSVRG, same constant step, ~same total inner steps (~700): descends
     # below DSPG's noise floor
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.5, beta=1.25, n0=4, num_outer=16)
-    _, hist_vr = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                                   record_every=0, seed=5)
+    hist_vr = run_algo("dpsvrg", data, h, x0, sched, hp, record_every=0,
+                       seed=5)
     assert hist_vr.steps[-1] >= 600
     assert hist_vr.objective[-1] - f_star < 0.6 * tail.min()
     # and descends SMOOTHLY: constant-step DSPG's tail moves up-and-down
@@ -92,8 +96,7 @@ def test_dpsvrg_consensus_achieved():
     sched = graphs.b_connected_ring_schedule(m, b=3, seed=1)
     x0 = gossip.stack_tree(jnp.zeros(d), m)
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=4, num_outer=10)
-    _, hist = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                                record_every=0)
+    hist = run_algo("dpsvrg", data, h, x0, sched, hp, record_every=0)
     assert hist.consensus[-1] < 1e-3
 
 
@@ -104,11 +107,10 @@ def test_rate_order_dpsvrg_faster_decay():
     sched = graphs.b_connected_ring_schedule(m, b=1)
     x0 = gossip.stack_tree(jnp.zeros(d), m)
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.5, beta=1.2, n0=4, num_outer=14)
-    _, hv = dpsvrg.dpsvrg_run(logreg_loss, h, x0, data, sched, hp,
-                              record_every=4)
-    _, hd = dpsvrg.dspg_run(logreg_loss, h, x0, data, sched,
-                            dpsvrg.DSPGHyperParams(alpha0=0.5),
-                            num_steps=int(hv.steps[-1]), record_every=20)
+    hv = run_algo("dpsvrg", data, h, x0, sched, hp, record_every=4)
+    hd = run_algo("dspg", data, h, x0, sched,
+                  dpsvrg.DSPGHyperParams(alpha0=0.5),
+                  int(hv.steps[-1]), record_every=20)
 
     def slope(hist):
         t = hist.steps[2:].astype(float)

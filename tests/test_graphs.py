@@ -7,14 +7,20 @@ import pytest
 from repro.core import graphs
 
 
+def _matching_schedule(m: int) -> graphs.MixingSchedule:
+    mats = graphs.edge_matching_matrices(m)
+    return graphs.MixingSchedule(tuple(mats), b=len(mats), eta=0.5,
+                                 name=f"matching{m}")
+
+
 ALL_SCHEDULES = [
     graphs.static_schedule(graphs.ring_matrix(8), "ring8"),
     graphs.static_schedule(graphs.fully_connected_matrix(8), "full8"),
     graphs.b_connected_ring_schedule(8, b=3, seed=0),
     graphs.b_connected_ring_schedule(8, b=7, seed=1),
     graphs.random_b_connected_schedule(8, b=4, seed=2),
-    graphs.MixingSchedule(tuple(graphs.edge_matching_matrices(8)), b=2,
-                          eta=0.5, name="matching8"),
+    _matching_schedule(8),
+    _matching_schedule(7),      # odd m: the third matching closes the ring
     graphs.MixingSchedule(tuple(graphs.exponential_graph_matrices(8)), b=3,
                           eta=0.5, name="expo8"),
 ]
@@ -44,6 +50,31 @@ def test_b_connectivity(sched):
                     if w[i, j] > 1e-12:
                         g.add_edge(i, j)
         assert nx.is_connected(g), (sched.name, start)
+
+
+@pytest.mark.parametrize("m", [3, 4, 5, 6, 7, 8, 9])
+def test_edge_matchings_union_is_the_ring(m):
+    """Regression (odd-m bug): the union of the edge matchings must be the
+    FULL ring for both parities — every node with degree exactly 2,
+    including the closing edge (m-1, 0) that the odd-m case used to drop
+    (leaving a path, a strictly weaker topology than advertised)."""
+    mats = graphs.edge_matching_matrices(m)
+    assert len(mats) == (2 if m % 2 == 0 else 3)
+    g = nx.Graph()
+    g.add_nodes_from(range(m))
+    for w in mats:
+        assert graphs.is_doubly_stochastic(w)
+        for i in range(m):
+            for j in range(i + 1, m):
+                if w[i, j] > 1e-12:
+                    g.add_edge(i, j)
+    assert nx.is_connected(g)
+    assert g.has_edge(0, m - 1)                    # the closing ring edge
+    assert all(d == 2 for _, d in g.degree)        # exactly the cycle
+    # each slot is a matching: disjoint pairs only
+    for w in mats:
+        for i in range(m):
+            assert (w[i] > 1e-12).sum() <= 2       # self + at most one peer
 
 
 def test_metropolis_weights_star():

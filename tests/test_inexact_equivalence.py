@@ -42,6 +42,57 @@ def test_theorem1_construction():
     assert diag.consensus[-1] < 1e-2
 
 
+def test_theorem1_construction_elastic_net():
+    """Regression: eps (Eq. 10b) and the inequality-(9) slack must use the
+    TRUE subgradient of h.  The old code silently used p = 0 for any non-l1
+    prox, making both diagnostics wrong for elastic net / group lasso; the
+    subgradient now comes from the prox itself."""
+    data, d, m = _data()
+    h = prox.elastic_net(0.01, 0.05)
+    sched = graphs.b_connected_ring_schedule(m, b=1)
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=4, num_outer=5)
+    diag = inexact.verify_theorem1(logreg_loss, h, x0, data, sched, hp)
+    assert diag.qbar_residual.max() < 1e-5
+    assert diag.mix_mean_residual.max() < 1e-5
+    # the inexactness inequality must hold with the elastic-net subgradient
+    assert diag.ineq9_slack.min() > -1e-5
+    assert np.abs(diag.eps).max() < 1e-2
+
+
+def test_theorem1_raises_without_subgradient():
+    """Proxes with no registered subgradient must fail loudly, not silently
+    verify with p = 0."""
+    data, d, m = _data()
+    h = prox.nuclear(0.01)
+    sched = graphs.b_connected_ring_schedule(m, b=1)
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=2, num_outer=1)
+    with np.testing.assert_raises(NotImplementedError):
+        inexact.verify_theorem1(logreg_loss, h, x0, data, sched, hp)
+
+
+def test_inexact_runs_through_unified_runner():
+    """Algorithm 2 is a registry plugin: same runner, host == scan."""
+    from repro.core import algorithm, graphs as graphs_lib, runner
+    data, d, m = _data()
+    flat = {k: jnp.asarray(np.asarray(v).reshape(-1, *v.shape[2:]))
+            for k, v in data.items()}
+    h = prox.l1(0.01)
+    problem = algorithm.Problem(
+        logreg_loss, h, jnp.zeros(d)[None],
+        {k: v[None] for k, v in flat.items()})
+    hp = inexact.InexactHyperParams(alpha=0.5, beta=1.2, n0=4, num_outer=6)
+    algo = algorithm.ALGORITHMS["inexact_prox_svrg"](problem, hp)
+    sched = graphs_lib.static_schedule(np.eye(1), "centralized")
+    host = runner.run(algo, problem, sched, seed=0, record_every=1).history
+    scan = runner.run(algo, problem, sched, seed=0, record_every=1,
+                      scan=True).history
+    np.testing.assert_allclose(host.objective, scan.objective,
+                               rtol=1e-5, atol=1e-7)
+    assert host.objective[-1] < host.objective[0] - 0.05
+
+
 def test_inexact_prox_svrg_zero_error_converges():
     """Algorithm 2 with zero injected errors = exact centralized Prox-SVRG."""
     data, d, m = _data()

@@ -1,0 +1,209 @@
+"""Scan-path coverage PR 1 left open: uneven record cadences (terminal-record
+dedup), coin-flip chunk cuts, banded-vs-dense gossip equivalence inside
+``runner.run(scan=True)``, and bucketed chunk compilation."""
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner
+from repro.data import synthetic
+
+
+def logreg_loss(w, batch):
+    logits = batch["features"] @ w
+    y = batch["labels"]
+    return jnp.mean(-y * logits + jnp.log1p(jnp.exp(logits)))
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(m=4, n=128, d=12, seed=0):
+    ds = synthetic.make_classification(n=n, d=d, seed=seed)
+    data = {k: jnp.asarray(v)
+            for k, v in synthetic.partition_per_node(ds, m).items()}
+    h = prox.l1(0.01)
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    return data, h, x0
+
+
+def _problem(data, h, x0):
+    return algorithm.Problem(logreg_loss, h, x0, data)
+
+
+def _matching_schedule(m=4):
+    mats = graphs.edge_matching_matrices(m)
+    return graphs.MixingSchedule(tuple(mats), b=len(mats), eta=0.5,
+                                 name=f"matching{m}")
+
+
+def _assert_agrees(a, b):
+    for field in ("epochs", "comm_rounds", "steps"):
+        np.testing.assert_array_equal(getattr(a, field), getattr(b, field),
+                                      err_msg=field)
+    np.testing.assert_allclose(a.objective, b.objective, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(a.consensus, b.consensus, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# record_every not dividing the loop lengths (terminal-record dedup)
+# ---------------------------------------------------------------------------
+
+def test_flat_scan_record_every_not_dividing_num_steps():
+    """num_steps % record_every != 0: the tail chunk is shorter than the
+    cadence and the terminal record must appear exactly once."""
+    data, h, x0 = _setup()
+    sched = graphs.b_connected_ring_schedule(4, b=2, seed=0)
+    problem = _problem(data, h, x0)
+    hp = dpsvrg.DSPGHyperParams(alpha0=0.3)
+    runs = {}
+    for scan in (False, True):
+        algo = algorithm.dspg_algorithm(problem, hp, num_steps=37)
+        runs[scan] = runner.run(algo, problem, sched, seed=2,
+                                record_every=7, scan=scan).history
+    _assert_agrees(runs[False], runs[True])
+    # records at 0, 7, ..., 35 and the off-cadence terminal step 37 — once
+    np.testing.assert_array_equal(runs[True].steps,
+                                  [0, 7, 14, 21, 28, 35, 37])
+
+
+def test_outer_scan_record_every_not_dividing_K_s():
+    """record_every not dividing the K_s round lengths: per-round chunk cuts
+    interleave with cadence cuts and the final record is deduplicated."""
+    data, h, x0 = _setup()
+    sched = graphs.b_connected_ring_schedule(4, b=2, seed=0)
+    problem = _problem(data, h, x0)
+    # K_s = (4, 5, 6, 7) with record_every=5: rounds end off-cadence
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=3, num_outer=4)
+    runs = {}
+    for scan in (False, True):
+        algo = algorithm.dpsvrg_algorithm(problem, hp)
+        runs[scan] = runner.run(algo, problem, sched, seed=3,
+                                record_every=5, scan=scan).history
+    _assert_agrees(runs[False], runs[True])
+    # terminal point recorded exactly once
+    assert runs[True].steps[-1] != runs[True].steps[-2]
+
+
+def test_flat_scan_coin_flip_cuts_with_uneven_tail():
+    """snapshot_prob coin flips cut chunks mid-interval AND num_steps is off
+    the cadence — the rng draw order (batch, coin, ...) must match host."""
+    data, h, x0 = _setup()
+    sched = graphs.b_connected_ring_schedule(4, b=2, seed=0)
+    problem = _problem(data, h, x0)
+    runs = {}
+    for scan in (False, True):
+        algo = algorithm.loopless_dpsvrg_algorithm(
+            problem, alpha=0.3, num_steps=33, snapshot_prob=0.25)
+        runs[scan] = runner.run(algo, problem, sched, seed=11,
+                                record_every=8, scan=scan).history
+    _assert_agrees(runs[False], runs[True])
+    assert runs[True].steps[-1] == 33
+
+
+# ---------------------------------------------------------------------------
+# banded gossip inside runner.run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scan", [False, True], ids=["host", "scan"])
+def test_banded_matches_dense_dspg_matching_schedule(scan):
+    data, h, x0 = _setup()
+    sched = _matching_schedule(4)
+    problem = _problem(data, h, x0)
+    hp = dpsvrg.DSPGHyperParams(alpha0=0.3)
+    runs = {}
+    for mode in ("dense", "banded"):
+        algo = algorithm.dspg_algorithm(problem, hp, num_steps=40)
+        runs[mode] = runner.run(algo, problem, sched, seed=2, record_every=8,
+                                scan=scan, gossip_mode=mode).history
+    _assert_agrees(runs["dense"], runs["banded"])
+
+
+def test_banded_scan_matches_host_dpsvrg_multi_consensus():
+    """Multi-consensus products on the matching ring stay inside the static
+    band-offset union; banded scan == dense host to float tolerance.  m=6
+    with k_max=2 keeps the union strictly smaller than m (real O(degree)
+    structure — no degenerate-banded warning)."""
+    data, h, x0 = _setup(m=6)
+    sched = _matching_schedule(6)
+    problem = _problem(data, h, x0)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=3, num_outer=4,
+                                  k_max=2)
+    assert len(gossip.schedule_band_offsets(sched, 2)) < 6
+    algo = algorithm.dpsvrg_algorithm(problem, hp)
+    host = runner.run(algo, problem, sched, seed=1, record_every=3).history
+    band = runner.run(algo, problem, sched, seed=1, record_every=3,
+                      scan=True, gossip_mode="banded").history
+    _assert_agrees(host, band)
+
+
+def test_banded_phi_dispatch_and_offset_guard():
+    """mix_stacked dispatches BandedPhi to the banded kernel; projecting a
+    phi with mass outside the static offset set raises."""
+    sched = _matching_schedule(4)
+    phi = sched.consensus_rounds(0, 2)
+    offsets = gossip.schedule_band_offsets(sched, 2)
+    bp = gossip.BandedPhi.from_dense(phi, offsets)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 6)), jnp.float32)
+    dense = gossip.mix_stacked(phi, {"x": x})["x"]
+    banded = gossip.mix_stacked(bp, {"x": x})["x"]
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(banded),
+                               atol=1e-6)
+    # full ring product needs offsets {0,1,3} on m=4; offsets (0,) is too few
+    with pytest.raises(ValueError):
+        gossip.BandedPhi.from_dense(phi, (0,))
+
+
+def test_runner_rejects_unknown_gossip_mode():
+    data, h, x0 = _setup()
+    sched = _matching_schedule(4)
+    problem = _problem(data, h, x0)
+    algo = algorithm.dspg_algorithm(
+        problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=4)
+    with pytest.raises(ValueError):
+        runner.run(algo, problem, sched, gossip_mode="sparse")
+
+
+# ---------------------------------------------------------------------------
+# chunk-length bucketing
+# ---------------------------------------------------------------------------
+
+def test_dpsvrg_scan_compiles_few_buckets():
+    """Growing K_s rounds (record_every=0: one chunk per round) must compile
+    O(#power-of-two buckets) scan executables, not one per distinct K_s."""
+    data, h, x0 = _setup()
+    sched = graphs.b_connected_ring_schedule(4, b=2, seed=0)
+    problem = _problem(data, h, x0)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4, num_outer=10,
+                                  k_max=3)
+    from repro.core import schedules
+    ks = schedules.inner_loop_lengths(hp.beta, hp.n0, hp.num_outer)
+    distinct = len(set(ks))
+    buckets = len({1 << max(k - 1, 0).bit_length() for k in ks})
+    assert distinct > buckets  # the premise: many lengths, few buckets
+    algo = algorithm.dpsvrg_algorithm(problem, hp)
+    host = runner.run(algo, problem, sched, seed=0, record_every=0).history
+    scan = runner.run(algo, problem, sched, seed=0, record_every=0,
+                      scan=True).history
+    _assert_agrees(host, scan)
+    count = runner.scan_executable_count(algo)
+    if count < 0:
+        pytest.skip("jit cache-size introspection unavailable on this jax")
+    assert count <= buckets
+
+
+def test_steady_state_chunk_is_not_padded():
+    """Chunks exactly record_every long keep their exact shape (no padding
+    overhead on the steady-state hot path): a run whose every chunk is the
+    cadence length compiles exactly one executable."""
+    data, h, x0 = _setup()
+    sched = graphs.b_connected_ring_schedule(4, b=2, seed=0)
+    problem = _problem(data, h, x0)
+    algo = algorithm.dspg_algorithm(
+        problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=40)
+    runner.run(algo, problem, sched, seed=0, record_every=10, scan=True)
+    count = runner.scan_executable_count(algo)
+    if count < 0:
+        pytest.skip("jit cache-size introspection unavailable on this jax")
+    assert count == 1
