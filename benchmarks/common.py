@@ -50,14 +50,16 @@ def make_problem(data, h, x0, objective_fn=None) -> algorithm.Problem:
 
 
 def run_algorithm(name: str, problem, sched, *factory_args, seed=0,
-                  record_every=1, scan=False, gossip_mode="dense",
+                  record_every=1, scan=False, gossip="dense",
                   **factory_kw) -> runner.RunResult:
     """Build ``ALGORITHMS[name]`` and drive it through ``runner.run`` — the
-    one calling convention every figure script shares."""
+    one calling convention every figure script shares.  ``gossip`` pins the
+    dense wire format by default so figure numbers stay comparable across
+    transport-selection changes; pass "auto" or a backend name to override."""
     algo = algorithm.ALGORITHMS[name](problem, *factory_args, **factory_kw)
     return runner.run(algo, problem, sched, seed=seed,
                       record_every=record_every, scan=scan,
-                      gossip_mode=gossip_mode)
+                      gossip=gossip)
 
 
 def f_star(flat, h, d, alpha=0.4, steps=4000):

@@ -19,13 +19,14 @@ def run(scale: float = 0.02, alpha: float = 0.2):
     sched = graphs.b_connected_ring_schedule(8, b=1)
     problem = common.make_problem(data, h, x0)
     hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4, num_outer=10)
-    hv = common.run_algorithm("dpsvrg", problem, sched, hp,
-                              record_every=4).history
+    rv = common.run_algorithm("dpsvrg", problem, sched, hp, record_every=4)
+    hv = rv.history
     comm_vr = int(hv.comm_rounds[-1])
     # give DSPG the SAME total communication budget
-    hd = common.run_algorithm("dspg", problem, sched,
+    rd = common.run_algorithm("dspg", problem, sched,
                               dpsvrg.DSPGHyperParams(alpha0=alpha),
-                              comm_vr, record_every=16).history
+                              comm_vr, record_every=16)
+    hd = rd.history
     gap_vr = hv.objective[-1] - fs
     gap_ds = hd.objective[-1] - fs
     # gap at matched communication points (quartiles of the budget)
@@ -41,4 +42,10 @@ def run(scale: float = 0.02, alpha: float = 0.2):
         "fig2/mnist_like/comm_budget", 0.0,
         f"rounds={comm_vr} gap_dpsvrg={gap_vr:.5f} gap_dspg={gap_ds:.5f} "
         + " ".join(f"@{mk}:({gv:.4f}|{gd:.4f})" for mk, gv, gd in matched)))
+    # the transport backend's byte accounting: communication in WIRE BYTES,
+    # not just rounds (dense all-gather model; see transport.bytes_per_step)
+    rows.append(common.Row(
+        "fig2/mnist_like/wire_bytes", 0.0,
+        f"dpsvrg={int(rv.extras['wire_bytes'][-1])} "
+        f"dspg={int(rd.extras['wire_bytes'][-1])} at matched round budget"))
     return rows

@@ -1,5 +1,5 @@
-"""Unified-runner microbenchmark: host loop vs ``lax.scan`` fast path, dense
-vs banded gossip, and bucketed chunk compilation.
+"""Unified-runner microbenchmark: host loop vs ``lax.scan`` fast path, the
+pluggable gossip transports, and bucketed chunk compilation.
 
 Times the SAME algorithm/problem/schedule through ``runner.run``:
 
@@ -9,21 +9,33 @@ Times the SAME algorithm/problem/schedule through ``runner.run``:
   in one compiled dispatch.  On the CPU container the win is pure per-step
   Python/dispatch overhead removal — exactly the overhead that dominates the
   paper-scale logreg problem, where each step is a tiny (m, d) update.
-* ``gossip_mode="dense"`` vs ``"banded"`` on a TDMA edge-matching ring
-  (degree <= 2): banded feeds per-band coefficients through the scan xs and
-  gossips via ``mix_stacked_banded`` — O(degree) cyclic-shift collectives
-  instead of an O(m) dense contraction.
+* per-transport (``gossip=``): dense vs banded on a TDMA edge-matching ring
+  (degree <= 2), plus the full ``GOSSIP_BACKENDS`` sweep on the 8-node ring
+  with each backend's ms/step AND wire bytes/step from its own
+  ``bytes_per_step`` accounting — so the O(degree) claim is visible in
+  bytes, not just wall time.  ``ppermute`` is only *timed* when the process
+  has >= 8 devices (its wire accounting is identical to banded and is
+  always reported); ``compressed`` rides dense at bits/32 the bytes.
 * DPSVRG with per-round chunks (``record_every=0``): growing K_s rounds are
   padded to power-of-two buckets, so the scan body compiles O(#buckets)
   executables instead of one per distinct round length
   (``runner.scan_executable_count``); the cold row includes compile time.
+
+``python -m benchmarks.runner_bench --json [PATH]`` additionally writes the
+per-backend stats as ``BENCH_runner.json`` so the perf trajectory is
+machine-tracked across PRs.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
-from repro.core import algorithm, dpsvrg, gossip, graphs, runner, schedules
+import jax
+
+from repro.core import (algorithm, dpsvrg, gossip, graphs, runner, schedules,
+                        transport)
 from . import common
 
 
@@ -36,6 +48,53 @@ def _time_run(algo, problem, sched, *, record_every, scan, iters=3, **kw):
         runner.run(algo, problem, sched, seed=0, record_every=record_every,
                    scan=scan, **kw)
     return (time.time() - t0) / iters * 1e6
+
+
+def backend_stats(scale: float = 0.02) -> dict:
+    """ms/step + wire bytes/step for every registered gossip backend, DPSVRG
+    (k_max=2) on the 8-node ring."""
+    data, flat, h, x0, d = common.setup_problem("adult_like", scale)
+    sched = graphs.b_connected_ring_schedule(8, b=1, seed=0)
+    problem = algorithm.Problem(common.logreg_loss, h, x0, data)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4, num_outer=8,
+                                  k_max=2)
+    stats = {}
+    for name in sorted(transport.GOSSIP_BACKENDS):
+        algo = algorithm.ALGORITHMS["dpsvrg"](problem, hp)
+        timable = name != "ppermute" or len(jax.devices()) >= sched.m
+        entry = {"timed": timable}
+        if timable:
+            t_us = _time_run(algo, problem, sched, record_every=0, scan=True,
+                             gossip=name)
+            res = runner.run(algo, problem, sched, seed=0, record_every=0,
+                             scan=True, gossip=name)
+            steps = int(res.history.steps[-1])
+            entry["ms_per_step"] = t_us / 1e3 / steps
+            entry["wire_bytes_per_step"] = (
+                int(res.extras["wire_bytes"][-1]) / steps)
+        else:
+            # ppermute's band accounting is identical to banded's (same
+            # offsets, point-to-point collectives) — report the analytic
+            # bytes even when the process lacks the devices to time it
+            backend = transport.GOSSIP_BACKENDS["banded"]
+            aux = backend.prepare(sched, algo.meta)
+            wire = 0
+            slot, steps = 0, 0
+            for K in algo.meta.outer_lengths:
+                for k in range(1, K + 1):
+                    rounds = algo.meta.gossip_rounds(k)
+                    phi = backend.phi_for(aux, slot, rounds)
+                    wire += backend.bytes_per_step(
+                        aux, phi, transport.node_param_count(x0))
+                    slot += rounds
+                    steps += 1
+            entry["ms_per_step"] = None
+            entry["wire_bytes_per_step"] = wire / steps
+            entry["note"] = (f"needs a {sched.m}-device node mesh to run "
+                             f"(bytes computed analytically)")
+        stats[name] = entry
+    return {"schedule": f"ring{sched.m}", "algorithm": "dpsvrg_kmax2",
+            "param_dim": int(d), "scale": scale, "backends": stats}
 
 
 def run(scale: float = 0.02):
@@ -62,9 +121,10 @@ def run(scale: float = 0.02):
     algo = algorithm.dspg_algorithm(
         problem, dpsvrg.DSPGHyperParams(alpha0=0.2), num_steps=600)
     t_host = _time_run(algo, problem, match, record_every=100, scan=False)
-    t_dense = _time_run(algo, problem, match, record_every=100, scan=True)
+    t_dense = _time_run(algo, problem, match, record_every=100, scan=True,
+                        gossip="dense")
     t_band = _time_run(algo, problem, match, record_every=100, scan=True,
-                       gossip_mode="banded")
+                       gossip="banded")
     n_bands = len(gossip.schedule_band_offsets(match, 1))
     rows.append(common.Row("runner/matching_host", t_host,
                            "dense gossip, one dispatch per step"))
@@ -74,6 +134,17 @@ def run(scale: float = 0.02):
         "runner/matching_scan_banded", t_band,
         f"{n_bands} bands (deg<=2) speedup={t_host / t_band:.1f}x vs host "
         f"{t_dense / t_band:.2f}x vs dense-scan"))
+
+    # the full backend sweep: ms/step + wire bytes/step per transport
+    bstats = backend_stats(scale)
+    for name, entry in bstats["backends"].items():
+        ms = entry["ms_per_step"]
+        rows.append(common.Row(
+            f"runner/backend_{name}",
+            0.0 if ms is None else ms * 1e3,
+            f"wire_bytes/step={entry['wire_bytes_per_step']:.0f}"
+            + ("" if entry["timed"] else " (not timed: " +
+               entry.get("note", "") + ")")))
 
     # DPSVRG: growing inner rounds, per-round chunks (record_every=0) —
     # bucketing compiles O(#buckets) executables across all K_s lengths
@@ -97,3 +168,31 @@ def run(scale: float = 0.02):
         "runner/dpsvrg_scan_cold", t_cold,
         f"{execs} compiled buckets for {len(set(ks))} distinct K_s"))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--json", nargs="?", const="BENCH_runner.json",
+                    default=None, metavar="PATH",
+                    help="write per-backend ms/step + wire bytes to PATH "
+                         "(default BENCH_runner.json) for cross-PR tracking")
+    args = ap.parse_args()
+    if args.json:
+        out = backend_stats(args.scale)
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.json}")
+        for name, entry in out["backends"].items():
+            ms = entry["ms_per_step"]
+            print(f"  {name:11s} ms/step="
+                  f"{'n/a' if ms is None else format(ms, '.3f'):>7s} "
+                  f"wire_bytes/step={entry['wire_bytes_per_step']:.0f}")
+    else:
+        print("name,us_per_call,derived")
+        for r in run(args.scale):
+            print(f"{r.name},{r.us_per_call:.1f},{r.derived}")
+
+
+if __name__ == "__main__":
+    main()

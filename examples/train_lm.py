@@ -32,6 +32,10 @@ def main():
     ap.add_argument("--lam", type=float, default=1e-6)
     ap.add_argument("--algorithm", default="dpsvrg",
                     choices=["dpsvrg", "dspg"])
+    ap.add_argument("--gossip", default="auto",
+                    choices=["auto", "dense", "banded", "ppermute"],
+                    help="transport backend (transport.GOSSIP_BACKENDS); "
+                         "auto picks banded on band-structured schedules")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
@@ -60,14 +64,15 @@ def main():
     tc = trainer.TrainerConfig(
         num_steps=args.steps, snapshot_every=max(args.steps // 6, 25),
         alpha=args.alpha, consensus_rounds=2, algorithm=args.algorithm,
-        log_every=10, ckpt_dir=args.ckpt_dir or None,
+        gossip=args.gossip, log_every=10, ckpt_dir=args.ckpt_dir or None,
         ckpt_every=100 if args.ckpt_dir else 0)
     t0 = time.time()
     hist = trainer.train_loop(cfg, prox.l1(args.lam), sched, batches(), tc)
     dt = time.time() - t0
-    print(f"\nstep  loss    v_norm")
-    for s, l, v in zip(hist["step"], hist["loss"], hist["v_norm"]):
-        print(f"{s:5d} {l:7.4f} {v:9.2f}")
+    print(f"\nstep  loss    v_norm      wire_MB")
+    for s, l, v, w in zip(hist["step"], hist["loss"], hist["v_norm"],
+                          hist["wire_bytes"]):
+        print(f"{s:5d} {l:7.4f} {v:9.2f} {w / 1e6:10.1f}")
     print(f"\n{args.steps} steps in {dt:.1f}s "
           f"({dt / args.steps * 1e3:.0f} ms/step); "
           f"loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f}")

@@ -4,10 +4,13 @@ Submodules:
   graphs     — time-varying b-connected doubly-stochastic mixing schedules
   prox       — closed-form proximal operators (l1, elastic net, group lasso, ...)
   svrg       — variance-reduced gradient estimator + snapshot state
-  gossip     — consensus over stacked node parameters (einsum & ppermute paths)
+  gossip     — consensus over stacked node parameters (dense einsum, cyclic
+               bands, shard_map ppermute)
+  transport  — the pluggable `GossipBackend` wire formats (dense / banded /
+               ppermute / compressed), "auto" selection, wire-byte accounting
   algorithm  — the unified `DecentralizedAlgorithm` protocol + all methods
   runner     — the single generic driver (host loop + lax.scan fast path,
-               dense or banded gossip, bucketed chunk compilation)
+               pluggable gossip transports, bucketed chunk compilation)
   dpsvrg     — Algorithm 1 hyper-params / step builders + centralized prox-GD
   inexact    — Algorithm 2 (Inexact Prox-SVRG) on the protocol + executable
                Theorem 1 (registered as ALGORITHMS["inexact_prox_svrg"])
@@ -36,7 +39,7 @@ paper-scale repro and LM-scale training share one update implementation.
 """
 
 from . import (algorithm, dpsvrg, gossip, graphs, inexact, prox, runner,
-               schedules, svrg)
+               schedules, svrg, transport)
 
 __all__ = ["algorithm", "dpsvrg", "gossip", "graphs", "inexact", "prox",
-           "runner", "schedules", "svrg"]
+           "runner", "schedules", "svrg", "transport"]

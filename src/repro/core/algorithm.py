@@ -35,7 +35,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import gossip, prox as prox_lib, schedules, svrg
+from . import compression, gossip, prox as prox_lib, schedules, svrg
 
 __all__ = [
     "Problem",
@@ -145,8 +145,10 @@ def prox_gossip_update(params, v, phi, alpha, prox: prox_lib.Prox,
         q_hat = gossip(phi, q)
         x'    = prox_h^alpha(q_hat)
 
-    ``mix_fn`` pluggable so the LM trainer can swap the dense einsum for the
-    O(degree) banded-collective gossip without forking the update.
+    The default ``mix_fn`` (``gossip.mix_stacked``) dispatches on the phi's
+    wire format (dense / ``BandedPhi`` / ``PermutePhi``), so the same update
+    serves every stateless transport backend; ``mix_fn`` stays pluggable for
+    callers that need a bespoke collective.
     """
     q = jax.tree.map(lambda x, vi: x - alpha * vi.astype(x.dtype), params, v)
     q_hat = mix_fn(phi, q)
@@ -185,33 +187,31 @@ def build_node_full_grad_fn(loss_fn: Callable, full_batch) -> Callable:
 
 def build_dpsvrg_inner_step(loss_fn: Callable, prox: prox_lib.Prox,
                             compress_bits: int | None = None):
-    """Returns jitted ``step(params, svrg_state, batch, phi, alpha[, cstate])``
-    implementing Algorithm 1 lines 7-11 for all nodes at once.  With
-    ``compress_bits``, gossip carries quantized iterates with error feedback
-    (core.compression) and the step threads the compression state.
+    """Returns jitted ``step(params, svrg_state, batch, phi, alpha, cstate)
+    -> (params, cstate)`` implementing Algorithm 1 lines 7-11 for all nodes
+    at once.  ``phi`` may be any transport wire format (dense, ``BandedPhi``,
+    ``PermutePhi``, ``CompressedPhi``) — the mix dispatches on its type at
+    trace time.  ``cstate`` is the error-feedback state for compressed
+    gossip (None, returned untouched, for stateless transports).  The legacy
+    ``compress_bits`` hyperparameter wraps the incoming phi in a
+    ``CompressedPhi`` so hp-level compression and the ``compressed``
+    transport backend share one code path.
     """
     node_grad = build_node_grad_fn(loss_fn)
 
-    if compress_bits is None:
-        @jax.jit
-        def step(params, svrg_state, batch, phi, alpha):
-            v = svrg.corrected_gradient(node_grad, params, svrg_state, batch)
-            return prox_gossip_update(params, v, phi, alpha, prox)
-
-        return step
-
-    from . import compression
-
     @jax.jit
-    def step_c(params, svrg_state, batch, phi, alpha, cstate):
+    def step(params, svrg_state, batch, phi, alpha, cstate):
+        if compress_bits is not None and \
+                not isinstance(phi, compression.CompressedPhi):
+            phi = compression.CompressedPhi(phi, compress_bits)
         v = svrg.corrected_gradient(node_grad, params, svrg_state, batch)
-        q = jax.tree.map(lambda x, vi: x - alpha * vi, params, v)
-        q_hat, cstate = compression.compressed_mix(phi, q, cstate,
-                                                   bits=compress_bits)
+        q = jax.tree.map(lambda x, vi: x - alpha * vi.astype(x.dtype),
+                         params, v)
+        q_hat, cstate = compression.mix_with_state(phi, q, cstate)
         x = prox.apply(q_hat, alpha)
         return x, cstate
 
-    return step_c
+    return step
 
 
 def build_dspg_step(loss_fn: Callable, prox: prox_lib.Prox):
@@ -262,6 +262,15 @@ class AlgoMeta:
       epoch_metric:     "grad" (evals / (m n)) | "steps" (DPG: 1 epoch/step)
       record_key:       "round" | "global" — which counter record_every keys on
       final_record:     force a terminal record (deduplicated by the runner)
+
+    Wire format:
+      compress_bits:    the method itself quantizes its gossip payload at
+                        this int width (error feedback threaded through the
+                        algorithm state).  The runner wraps the resolved
+                        transport in a CompressedBackend at these bits so
+                        the wire-byte accounting matches what actually moves
+                        (and raises if a conflicting compressed transport is
+                        requested).
     """
     name: str
     stepsize: Callable[[int], float]
@@ -279,6 +288,7 @@ class AlgoMeta:
     epoch_metric: str = "grad"
     record_key: str = "round"
     final_record: bool = True
+    compress_bits: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -288,6 +298,12 @@ class Algorithm:
     ``step`` must be jit-compatible (the runner traces it under ``lax.scan``
     on the fast path); ``init``/``outer``/``end_outer`` run on host between
     dispatches and may mix eager and jitted work.
+
+    ``init_mix_state`` opts the algorithm into STATEFUL gossip transports
+    (the ``compressed`` backend's error-feedback residual): it injects a
+    fresh mix state into an initialized algorithm state, and the step must
+    thread that state through its mix (``compression.mix_with_state``).
+    Algorithms leaving it None can only be driven by stateless transports.
     """
     meta: AlgoMeta
     init: Callable[[], Any]
@@ -295,6 +311,7 @@ class Algorithm:
     outer: Callable[[Any], Any] | None = None
     end_outer: Callable[[Any, int], Any] | None = None
     rule: UpdateRule | None = None
+    init_mix_state: Callable[[Any], Any] | None = None
 
     @staticmethod
     def get_params(state):
@@ -344,15 +361,16 @@ def dpsvrg_algorithm(problem: Problem, hp: DPSVRGHyperParams) -> Algorithm:
     inner = build_dpsvrg_inner_step(problem.loss_fn, problem.prox,
                                     compress_bits=hp.compress_bits)
     full_grad_fn = build_node_full_grad_fn(problem.loss_fn, problem.full_data)
-    compressed = hp.compress_bits is not None
 
     def init():
-        cstate = None
-        if compressed:
-            from . import compression
-            cstate = compression.init_state(problem.x0)
+        cstate = (compression.init_state(problem.x0)
+                  if hp.compress_bits is not None else None)
         return DPSVRGState(params=problem.x0, anchor=problem.x0, est=None,
                            inner_sum=_zeros_like(problem.x0), cstate=cstate)
+
+    def init_mix_state(state):
+        # the compressed transport threads its residual through cstate
+        return state._replace(cstate=compression.init_state(problem.x0))
 
     def outer(state):
         est = svrg.SvrgState(snapshot=state.anchor,
@@ -360,12 +378,8 @@ def dpsvrg_algorithm(problem: Problem, hp: DPSVRGHyperParams) -> Algorithm:
         return state._replace(est=est, inner_sum=_zeros_like(state.params))
 
     def step(state, batch, phi, alpha):
-        if compressed:
-            params, cstate = inner(state.params, state.est, batch, phi, alpha,
-                                   state.cstate)
-        else:
-            params = inner(state.params, state.est, batch, phi, alpha)
-            cstate = state.cstate
+        params, cstate = inner(state.params, state.est, batch, phi, alpha,
+                               state.cstate)
         return state._replace(params=params, cstate=cstate,
                               inner_sum=svrg.tree_add(state.inner_sum, params))
 
@@ -393,9 +407,11 @@ def dpsvrg_algorithm(problem: Problem, hp: DPSVRGHyperParams) -> Algorithm:
         comm_metric="gossip",
         record_key="round",
         final_record=True,
+        compress_bits=hp.compress_bits,
     )
     return Algorithm(meta=meta, init=init, step=step, outer=outer,
-                     end_outer=end_outer, rule=DPSVRG_RULE)
+                     end_outer=end_outer, rule=DPSVRG_RULE,
+                     init_mix_state=init_mix_state)
 
 
 def dspg_algorithm(problem: Problem, hp: DSPGHyperParams,
@@ -526,8 +542,8 @@ def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
             snapshot=state.params, full_grad=full_grad_fn(state.params)))
 
     def step(state, batch, phi, alpha):
-        return state._replace(
-            params=inner(state.params, state.est, batch, phi, alpha))
+        params, _ = inner(state.params, state.est, batch, phi, alpha, None)
+        return state._replace(params=params)
 
     meta = AlgoMeta(
         name="loopless_dpsvrg",

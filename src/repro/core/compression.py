@@ -11,6 +11,13 @@ uncompressed run (tests/test_compression.py) at 4x fewer gossip bytes
     q_send   = Q(q + e)          # symmetric per-leaf int8
     e_next   = (q + e) - q_send  # residual carried forward
     mix over q_send as usual.
+
+The mix over ``q_send`` goes through ``gossip.mix_stacked``, so the
+quantized payload rides ANY wire format — dense, :class:`~repro.core.gossip.
+BandedPhi`, or :class:`~repro.core.gossip.PermutePhi`.  :class:`CompressedPhi`
+marks a phi whose transport is compressed (the ``compressed`` backend in
+:mod:`repro.core.transport`); :func:`mix_with_state` is the dispatching mix
+for algorithm steps that thread an error-feedback state.
 """
 
 from __future__ import annotations
@@ -23,7 +30,7 @@ import jax.numpy as jnp
 from . import gossip
 
 __all__ = ["CompressionState", "init_state", "quantize_leaf",
-           "compressed_mix"]
+           "compressed_mix", "CompressedPhi", "mix_with_state"]
 
 
 class CompressionState(NamedTuple):
@@ -69,3 +76,48 @@ def compressed_mix(phi, tree, state: CompressionState,
     new_error = jax.tree.map(jnp.subtract, compensated, sent)
     mixed = gossip.mix_stacked(phi, sent)
     return mixed, CompressionState(error=new_error)
+
+
+@jax.tree_util.register_pytree_node_class
+class CompressedPhi:
+    """Marks a mixing matrix whose payload rides the wire int-quantized with
+    error feedback.  ``inner`` is any phi representation ``mix_stacked``
+    accepts (dense array, ``BandedPhi``, ``PermutePhi``) — so compression
+    composes with every stateless transport.  ``bits`` is static aux data;
+    the inner phi's own leaves stack through ``lax.scan`` xs as usual.
+    """
+
+    __slots__ = ("inner", "bits")
+
+    def __init__(self, inner, bits: int = 8):
+        self.inner = inner
+        self.bits = int(bits)
+
+    def tree_flatten(self):
+        return (self.inner,), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, bits, children):
+        return cls(children[0], bits)
+
+    def __repr__(self):
+        return f"CompressedPhi(bits={self.bits}, inner={self.inner!r})"
+
+
+def mix_with_state(phi, tree, state: CompressionState | None):
+    """Transport-dispatching mix for steps that thread a mix state.
+
+    Stateless phis pass straight through ``gossip.mix_stacked`` (state is
+    returned untouched, and may be None); a :class:`CompressedPhi` routes to
+    :func:`compressed_mix` with its inner wire format.  The isinstance check
+    happens at trace time (phi's type is pytree structure), so jitted steps
+    specialize per transport with zero runtime dispatch cost.
+    """
+    if isinstance(phi, CompressedPhi):
+        if state is None:
+            raise ValueError(
+                "compressed gossip needs an error-feedback CompressionState; "
+                "the driven algorithm must thread a mix state "
+                "(see Algorithm.init_mix_state)")
+        return compressed_mix(phi.inner, tree, state, bits=phi.bits)
+    return gossip.mix_stacked(phi, tree), state

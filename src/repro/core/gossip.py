@@ -1,22 +1,28 @@
 """Consensus (gossip) primitives over stacked node parameters.
 
-Two execution paths, equivalence-tested against each other:
+Three wire formats, equivalence-tested against each other, all usable
+anywhere a ``phi`` is accepted (``mix_stacked`` dispatches on type):
 
-* ``mix_stacked`` — the general path.  Node copies live as a leading axis of
-  every parameter leaf (``x[leaf].shape == (m, ...)``); one gossip round is a
-  tiny einsum ``Phi @ x`` over that axis.  Under ``jax.jit`` with the leading
-  axis sharded over the mesh's node axes, GSPMD lowers the einsum to the
-  appropriate cross-node collective, so a k-round multi-consensus whose
-  ``Phi`` product is computed on host costs **one** device collective.
+* dense ``(m, m)`` array — one einsum ``Phi @ x`` over the leading node
+  axis.  Under ``jax.jit`` with that axis sharded over the mesh's node axes,
+  GSPMD lowers the einsum to an all-gather of all m copies, so a k-round
+  multi-consensus whose ``Phi`` product is computed on host costs **one**
+  device collective of O(m) bytes.
 
-* ``ring_mix_shardmap`` — the TPU-native fast path for flat, evenly
-  divisible buffers: ``jax.shard_map`` + ``lax.ppermute`` neighbor exchange
-  implementing ``w_self*x + w_next*P(x) + w_prev*P^T(x)`` without ever
-  materializing the (m, m) matrix.  This is how a ring gossip maps onto the
-  ICI torus.
+* :class:`BandedPhi` — the matrix in cyclic-band form; each nonzero band is
+  one cyclic shift (``jnp.roll`` on a single device), so ring / TDMA-
+  matching schedules (degree <= 2) mix in O(degree) operations.
+
+* :class:`PermutePhi` — the same bands lowered to ``lax.ppermute`` neighbor
+  exchanges under ``shard_map`` on a node-axis device mesh: each band is ONE
+  collective-permute of the local shard, never materializing the (m, m)
+  matrix.  This is how band-structured gossip maps onto the ICI torus, and
+  it generalizes the retired LM-trainer-only ``ring_mix_shardmap`` to every
+  banded schedule and every rounds policy.
 
 ``multi_consensus_matrix`` implements the paper's multi-consensus rule
 (k gossip rounds at inner step k, Algorithm 1 line 10) with an optional cap.
+Backend selection/accounting lives in :mod:`repro.core.transport`.
 """
 
 from __future__ import annotations
@@ -48,12 +54,13 @@ else:
 __all__ = [
     "mix_stacked",
     "multi_consensus_matrix",
-    "ring_mix_shardmap",
     "band_decompose",
     "schedule_band_offsets",
     "bands_for_phi",
     "BandedPhi",
+    "PermutePhi",
     "mix_stacked_banded",
+    "mix_stacked_permute",
     "stack_tree",
     "unstack_tree",
     "node_mean",
@@ -87,11 +94,14 @@ def mix_stacked(phi, tree):
 
     ``phi`` may be a numpy or jnp (m, m) matrix — typically the host-side
     multi-consensus product, so arbitrary k-round gossip is one contraction —
-    or a :class:`BandedPhi`, in which case the contraction is dispatched to
-    the O(degree) cyclic-band collectives of :func:`mix_stacked_banded`.
+    or a :class:`BandedPhi` / :class:`PermutePhi`, in which case the
+    contraction is dispatched to the O(degree) cyclic-band collectives of
+    :func:`mix_stacked_banded` / :func:`mix_stacked_permute`.
     """
     if isinstance(phi, BandedPhi):
         return mix_stacked_banded(phi.offsets, phi.coeffs, tree)
+    if isinstance(phi, PermutePhi):
+        return mix_stacked_permute(phi, tree)
     phi = jnp.asarray(phi, dtype=jnp.float32)
 
     def _mix(leaf):
@@ -221,35 +231,86 @@ def mix_stacked_banded(offsets: tuple, coeffs, tree):
 
 
 # ---------------------------------------------------------------------------
-# shard_map ring fast path
+# shard_map collective-permute lowering of banded gossip
 # ---------------------------------------------------------------------------
 
-def ring_mix_shardmap(x_flat: jax.Array, mesh, axis: str,
-                      self_weight: float = 1.0 / 3.0,
-                      rounds: int = 1) -> jax.Array:
-    """Ring gossip over mesh axis ``axis`` for a flat buffer whose leading dim
-    equals the axis size.  Implemented with ``lax.ppermute`` (one hop up + one
-    hop down per round) under ``jax.shard_map`` — the TPU-native layout: each
-    model shard exchanges only its own slice with ring neighbors.
+@jax.tree_util.register_pytree_node_class
+class PermutePhi:
+    """A banded mixing matrix lowered to ``lax.ppermute`` neighbor exchanges
+    under ``shard_map`` on a node-axis device mesh.
 
-    Equivalent to ``mix_stacked(ring_matrix(m, self_weight)^rounds, x)``.
+    Same band parameterization as :class:`BandedPhi` (static ``offsets`` +
+    dynamic per-band ``coeffs``), but the mesh and its node axis ride along
+    as pytree aux data, so jitted steps specialize on them and ``mix_stacked``
+    dispatches the mix to per-band collective-permutes of each device's local
+    shard — the stacked buffer is never gathered.  ``coeffs`` may be
+    ``(n_bands, m)`` for a single step or ``(T, n_bands, m)`` stacked as
+    ``lax.scan`` xs, exactly like ``BandedPhi``.  Requires
+    ``mesh.shape[axis] == m`` (one node per device along the node axis).
     """
+
+    __slots__ = ("offsets", "mesh", "axis", "coeffs")
+
+    def __init__(self, offsets: tuple, mesh, axis: str, coeffs):
+        self.offsets = tuple(offsets)
+        self.mesh = mesh
+        self.axis = axis
+        self.coeffs = coeffs
+
+    def tree_flatten(self):
+        return (self.coeffs,), (self.offsets, self.mesh, self.axis)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        offsets, mesh, axis = aux
+        return cls(offsets, mesh, axis, children[0])
+
+    @classmethod
+    def from_dense(cls, phi: np.ndarray, offsets: tuple, mesh,
+                   axis: str) -> "PermutePhi":
+        """Project a dense phi onto a fixed offset set (raises on leakage)."""
+        return cls(offsets, mesh, axis, bands_for_phi(np.asarray(phi), offsets))
+
+    def __repr__(self):
+        shape = getattr(self.coeffs, "shape", None)
+        return (f"PermutePhi(offsets={self.offsets}, axis={self.axis!r}, "
+                f"coeffs.shape={shape})")
+
+
+def mix_stacked_permute(phi: PermutePhi, tree):
+    """Gossip via per-band ``lax.ppermute`` exchanges of the local shard.
+
+    Numerically identical to :func:`mix_stacked_banded` (same band sum, one
+    term per offset); the collective schedule differs: band ``d`` becomes a
+    single collective-permute where device ``j`` sends its block to device
+    ``(j - d) mod m`` — O(degree) point-to-point wire traffic instead of the
+    dense einsum's O(m) all-gather.
+    """
+    mesh, axis, offsets = phi.mesh, phi.axis, phi.offsets
     m = mesh.shape[axis]
-    side = (1.0 - self_weight) / 2.0
-    perm_up = [(i, (i + 1) % m) for i in range(m)]
-    perm_dn = [(i, (i - 1) % m) for i in range(m)]
+    coeffs = jnp.asarray(phi.coeffs, jnp.float32)
 
-    def _local(x):
-        # x: (1, ...) local slice of the stacked buffer
-        for _ in range(rounds):
-            up = jax.lax.ppermute(x, axis, perm_up)
-            dn = jax.lax.ppermute(x, axis, perm_dn)
-            if m == 2:
-                # up and dn are the same neighbor; avoid double counting
-                x = self_weight * x + (1.0 - self_weight) * up
-            else:
-                x = self_weight * x + side * up + side * dn
-        return x
+    def _local(c, *leaves):
+        # c: (n_bands, 1) this node's coefficient column; leaves: (1, ...)
+        out = []
+        for x in leaves:
+            acc = None
+            for b, d in enumerate(offsets):
+                if d % m == 0:
+                    recv = x
+                else:
+                    # y_i needs x_{(i+d) mod m}: source j ships to j - d
+                    perm = [(j, (j - d) % m) for j in range(m)]
+                    recv = jax.lax.ppermute(x, axis, perm)
+                cb = c[b].reshape((1,) + (1,) * (x.ndim - 1))
+                term = cb.astype(x.dtype) * recv
+                acc = term if acc is None else acc + term
+            out.append(acc)
+        return tuple(out)
 
-    shard = _shard_map(_local, mesh, P(axis), P(axis))
-    return shard(x_flat)
+    leaves, treedef = jax.tree.flatten(tree)
+    shard = _shard_map(
+        _local, mesh,
+        (P(None, axis),) + tuple(P(axis) for _ in leaves),
+        tuple(P(axis) for _ in leaves))
+    return jax.tree.unflatten(treedef, list(shard(coeffs, *leaves)))

@@ -21,19 +21,27 @@ Two execution paths:
   both paths consume identical batches; results agree to float tolerance
   (XLA may fuse the scanned body differently).
 
-Two gossip wire formats (``gossip_mode``):
+Gossip transports are pluggable (``gossip``, a :mod:`repro.core.transport`
+backend name or instance; default ``"auto"``):
 
-* ``"dense"``: each step's multi-consensus product is a dense ``(m, m)``
-  matrix contracted against the stacked parameters — O(m) communication.
-* ``"banded"``: the driver precomputes the schedule's static band-offset
-  union (:func:`~repro.core.gossip.schedule_band_offsets`) once, converts
-  each step's phi to per-band coefficients (``bands_for_phi``), and feeds a
-  :class:`~repro.core.gossip.BandedPhi` through the step (and through the
-  scan ``xs``) so ``mix_stacked`` dispatches the O(degree) cyclic-shift
-  collectives of ``mix_stacked_banded``.  On ring / edge-matching schedules
-  (degree <= 2) this shrinks per-step communication from O(m) to O(1)
-  collectives inside the same compiled chunk; histories agree with dense to
-  float tolerance.
+* ``"dense"`` / ``"banded"`` / ``"ppermute"`` / ``"compressed"`` — see
+  :data:`~repro.core.transport.GOSSIP_BACKENDS`.  The resolved backend does
+  its static precompute once (``prepare``), emits a host-side wire
+  representation per step (``phi_for``) that the driver feeds through the
+  step (and through the scan ``xs`` — every representation is a pytree, so
+  stacking is generic), and accounts wire bytes (``bytes_per_step``), which
+  the driver accumulates into the ``wire_bytes`` extras column.
+* ``"auto"`` picks by schedule bandwidth and mesh availability
+  (:func:`~repro.core.transport.select_backend_name`): banded structure ->
+  ``banded`` (or ``ppermute`` when ``mesh`` is given), saturated band union
+  (e.g. faithful unbounded multi-consensus) -> ``dense``.  Histories agree
+  across backends to float tolerance; ``"dense"`` reproduces the historical
+  loops bit-for-bit.
+* stateful transports (``compressed``) additionally require the algorithm
+  to thread a mix state (``Algorithm.init_mix_state``).
+
+The legacy ``gossip_mode=`` keyword still maps onto ``gossip=`` for one
+release and emits a ``DeprecationWarning``.
 
 Scan chunks of distinct lengths are padded to a small set of bucket lengths
 (next power of two; the steady-state ``record_every`` chunk stays exact) with
@@ -59,7 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import algorithm as algorithm_lib, gossip, graphs
+from . import algorithm as algorithm_lib, gossip, graphs, transport
 
 __all__ = ["RunHistory", "RunResult", "Recorder", "run", "sample_batch",
            "scan_executable_count"]
@@ -99,7 +107,9 @@ def objective_value(loss_fn, prox, params, full_data) -> float:
 
 class Recorder:
     """Accumulates the RunHistory columns under the algorithm's metric
-    conventions, plus arbitrary extra metrics ``name -> fn(params) -> float``.
+    conventions, plus arbitrary extra metrics ``name -> fn(params) -> float``
+    and the driver-supplied ``wire_bytes`` column (cumulative gossip bytes
+    from the transport backend's accounting).
     """
 
     def __init__(self, objective_fn: Callable, meta, m: int, n: int,
@@ -110,9 +120,12 @@ class Recorder:
         self._extra = extra_metrics or {}
         self._cols = {k: [] for k in RunHistory._fields}
         self._extras = {k: [] for k in self._extra}
+        self._wire: list = []
 
-    def record(self, params, *, t: int, grad_evals: int, comm_rounds: int):
+    def record(self, params, *, t: int, grad_evals: int, comm_rounds: int,
+               wire_bytes: int = 0):
         meta = self._meta
+        self._wire.append(wire_bytes)
         self._cols["objective"].append(self._obj(params))
         if meta.track_consensus:
             cons = graphs.consensus_distance(np.stack(
@@ -135,7 +148,9 @@ class Recorder:
         return RunHistory(**{k: np.array(v) for k, v in self._cols.items()})
 
     def extras(self) -> dict:
-        return {k: np.array(v) for k, v in self._extras.items()}
+        out = {k: np.array(v) for k, v in self._extras.items()}
+        out["wire_bytes"] = np.array(self._wire, dtype=np.int64)
+        return out
 
 
 # Compiled chunk executors are cached per Algorithm instance: a fresh
@@ -201,11 +216,12 @@ def _bucket_length(chunk: int, record_every: int) -> int:
 
 
 def _stack_phis(phis):
-    if isinstance(phis[0], gossip.BandedPhi):
-        return gossip.BandedPhi(
-            phis[0].offsets,
-            jnp.asarray(np.stack([p.coeffs for p in phis]), jnp.float32))
-    return jnp.asarray(np.stack(phis), jnp.float32)
+    """Stack host-side per-step wire representations into scan xs.  Every
+    transport's phi is a pytree (dense array, BandedPhi, PermutePhi,
+    CompressedPhi, ...) whose static parts are aux data, so one generic
+    leaf-stack covers all backends."""
+    return jax.tree.map(
+        lambda *leaves: jnp.asarray(np.stack(leaves), jnp.float32), *phis)
 
 
 def _stack_inputs(meta, batches, phis, alphas, keep):
@@ -218,20 +234,6 @@ def _stack_inputs(meta, batches, phis, alphas, keep):
     return (phis, alphas, keep)
 
 
-def _band_offsets_for(meta, schedule: graphs.MixingSchedule) -> tuple:
-    """The static band-offset union a compiled banded step must support:
-    offsets of every `rounds`-product the schedule can produce, for every
-    rounds value the algorithm's gossip policy will request."""
-    if meta.outer_lengths is not None:
-        ks = range(1, max(meta.outer_lengths) + 1)
-    else:
-        ks = range(1, meta.num_steps + 1)
-    offs: set = set()
-    for rounds in sorted({meta.gossip_rounds(k) for k in ks}):
-        offs.update(gossip.schedule_band_offsets(schedule, rounds))
-    return tuple(sorted(offs))
-
-
 def run(algo: algorithm_lib.Algorithm,
         problem: algorithm_lib.Problem,
         schedule: graphs.MixingSchedule,
@@ -239,67 +241,91 @@ def run(algo: algorithm_lib.Algorithm,
         seed: int = 0,
         record_every: int = 1,
         scan: bool = False,
-        gossip_mode: str = "dense",
-        extra_metrics: dict | None = None) -> RunResult:
+        gossip: "str | transport.GossipBackend" = "auto",
+        mesh=None,
+        extra_metrics: dict | None = None,
+        gossip_mode: str | None = None) -> RunResult:
     """Drive ``algo`` on ``problem`` over the time-varying ``schedule``.
 
     record_every: history cadence in inner steps; 0 = once per outer round
                   (outer/inner methods only).
     scan:         use the ``lax.scan`` chunked fast path.
-    gossip_mode:  "dense" ((m, m) contraction per step) or "banded"
-                  (O(degree) cyclic-band collectives via ``BandedPhi``).
+    gossip:       transport backend — a ``transport.GOSSIP_BACKENDS`` name
+                  ("dense", "banded", "ppermute", "compressed"), a
+                  ``GossipBackend`` instance, or "auto" (select by schedule
+                  bandwidth and mesh availability).
+    mesh:         optional device mesh with a node axis of size m; enables
+                  the ``ppermute`` backend (and lets "auto" pick it).
     extra_metrics: ``{name: fn(stacked_params) -> float}`` recorded alongside
-                  the standard history columns (returned in ``extras``).
+                  the standard history columns (returned in ``extras``, next
+                  to the always-present ``wire_bytes`` column).
+    gossip_mode:  DEPRECATED alias for ``gossip`` (one-release shim).
     """
     meta = algo.meta
-    if gossip_mode not in ("dense", "banded"):
-        raise ValueError(f"gossip_mode must be 'dense' or 'banded', "
-                         f"got {gossip_mode!r}")
+    if gossip_mode is not None:
+        warnings.warn(
+            "runner.run(gossip_mode=...) is deprecated; use gossip=... "
+            "(same names, plus 'ppermute', 'compressed', and 'auto')",
+            DeprecationWarning, stacklevel=2)
+        gossip = gossip_mode
+    backend = transport.resolve_backend(gossip, schedule, meta, mesh)
+    if meta.compress_bits is not None:
+        # the method itself quantizes its gossip payload (hp-level
+        # compression, e.g. DPSVRGHyperParams.compress_bits): wrap the
+        # resolved transport so the wire carries CompressedPhi at the
+        # method's bit width and bytes_per_step accounts the quantized
+        # payload instead of the f32 rate
+        if isinstance(backend, transport.CompressedBackend):
+            if backend.bits != meta.compress_bits:
+                raise ValueError(
+                    f"conflicting compression: the algorithm quantizes its "
+                    f"gossip at {meta.compress_bits} bits "
+                    f"(meta.compress_bits) but the requested transport "
+                    f"compresses at {backend.bits} bits — drop one of the "
+                    f"two, or make them agree")
+        else:
+            backend = transport.CompressedBackend(inner=backend,
+                                                  bits=meta.compress_bits)
+    aux = backend.prepare(schedule, meta, mesh=mesh)
     rng = np.random.default_rng(seed)
     m = jax.tree.leaves(problem.x0)[0].shape[0]
     n = jax.tree.leaves(problem.full_data)[0].shape[1]
+    param_count = transport.node_param_count(problem.x0)
     obj = problem.objective_fn or (
         lambda p: objective_value(problem.loss_fn, problem.prox, p,
                                   problem.full_data))
     rec = Recorder(obj, meta, m, n, extra_metrics)
     exec_chunk = _make_scan_exec(algo) if scan else None
-    band_offsets = (_band_offsets_for(meta, schedule)
-                    if gossip_mode == "banded" else None)
-    if band_offsets is not None and len(band_offsets) >= m:
-        # e.g. faithful DPSVRG multi-consensus (k_max=None): k-round products
-        # acquire bandwidth k, the offset union saturates, and m cyclic-shift
-        # passes per step are strictly slower than one dense (m, m) einsum
-        warnings.warn(
-            f"{meta.name}/{schedule.name}: banded gossip needs all "
-            f"{len(band_offsets)} of {m} band offsets — no O(degree) "
-            f"structure to exploit; dense gossip_mode will be faster "
-            f"(cap multi-consensus rounds, e.g. k_max, to keep products "
-            f"banded)", RuntimeWarning, stacklevel=2)
     # sample minibatches from a host-side copy: per-step np gathers on device
     # arrays would silently round-trip the whole dataset every step
     host_data = (jax.tree.map(np.asarray, problem.full_data)
                  if meta.batch_size > 0 else problem.full_data)
 
     state = algo.init()
+    if backend.needs_mix_state:
+        if algo.init_mix_state is None:
+            raise ValueError(
+                f"{meta.name} does not thread a gossip mix state "
+                f"(Algorithm.init_mix_state is None), so it cannot be "
+                f"driven by the stateful {backend.name!r} transport")
+        state = algo.init_mix_state(state)
     grad_evals = m * n if meta.init_full_grad else 0
     full_grad_cost = m * n
     comm = 0
+    wire = 0
     slot = meta.slot_start
     t = 0
 
     def phi_for(rounds: int):
-        nonlocal slot, comm
-        phi = schedule.consensus_rounds(slot, rounds)
+        nonlocal slot, comm, wire
+        phi = backend.phi_for(aux, slot, rounds)
         slot += rounds
         comm += rounds
-        if band_offsets is not None:
-            return gossip.BandedPhi.from_dense(phi, band_offsets)
+        wire += backend.bytes_per_step(aux, phi, param_count)
         return phi
 
     def device_phi(phi):
-        if isinstance(phi, gossip.BandedPhi):
-            return phi
-        return jnp.asarray(phi, jnp.float32)
+        return jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), phi)
 
     def pad_chunk(batches, phis, alphas, chunk):
         """Pad collected inputs to the bucket length with masked-out repeats
@@ -315,7 +341,8 @@ def run(algo: algorithm_lib.Algorithm,
 
     def do_record(params=None):
         rec.record(params if params is not None else algo.get_params(state),
-                   t=t, grad_evals=grad_evals, comm_rounds=comm)
+                   t=t, grad_evals=grad_evals, comm_rounds=comm,
+                   wire_bytes=wire)
 
     do_record()
 

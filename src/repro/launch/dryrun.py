@@ -124,7 +124,7 @@ def active_params(cfg) -> int:
 def run_one(arch: str, shape_name: str, multi_pod: bool, mapping: str,
             hw: roofline.HW, consensus_rounds: int = 1,
             algorithm: str = "dpsvrg", save_hlo: str | None = None,
-            gossip_mode: str = "dense", pin_serve_outputs: bool = False,
+            gossip: str = "dense", pin_serve_outputs: bool = False,
             serve_attn_dim0: bool = False, moe_groups: int = 1,
             constrain_attn: bool = False, remat: str = "full"):
     cfg = configs.get_config(arch).scaled(
@@ -149,13 +149,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mapping: str,
         if shape.kind == "train":
             m = mesh_lib.node_count(mesh, plan)
             offsets = None
-            if gossip_mode == "banded":
-                from repro.core import gossip, graphs
+            if gossip == "banded":
+                from repro.core import gossip as gossip_lib, graphs
                 sched = graphs.b_connected_ring_schedule(m, b=1)
-                offsets = gossip.schedule_band_offsets(sched, consensus_rounds)
+                offsets = gossip_lib.schedule_band_offsets(sched,
+                                                           consensus_rounds)
             bundle = steps_lib.build_train_step(
                 cfg, prox_lib.l1(1e-5), m, plan=plan, mesh=mesh,
-                algorithm=algorithm, gossip_offsets=offsets, donate=False)
+                algorithm=algorithm, donate=False)
             state_shape = jax.eval_shape(bundle.init_state,
                                          jax.random.PRNGKey(0))
             state_sds = _attach(state_shape, bundle.state_shardings)
@@ -164,8 +165,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mapping: str,
                 phi = _sds((m, m), "float32",
                            NamedSharding(mesh, P(None, None)))
             else:
-                phi = _sds((len(offsets), m), "float32",
-                           NamedSharding(mesh, P(None, None)))
+                # the banded wire format: BandedPhi pytree whose coeffs leaf
+                # is the (n_bands, m) coefficient matrix (offsets are static
+                # aux data the jitted step specializes on)
+                from repro.core import gossip as gossip_lib
+                phi = gossip_lib.BandedPhi(
+                    offsets, _sds((len(offsets), m), "float32",
+                                  NamedSharding(mesh, P(None, None))))
             alpha = _sds((), "float32", NamedSharding(mesh, P()))
             lowered = bundle.train_step.lower(state_sds, batch, phi, alpha)
             arrays_for_mem = (state_sds, batch)
@@ -219,7 +225,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mapping: str,
 
         compiled = lowered.compile()
 
-    cost = dict(compiled.cost_analysis() or {})
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax wraps it in a 1-list
+        cost = cost[0] if cost else {}
+    cost = dict(cost)
     try:
         mem = compiled.memory_analysis()
         mem_str = str(mem)
@@ -252,7 +261,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mapping: str,
         "variant": "+".join(
             [v for v in (
                 "banded" if (shape.kind == "train"
-                             and gossip_mode == "banded") else None,
+                             and gossip == "banded") else None,
                 "attn_dim0" if (shape.kind == "decode"
                                 and serve_attn_dim0) else None,
                 "pinned" if (shape.kind != "train"
@@ -304,7 +313,7 @@ def main():
                                   consensus_rounds=args.consensus_rounds,
                                   algorithm=args.algorithm,
                                   save_hlo=args.save_hlo or None,
-                                  gossip_mode=args.gossip,
+                                  gossip=args.gossip,
                                   pin_serve_outputs=args.pin_serve_outputs,
                                   serve_attn_dim0=args.serve_attn_dim0,
                                   moe_groups=args.moe_groups,

@@ -18,7 +18,6 @@ training rule for every architecture in the zoo:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -86,7 +85,6 @@ def build_train_step(cfg: ModelConfig,
                      plan: sharding.MeshPlan | None = None,
                      mesh=None,
                      algorithm: str | algo_lib.UpdateRule = "dpsvrg",
-                     gossip_offsets: tuple | None = None,
                      donate: bool = True) -> TrainBundle:
     """``algorithm``: an ``UpdateRule`` from ``repro.core.algorithm`` (or its
     registry name: dpsvrg | dspg).  The LM train step is the SAME prox-gossip
@@ -94,21 +92,19 @@ def build_train_step(cfg: ModelConfig,
     with the rule's gradient direction — so decentralized LM training and the
     paper reproduction cannot drift apart.
 
-    ``gossip_offsets``: None -> dense `phi @ stacked` einsum (paper-faithful
-    baseline lowering; GSPMD all-gathers all m copies).  A tuple of cyclic
-    offsets -> banded gossip (`gossip.mix_stacked_banded`): the step's third
-    argument becomes the (n_bands, m) coefficient matrix
-    (`gossip.bands_for_phi`), each band lowering to one collective-permute —
-    numerically identical, O(degree) instead of O(m) communication."""
+    The train step's ``phi`` argument is any stateless transport wire format
+    (``gossip.mix_stacked`` dispatches on its type): a dense ``(m, m)``
+    matrix (paper-faithful baseline lowering; GSPMD all-gathers all m
+    copies), a ``gossip.BandedPhi`` (cyclic-band gossip), or a
+    ``gossip.PermutePhi`` (bands as ``lax.ppermute`` collectives on a
+    node-axis mesh) — numerically identical, O(degree) instead of O(m)
+    communication for band-structured schedules.  Build phis with a
+    ``repro.core.transport`` backend (see ``trainer.train_loop``)."""
     rule = (algo_lib.UPDATE_RULES[algorithm] if isinstance(algorithm, str)
             else algorithm)
     loss = transformer.loss_fn(cfg)
     vgrad = jax.vmap(jax.value_and_grad(loss))
     grad_only = jax.vmap(jax.grad(loss))
-    if gossip_offsets is None:
-        mix_fn = gossip.mix_stacked
-    else:
-        mix_fn = functools.partial(gossip.mix_stacked_banded, gossip_offsets)
 
     def train_step(state: TrainState, batch, phi, alpha):
         losses, g_now = vgrad(state.params, batch)
@@ -116,7 +112,7 @@ def build_train_step(cfg: ModelConfig,
             else None
         v = rule.direction(g_now, g_snap, state.full_grad)
         new_params = algo_lib.prox_gossip_update(state.params, v, phi, alpha,
-                                                 prox, mix_fn=mix_fn)
+                                                 prox)
         metrics = {
             "loss": jnp.mean(losses),
             "v_norm": svrg.tree_norm(v),

@@ -18,8 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt_lib
-from repro.core import algorithm as algo_lib, gossip, graphs, \
-    prox as prox_lib, schedules
+from repro.core import algorithm as algo_lib, graphs, \
+    prox as prox_lib, schedules, transport
 from repro.models.api import ModelConfig
 from . import steps as steps_lib
 
@@ -34,7 +34,7 @@ class TrainerConfig:
     alpha: float = 0.05
     consensus_rounds: int = 2       # capped multi-consensus
     algorithm: str = "dpsvrg"       # core.algorithm.UPDATE_RULES name (or an UpdateRule)
-    gossip: str = "dense"           # dense | banded (O(degree) collectives)
+    gossip: str = "auto"            # transport.GOSSIP_BACKENDS name / instance / "auto"
     lr_schedule: str = "constant"   # constant | wsd | cosine
     log_every: int = 10
     ckpt_dir: str | None = None
@@ -68,18 +68,26 @@ def train_loop(cfg: ModelConfig,
     # runner — resolve it once here so an unknown name fails fast
     rule = algo_lib.UPDATE_RULES[tc.algorithm] \
         if isinstance(tc.algorithm, str) else tc.algorithm
-    offsets = None
-    if tc.gossip == "banded":
-        offsets = gossip.schedule_band_offsets(schedule, tc.consensus_rounds)
+    # the transport backend owns the wire format: its per-step phi pytree
+    # (dense / BandedPhi / PermutePhi) flows into the jitted train step,
+    # which dispatches the mix on its type
+    tmeta = transport.TransportMeta.constant(tc.consensus_rounds)
+    backend = transport.resolve_backend(tc.gossip, schedule, tmeta, mesh)
+    if backend.needs_mix_state:
+        raise ValueError(
+            f"the LM train step does not thread a gossip mix state; the "
+            f"stateful {backend.name!r} transport is not supported here")
+    gaux = backend.prepare(schedule, tmeta, mesh=mesh)
     bundle = steps_lib.build_train_step(cfg, prox, m, plan=plan, mesh=mesh,
-                                        algorithm=rule,
-                                        gossip_offsets=offsets, donate=False)
+                                        algorithm=rule, donate=False)
     state = bundle.init_state(jax.random.PRNGKey(tc.seed))
+    param_count = transport.node_param_count(state.params)
     snapshot_batch_iter = snapshot_batch_iter or batch_iter
     lr = _lr_fn(tc)
 
-    hist = {"step": [], "loss": [], "v_norm": [], "time": []}
+    hist = {"step": [], "loss": [], "v_norm": [], "wire_bytes": [], "time": []}
     slot = 0
+    wire = 0
     t0 = time.time()
     for step in range(tc.num_steps):
         if rule.needs_snapshot and step % tc.snapshot_every == 0:
@@ -87,20 +95,21 @@ def train_loop(cfg: ModelConfig,
             big = jax.tree.map(jnp.asarray, big)
             state = bundle.snapshot_step(state, big)
         batch = jax.tree.map(jnp.asarray, next(batch_iter))
-        phi = schedule.consensus_rounds(slot, tc.consensus_rounds)
-        if offsets is not None:
-            phi = gossip.bands_for_phi(phi, offsets)
+        phi = backend.phi_for(gaux, slot, tc.consensus_rounds)
+        wire += backend.bytes_per_step(gaux, phi, param_count)
+        phi = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), phi)
         slot += tc.consensus_rounds
         # VR-type rules (snapshot-corrected) take the configured LR schedule;
         # plain stochastic rules need the DSPG decaying step to converge
         alpha = lr(step) if rule.needs_snapshot else \
             schedules.dspg_stepsize(tc.alpha)(step)
         state, metrics = bundle.train_step(
-            state, batch, jnp.asarray(phi, jnp.float32), jnp.float32(alpha))
+            state, batch, phi, jnp.float32(alpha))
         if step % tc.log_every == 0 or step == tc.num_steps - 1:
             hist["step"].append(step)
             hist["loss"].append(float(metrics["loss"]))
             hist["v_norm"].append(float(metrics["v_norm"]))
+            hist["wire_bytes"].append(wire)
             hist["time"].append(time.time() - t0)
         if tc.ckpt_dir and tc.ckpt_every and (step + 1) % tc.ckpt_every == 0:
             ckpt_lib.save(tc.ckpt_dir, step + 1, state.params,

@@ -17,10 +17,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dpsvrg, graphs, prox as prox_lib, schedules, svrg
+from repro.core import dpsvrg, gossip, graphs, prox as prox_lib, \
+    schedules, svrg
 from repro.core.dpsvrg import (RunHistory, _objective, _sample_batch,
-                               build_dpsvrg_inner_step, build_dspg_step,
-                               build_node_full_grad_fn, build_node_grad_fn)
+                               build_dspg_step, build_node_full_grad_fn,
+                               build_node_grad_fn)
+
+
+def build_dpsvrg_inner_step(loss_fn, prox, compress_bits=None):
+    """Frozen copy of the pre-transport-redesign inner-step builder (the
+    library version now takes and returns a mix state for the pluggable
+    compressed transport; the oracle keeps the historical signatures)."""
+    node_grad = build_node_grad_fn(loss_fn)
+
+    if compress_bits is None:
+        @jax.jit
+        def step(params, svrg_state, batch, phi, alpha):
+            v = svrg.corrected_gradient(node_grad, params, svrg_state, batch)
+            q = jax.tree.map(lambda x, vi: x - alpha * vi.astype(x.dtype),
+                             params, v)
+            q_hat = gossip.mix_stacked(phi, q)
+            return prox.apply(q_hat, alpha)
+
+        return step
+
+    from repro.core import compression
+
+    @jax.jit
+    def step_c(params, svrg_state, batch, phi, alpha, cstate):
+        v = svrg.corrected_gradient(node_grad, params, svrg_state, batch)
+        q = jax.tree.map(lambda x, vi: x - alpha * vi, params, v)
+        q_hat, cstate = compression.compressed_mix(phi, q, cstate,
+                                                   bits=compress_bits)
+        x = prox.apply(q_hat, alpha)
+        return x, cstate
+
+    return step_c
 
 
 def legacy_dpsvrg_run(loss_fn, prox, x0_stacked, full_data, schedule, hp,

@@ -1,10 +1,15 @@
+import json
 import os
+import subprocess
 import sys
+
+import pytest
 
 # Allow running `pytest tests/` without PYTHONPATH=src (the documented
 # invocation sets it; this is a fallback).  Deliberately NO XLA_FLAGS here:
 # smoke tests and benches must see the single real device — only
-# repro.launch.dryrun forces the 512-device host platform.
+# repro.launch.dryrun and the multi-device subprocess fixtures force a
+# host-platform device count.
 _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
@@ -12,13 +17,45 @@ if _SRC not in sys.path:
 
 def run_named_algorithm(loss_fn, name, data, h, x0, sched, *factory_args,
                         seed=0, record_every=1, scan=False,
-                        gossip_mode="dense", **factory_kw):
+                        gossip="dense", **factory_kw):
     """Shared build-ALGORITHMS-and-drive-runner.run shim for the test suite
     (single place to update when runner.run's signature grows).  Returns the
-    full RunResult."""
+    full RunResult.
+
+    ``gossip`` defaults to "dense" here (NOT runner.run's "auto"): the
+    legacy-oracle tests pin bit-for-bit equality with the historical loops,
+    which only the dense wire format reproduces exactly — banded/ppermute
+    agree to float tolerance, not bitwise.  Transport selection has its own
+    coverage in tests/test_transport.py."""
     from repro.core import algorithm, runner
     problem = algorithm.Problem(loss_fn, h, x0, data)
     algo = algorithm.ALGORITHMS[name](problem, *factory_args, **factory_kw)
     return runner.run(algo, problem, sched, seed=seed,
                       record_every=record_every, scan=scan,
-                      gossip_mode=gossip_mode)
+                      gossip=gossip)
+
+
+@pytest.fixture(scope="session")
+def run_multi_device():
+    """Run a python snippet under a forced N-device host-platform CPU jax
+    and return its last stdout line parsed as JSON.
+
+    The device count is fixed at jax backend initialization, so the main
+    test process (which must keep its single real device for the smoke
+    tests) cannot host multi-device cases — the snippet runs in a
+    subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    The CI multi-device leg sets the same flag; see
+    .github/workflows/ci.yml."""
+
+    def run(script: str, devices: int = 4, timeout: int = 900) -> dict:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices}")
+        env["JAX_PLATFORMS"] = "cpu"
+        env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run([sys.executable, "-c", script], env=env,
+                              capture_output=True, text=True, timeout=timeout)
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+
+    return run

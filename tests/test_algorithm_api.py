@@ -225,10 +225,13 @@ def test_extra_metric_recorders():
                          "max_abs": lambda p: float(jnp.max(jnp.abs(p))),
                          "nnz": lambda p: float(jnp.sum(jnp.abs(p) > 0)),
                      })
-    assert set(res.extras) == {"max_abs", "nnz"}
+    # wire_bytes is the always-present driver-supplied column (transport
+    # backend byte accounting); user recorders ride alongside it
+    assert set(res.extras) == {"max_abs", "nnz", "wire_bytes"}
     for arr in res.extras.values():
         assert arr.shape == res.history.objective.shape
     assert res.extras["max_abs"][-1] > 0.0
+    assert res.extras["wire_bytes"][-1] > 0
 
 
 def test_run_result_shapes():

@@ -40,11 +40,14 @@ SCRIPT = textwrap.dedent("""
         jnp.asarray(phi, jnp.float32), xs)
     out["einsum_err"] = float(np.abs(np.asarray(mixed) - phi @ x).max())
 
-    # 2) shard_map ppermute ring == dense ring matrix product
-    w = graphs.ring_matrix(m, self_weight=1.0 / 3.0)
-    ring_out = gossip.ring_mix_shardmap(xs, mesh, "data", 1.0 / 3.0, rounds=2)
-    dense = np.linalg.matrix_power(w, 2) @ x
-    out["ring_err"] = float(np.abs(np.asarray(ring_out) - dense).max())
+    # 2) shard_map ppermute banded gossip == dense ring matrix product
+    # (PermutePhi generalizes the old ring-only shard_map path: any banded
+    # product, here ring^2, lowers to one collective-permute per band)
+    w2 = np.linalg.matrix_power(graphs.ring_matrix(m, 1.0 / 3.0), 2)
+    offs, _ = gossip.band_decompose(w2)
+    pphi = gossip.PermutePhi.from_dense(w2, offs, mesh, "data")
+    ring_out = jax.jit(lambda p, t: gossip.mix_stacked(p, t))(pphi, xs)
+    out["ring_err"] = float(np.abs(np.asarray(ring_out) - w2 @ x).max())
 
     # 3) sharded decentralized train step == single-device reference
     cfg = ModelConfig(name="tiny", arch_type="dense", num_layers=2,

@@ -116,7 +116,7 @@ def test_banded_matches_dense_dspg_matching_schedule(scan):
     for mode in ("dense", "banded"):
         algo = algorithm.dspg_algorithm(problem, hp, num_steps=40)
         runs[mode] = runner.run(algo, problem, sched, seed=2, record_every=8,
-                                scan=scan, gossip_mode=mode).history
+                                scan=scan, gossip=mode).history
     _assert_agrees(runs["dense"], runs["banded"])
 
 
@@ -132,9 +132,10 @@ def test_banded_scan_matches_host_dpsvrg_multi_consensus():
                                   k_max=2)
     assert len(gossip.schedule_band_offsets(sched, 2)) < 6
     algo = algorithm.dpsvrg_algorithm(problem, hp)
-    host = runner.run(algo, problem, sched, seed=1, record_every=3).history
+    host = runner.run(algo, problem, sched, seed=1, record_every=3,
+                      gossip="dense").history
     band = runner.run(algo, problem, sched, seed=1, record_every=3,
-                      scan=True, gossip_mode="banded").history
+                      scan=True, gossip="banded").history
     _assert_agrees(host, band)
 
 
@@ -155,14 +156,14 @@ def test_banded_phi_dispatch_and_offset_guard():
         gossip.BandedPhi.from_dense(phi, (0,))
 
 
-def test_runner_rejects_unknown_gossip_mode():
+def test_runner_rejects_unknown_gossip_backend():
     data, h, x0 = _setup()
     sched = _matching_schedule(4)
     problem = _problem(data, h, x0)
     algo = algorithm.dspg_algorithm(
         problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=4)
     with pytest.raises(ValueError):
-        runner.run(algo, problem, sched, gossip_mode="sparse")
+        runner.run(algo, problem, sched, gossip="sparse")
 
 
 # ---------------------------------------------------------------------------

@@ -15,16 +15,17 @@ TINY = ModelConfig(name="tiny", arch_type="dense", num_layers=2, d_model=32,
 
 
 def test_banded_train_step_equals_dense():
+    """The SAME train step runs both wire formats: the mix dispatches on the
+    phi's type (dense array vs BandedPhi), no build-time fork."""
     m = 8
     sched = graphs.b_connected_ring_schedule(m, b=1)
     rounds = 2
     phi = sched.consensus_rounds(0, rounds)
     offsets = gossip.schedule_band_offsets(sched, rounds)
-    coeffs = gossip.bands_for_phi(phi, offsets)
+    banded_phi = gossip.BandedPhi.from_dense(phi, offsets)
 
     dense = steps_lib.build_train_step(TINY, prox.l1(1e-4), m, donate=False)
-    banded = steps_lib.build_train_step(TINY, prox.l1(1e-4), m,
-                                        gossip_offsets=offsets, donate=False)
+    banded = steps_lib.build_train_step(TINY, prox.l1(1e-4), m, donate=False)
     s_d = dense.init_state(jax.random.PRNGKey(0))
     s_b = banded.init_state(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -35,7 +36,9 @@ def test_banded_train_step_equals_dense():
     alpha = jnp.float32(0.1)
     n_d, m_d = dense.train_step(s_d, batch, jnp.asarray(phi, jnp.float32),
                                 alpha)
-    n_b, m_b = banded.train_step(s_b, batch, jnp.asarray(coeffs), alpha)
+    n_b, m_b = banded.train_step(
+        s_b, batch,
+        gossip.BandedPhi(offsets, jnp.asarray(banded_phi.coeffs)), alpha)
     for a, b in zip(jax.tree.leaves(n_d.params), jax.tree.leaves(n_b.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
     assert abs(float(m_d["loss"]) - float(m_b["loss"])) < 1e-6
@@ -45,7 +48,10 @@ def test_banded_trainer_loop_matches_dense():
     from repro.core import prox as prox_lib
     from repro.data import loader, synthetic
     from repro.train import trainer
-    m = 4
+    # m=6: the 2-round ring products keep offsets {0,1,2,4,5} — real band
+    # structure (m=4 would saturate all offsets and trip the banded
+    # saturation warning)
+    m = 6
     stream = synthetic.make_token_stream(20000, 64, seed=0)
 
     def batches():
