@@ -1,0 +1,104 @@
+"""CI regression gate for ``BENCH_runner.json`` against the committed
+baseline (``benchmarks/BENCH_baseline.json``).
+
+Checks, in order of importance:
+
+1. **Acceptance floor**: the resident path must be >= MIN_SPEEDUP (2x)
+   faster than the scan path on the paper logreg DSPG 600-step run, and its
+   transfer counts must be O(1) (the bench itself already asserted the
+   ledger; this re-checks the recorded numbers so the artifact is
+   self-certifying).
+2. **Regression vs baseline**: resident ms/step must not regress more than
+   TOLERANCE (20%) against the committed baseline.  Raw wall-clock is not
+   portable across machines (the baseline was recorded on the dev
+   container, CI runs elsewhere), so the comparison is CALIBRATED by the
+   scan path: both paths run the same problem on the same machine, so
+   ``scan_now / scan_baseline`` measures the machine-speed ratio and the
+   gate compares ``resident_now`` against
+   ``resident_baseline * calibration * (1 + TOLERANCE)``.
+
+Usage:  python -m benchmarks.check_bench BENCH_runner.json \
+            [--baseline benchmarks/BENCH_baseline.json] [--update]
+
+``--update`` rewrites the baseline from the current results instead of
+checking (run it on the reference machine when a PR legitimately shifts the
+perf envelope, and commit the result).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+MIN_SPEEDUP = 2.0
+TOLERANCE = 0.20
+
+
+def check(current: dict, baseline: dict) -> list[str]:
+    errors = []
+    cur = current["resident"]["dspg600"]
+    base = baseline["resident"]["dspg600"]
+
+    speedup = cur["speedup_resident_vs_scan"]
+    if speedup < MIN_SPEEDUP:
+        errors.append(
+            f"resident path is only {speedup:.2f}x faster than scan on the "
+            f"DSPG 600-step run (acceptance floor: {MIN_SPEEDUP}x)")
+
+    h2d, d2h = cur["transfers"]["resident"]
+    if h2d > 2 or d2h > 2:
+        errors.append(
+            f"resident transfers are not O(1): h2d={h2d} d2h={d2h} "
+            f"(expected <= 2 each, independent of run length)")
+
+    if cur["history_max_abs_diff"] > 1e-4:
+        errors.append(
+            f"resident history diverged from host by "
+            f"{cur['history_max_abs_diff']:.2e} (> 1e-4)")
+
+    calibration = cur["scan_ms_per_step"] / base["scan_ms_per_step"]
+    budget = base["resident_ms_per_step"] * calibration * (1 + TOLERANCE)
+    if cur["resident_ms_per_step"] > budget:
+        errors.append(
+            f"resident ms/step regressed: {cur['resident_ms_per_step']:.4f} "
+            f"> budget {budget:.4f} (baseline "
+            f"{base['resident_ms_per_step']:.4f} x machine calibration "
+            f"{calibration:.2f} x {1 + TOLERANCE:.2f})")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("current", help="BENCH_runner.json from this run")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current results")
+    args = ap.parse_args()
+
+    if args.update:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    errors = check(current, baseline)
+    cur = current["resident"]["dspg600"]
+    print(f"resident {cur['resident_ms_per_step']:.4f} ms/step, "
+          f"{cur['speedup_resident_vs_scan']:.2f}x vs scan, transfers "
+          f"{cur['transfers']['resident']}")
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}")
+        return 1
+    print("bench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

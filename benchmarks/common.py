@@ -50,15 +50,20 @@ def make_problem(data, h, x0, objective_fn=None) -> algorithm.Problem:
 
 
 def run_algorithm(name: str, problem, sched, *factory_args, seed=0,
-                  record_every=1, scan=False, gossip="dense",
+                  record_every=1, scan=False, resident=False,
+                  sampling="host", gossip="dense",
                   **factory_kw) -> runner.RunResult:
     """Build ``ALGORITHMS[name]`` and drive it through ``runner.run`` — the
     one calling convention every figure script shares.  ``gossip`` pins the
     dense wire format by default so figure numbers stay comparable across
-    transport-selection changes; pass "auto" or a backend name to override."""
+    transport-selection changes; pass "auto" or a backend name to override.
+    ``resident=True`` runs device-resident (one transfer per run; histories
+    agree with the host path to float tolerance with host sampling), which
+    is what ``benchmarks.run --resident`` passes to every sweep."""
     algo = algorithm.ALGORITHMS[name](problem, *factory_args, **factory_kw)
     return runner.run(algo, problem, sched, seed=seed,
                       record_every=record_every, scan=scan,
+                      resident=resident, sampling=sampling,
                       gossip=gossip)
 
 

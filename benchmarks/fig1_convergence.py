@@ -15,7 +15,8 @@ from repro.core import dpsvrg, graphs
 from . import common
 
 
-def run(scale: float = 0.02, num_outer: int = 10, alpha: float = 0.2):
+def run(scale: float = 0.02, num_outer: int = 10, alpha: float = 0.2,
+        resident: bool = False):
     rows = []
     for dataset in ("mnist_like", "cifar10_like", "adult_like",
                     "covertype_like"):
@@ -27,12 +28,14 @@ def run(scale: float = 0.02, num_outer: int = 10, alpha: float = 0.2):
         hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                       num_outer=num_outer)
         hv = common.run_algorithm("dpsvrg", problem, sched, hp,
-                                  record_every=4).history
+                                  record_every=4,
+                                  resident=resident).history
         t_vr = (time.time() - t0) * 1e6 / max(int(hv.steps[-1]), 1)
         t0 = time.time()
         hd = common.run_algorithm("dspg", problem, sched,
                                   dpsvrg.DSPGHyperParams(alpha0=alpha),
-                                  int(hv.steps[-1]), record_every=8).history
+                                  int(hv.steps[-1]), record_every=8,
+                                  resident=resident).history
         t_ds = (time.time() - t0) * 1e6 / max(int(hv.steps[-1]), 1)
         gap_vr = hv.objective[-1] - fs
         gap_ds = hd.objective[-1] - fs

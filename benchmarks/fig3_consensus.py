@@ -10,7 +10,8 @@ from repro.core import dpsvrg, graphs
 from . import common
 
 
-def run(scale: float = 0.02, alpha: float = 0.2):
+def run(scale: float = 0.02, alpha: float = 0.2,
+        resident: bool = False):
     rows = []
     data, flat, h, x0, d = common.setup_problem("mnist_like", scale)
     fs = common.f_star(flat, h, d)
@@ -20,7 +21,8 @@ def run(scale: float = 0.02, alpha: float = 0.2):
         hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                       num_outer=8, single_consensus=single)
         hist = common.run_algorithm("dpsvrg", problem, sched, hp,
-                                    record_every=0).history
+                                    record_every=0,
+                                    resident=resident).history
         rows.append(common.Row(
             f"fig3/mnist_like/{name}_consensus", 0.0,
             f"gap={hist.objective[-1] - fs:.5f} "

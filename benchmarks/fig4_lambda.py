@@ -11,7 +11,8 @@ from repro.core import dpsvrg, graphs
 from . import common
 
 
-def run(scale: float = 0.02, alpha: float = 0.2):
+def run(scale: float = 0.02, alpha: float = 0.2,
+        resident: bool = False):
     rows = []
     for lam in (0.001, 0.01, 0.1):
         data, flat, h, x0, d = common.setup_problem("mnist_like", scale,
@@ -21,11 +22,13 @@ def run(scale: float = 0.02, alpha: float = 0.2):
         hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                       num_outer=9)
         hv = common.run_algorithm("dpsvrg", problem, sched, hp,
-                                  record_every=4).history
+                                  record_every=4,
+                                  resident=resident).history
         hd = common.run_algorithm("dspg", problem, sched,
                                   dpsvrg.DSPGHyperParams(alpha0=alpha,
                                                          constant_step=True),
-                                  int(hv.steps[-1]), record_every=8).history
+                                  int(hv.steps[-1]), record_every=8,
+                                  resident=resident).history
         osc = lambda hh: float(np.std(hh.objective[-len(hh.objective) // 3:]))
         rows.append(common.Row(
             f"fig4/lambda={lam}", 0.0,

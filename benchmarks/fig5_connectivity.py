@@ -9,7 +9,8 @@ from repro.core import dpsvrg, graphs
 from . import common
 
 
-def run(scale: float = 0.02, alpha: float = 0.2):
+def run(scale: float = 0.02, alpha: float = 0.2,
+        resident: bool = False):
     rows = []
     data, flat, h, x0, d = common.setup_problem("mnist_like", scale)
     fs = common.f_star(flat, h, d)
@@ -19,11 +20,12 @@ def run(scale: float = 0.02, alpha: float = 0.2):
         hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
                                       num_outer=9)
         hv = common.run_algorithm("dpsvrg", problem, sched, hp,
-                                  record_every=0, seed=b).history
+                                  record_every=0, seed=b,
+                                  resident=resident).history
         hd = common.run_algorithm("dspg", problem, sched,
                                   dpsvrg.DSPGHyperParams(alpha0=alpha),
                                   int(hv.steps[-1]), record_every=10,
-                                  seed=b).history
+                                  seed=b, resident=resident).history
         gv, gd = hv.objective[-1] - fs, hd.objective[-1] - fs
         rows.append(common.Row(
             f"fig5/b={b}", 0.0,

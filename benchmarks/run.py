@@ -17,6 +17,10 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig1,fig2,fig3,fig4,fig5,"
                          "table1,kernel")
+    ap.add_argument("--resident", action="store_true",
+                    help="drive the fig sweeps through the device-resident "
+                         "runner path (one transfer per run; histories "
+                         "agree with the host path to float tolerance)")
     args = ap.parse_args()
 
     from . import (baselines_compare, beyond_noniid, datasets_table,
@@ -35,13 +39,17 @@ def main() -> None:
         "baselines": baselines_compare.run,
     }
     only = {s for s in args.only.split(",") if s}
+    # the fig sweeps accept resident=; the non-sweep suites don't
+    resident_aware = {"fig1", "fig2", "fig3", "fig4", "fig5"}
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if only and name not in only:
             continue
         t0 = time.time()
         try:
-            rows = fn(args.scale)
+            kw = ({"resident": True}
+                  if args.resident and name in resident_aware else {})
+            rows = fn(args.scale, **kw)
         except Exception as e:  # pragma: no cover
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
             raise

@@ -1,29 +1,39 @@
-"""Unified-runner microbenchmark: host loop vs ``lax.scan`` fast path, the
-pluggable gossip transports, and bucketed chunk compilation.
+"""Unified-runner microbenchmark: host loop vs ``lax.scan`` fast path vs the
+device-resident path, the pluggable gossip transports, and bucketed chunk
+compilation.
 
 Times the SAME algorithm/problem/schedule through ``runner.run``:
 
 * ``scan=False`` — one device dispatch per inner step (the historical loop
   shape) vs ``scan=True`` — the driver pre-samples a record_every-step chunk
   of batches, pre-stacks the chunk's gossip inputs, and executes the chunk
-  in one compiled dispatch.  On the CPU container the win is pure per-step
-  Python/dispatch overhead removal — exactly the overhead that dominates the
-  paper-scale logreg problem, where each step is a tiny (m, d) update.
+  in one compiled dispatch — vs ``resident=True`` — the whole run is planned
+  on host, staged to the device in ONE transfer, executed with donated
+  carries, and its metrics recorded on device with ONE pull at run end.  The
+  bench ASSERTS the O(1)-transfer claim from the runner's transfer ledger
+  (resident: one staging put + at most two pulls, independent of run length;
+  scan: ~2 per chunk) and that host/scan/resident histories agree to float
+  tolerance on the paper logreg problem.
 * per-transport (``gossip=``): dense vs banded on a TDMA edge-matching ring
   (degree <= 2), plus the full ``GOSSIP_BACKENDS`` sweep on the 8-node ring
   with each backend's ms/step AND wire bytes/step from its own
   ``bytes_per_step`` accounting — so the O(degree) claim is visible in
   bytes, not just wall time.  ``ppermute`` is only *timed* when the process
   has >= 8 devices (its wire accounting is identical to banded and is
-  always reported); ``compressed`` rides dense at bits/32 the bytes.
+  always reported); ``compressed`` rides dense at bits/32 the bytes.  A
+  4-device process additionally times a resident+ppermute row on the 4-ring
+  (the CI bench leg forces that device count).
 * DPSVRG with per-round chunks (``record_every=0``): growing K_s rounds are
   padded to power-of-two buckets, so the scan body compiles O(#buckets)
   executables instead of one per distinct round length
-  (``runner.scan_executable_count``); the cold row includes compile time.
+  (``runner.scan_executable_count``); the cold row includes compile time,
+  and a warm-INSTANCE row shows the persistent executable cache serving a
+  freshly rebuilt Algorithm (the sweep shape) with zero new compiles.
 
 ``python -m benchmarks.runner_bench --json [PATH]`` additionally writes the
-per-backend stats as ``BENCH_runner.json`` so the perf trajectory is
-machine-tracked across PRs.
+per-backend AND per-path stats as ``BENCH_runner.json`` so the perf
+trajectory is machine-tracked across PRs (see benchmarks/check_bench.py for
+the regression gate against the committed baseline).
 """
 
 from __future__ import annotations
@@ -33,20 +43,20 @@ import json
 import time
 
 import jax
+import numpy as np
 
 from repro.core import (algorithm, dpsvrg, gossip, graphs, runner, schedules,
                         transport)
 from . import common
 
 
-def _time_run(algo, problem, sched, *, record_every, scan, iters=3, **kw):
-    # warm-up compiles both paths' jitted steps
-    runner.run(algo, problem, sched, seed=0, record_every=record_every,
-               scan=scan, **kw)
+def _time_run(algo, problem, sched, *, record_every, iters=3, **kw):
+    # warm-up compiles the path's jitted kernels
+    runner.run(algo, problem, sched, seed=0, record_every=record_every, **kw)
     t0 = time.time()
     for i in range(iters):
         runner.run(algo, problem, sched, seed=0, record_every=record_every,
-                   scan=scan, **kw)
+                   **kw)
     return (time.time() - t0) / iters * 1e6
 
 
@@ -97,21 +107,132 @@ def backend_stats(scale: float = 0.02) -> dict:
             "param_dim": int(d), "scale": scale, "backends": stats}
 
 
+def resident_stats(scale: float = 0.02) -> dict:
+    """Host vs scan vs resident on the paper logreg DSPG 600-step run, with
+    the transfer-count assertion (O(1) per resident run) and the
+    host/scan/resident history-equivalence check baked in."""
+    data, flat, h, x0, d = common.setup_problem("adult_like", scale)
+    sched = graphs.b_connected_ring_schedule(8, b=2, seed=0)
+    problem = algorithm.Problem(common.logreg_loss, h, x0, data)
+    steps = 600
+
+    def make():
+        return algorithm.dspg_algorithm(
+            problem, dpsvrg.DSPGHyperParams(alpha0=0.2), num_steps=steps)
+
+    t_host = _time_run(make(), problem, sched, record_every=100, iters=2)
+    t_scan = _time_run(make(), problem, sched, record_every=100, scan=True)
+    t_res = _time_run(make(), problem, sched, record_every=100,
+                      resident=True)
+    t_dev = _time_run(make(), problem, sched, record_every=100,
+                      resident=True, sampling="device")
+
+    r_host = runner.run(make(), problem, sched, seed=0, record_every=100)
+    r_scan = runner.run(make(), problem, sched, seed=0, record_every=100,
+                        scan=True)
+    r_res = runner.run(make(), problem, sched, seed=0, record_every=100,
+                       resident=True)
+
+    # --- the transfer-count assertion: host<->device transfers per resident
+    # run are O(1), vs O(#chunks + #records) on the scan path ---------------
+    assert r_res.extras["transfers_h2d"] <= 2, r_res.extras
+    assert r_res.extras["transfers_d2h"] <= 2, r_res.extras
+    n_chunks = steps // 100
+    assert r_scan.extras["transfers_h2d"] >= n_chunks, r_scan.extras
+
+    # --- host/scan/resident histories agree to float tolerance ------------
+    for other in (r_scan, r_res):
+        np.testing.assert_allclose(r_host.history.objective,
+                                   other.history.objective,
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(r_host.history.consensus,
+                                   other.history.consensus,
+                                   rtol=1e-3, atol=1e-6)
+    max_diff = float(np.max(np.abs(r_host.history.objective
+                                   - r_res.history.objective)))
+
+    entry = {
+        "algorithm": "dspg", "steps": steps, "record_every": 100,
+        "schedule": "bring8_b2", "param_dim": int(d), "scale": scale,
+        "host_ms_per_step": t_host / 1e3 / steps,
+        "scan_ms_per_step": t_scan / 1e3 / steps,
+        "resident_ms_per_step": t_res / 1e3 / steps,
+        "resident_device_sampling_ms_per_step": t_dev / 1e3 / steps,
+        "speedup_resident_vs_scan": t_scan / t_res,
+        "speedup_resident_vs_host": t_host / t_res,
+        "transfers": {
+            "scan": [int(r_scan.extras["transfers_h2d"]),
+                     int(r_scan.extras["transfers_d2h"])],
+            "resident": [int(r_res.extras["transfers_h2d"]),
+                         int(r_res.extras["transfers_d2h"])],
+        },
+        "history_max_abs_diff": max_diff,
+    }
+
+    out = {"dspg600": entry}
+
+    # --- resident + ppermute on a 4-node ring (CI's forced 4-device leg) ---
+    if len(jax.devices()) >= 4:
+        data4, _, h4, x04, d4 = common.setup_problem("adult_like", scale,
+                                                     m=4)
+        sched4 = graphs.MixingSchedule(
+            tuple(graphs.edge_matching_matrices(4)), b=2, eta=0.5,
+            name="tdma-matching4")
+        problem4 = algorithm.Problem(common.logreg_loss, h4, x04, data4)
+
+        def make4():
+            return algorithm.dspg_algorithm(
+                problem4, dpsvrg.DSPGHyperParams(alpha0=0.2), num_steps=200)
+
+        t_pp = _time_run(make4(), problem4, sched4, record_every=50,
+                         resident=True, gossip="ppermute")
+        r_pp = runner.run(make4(), problem4, sched4, seed=0, record_every=50,
+                          resident=True, gossip="ppermute")
+        r_dn = runner.run(make4(), problem4, sched4, seed=0, record_every=50,
+                          gossip="dense")
+        np.testing.assert_allclose(r_dn.history.objective,
+                                   r_pp.history.objective,
+                                   rtol=1e-4, atol=1e-6)
+        assert r_pp.extras["transfers_h2d"] <= 2
+        out["resident_ppermute_m4"] = {
+            "algorithm": "dspg", "steps": 200, "schedule": "tdma-matching4",
+            "resident_ms_per_step": t_pp / 1e3 / 200,
+            "wire_bytes_per_step": int(r_pp.extras["wire_bytes"][-1]) / 200,
+            "transfers": [int(r_pp.extras["transfers_h2d"]),
+                          int(r_pp.extras["transfers_d2h"])],
+        }
+    else:
+        out["resident_ppermute_m4"] = None
+    return out
+
+
 def run(scale: float = 0.02):
     rows = []
     data, flat, h, x0, d = common.setup_problem("adult_like", scale)
     sched = graphs.b_connected_ring_schedule(8, b=2, seed=0)
     problem = algorithm.Problem(common.logreg_loss, h, x0, data)
 
-    # DSPG: flat loop, fixed-length chunks -> single scan compile
-    algo = algorithm.dspg_algorithm(
-        problem, dpsvrg.DSPGHyperParams(alpha0=0.2), num_steps=600)
-    t_host = _time_run(algo, problem, sched, record_every=100, scan=False)
-    t_scan = _time_run(algo, problem, sched, record_every=100, scan=True)
-    rows.append(common.Row("runner/dspg_host_600steps", t_host,
+    # DSPG: flat loop — host vs scan vs resident vs resident+device-sampling
+    rs = resident_stats(scale)["dspg600"]
+    steps = rs["steps"]
+    rows.append(common.Row("runner/dspg_host_600steps",
+                           rs["host_ms_per_step"] * steps * 1e3,
                            "one dispatch per step"))
-    rows.append(common.Row("runner/dspg_scan_600steps", t_scan,
-                           f"100-step chunks speedup={t_host / t_scan:.1f}x"))
+    rows.append(common.Row(
+        "runner/dspg_scan_600steps", rs["scan_ms_per_step"] * steps * 1e3,
+        f"100-step chunks speedup="
+        f"{rs['host_ms_per_step'] / rs['scan_ms_per_step']:.1f}x"))
+    rows.append(common.Row(
+        "runner/dspg_resident_600steps",
+        rs["resident_ms_per_step"] * steps * 1e3,
+        f"h2d/d2h={rs['transfers']['resident']} (scan: "
+        f"{rs['transfers']['scan']}) "
+        f"speedup={rs['speedup_resident_vs_scan']:.1f}x vs scan "
+        f"{rs['speedup_resident_vs_host']:.1f}x vs host"))
+    rows.append(common.Row(
+        "runner/dspg_resident_device_sampling",
+        rs["resident_device_sampling_ms_per_step"] * steps * 1e3,
+        "PRNG key in the scan carry; zero batch staging"))
 
     # banded vs dense gossip on the TDMA edge-matching ring (degree <= 2):
     # same algorithm, same schedule, O(degree) collectives vs O(m) einsum
@@ -120,7 +241,7 @@ def run(scale: float = 0.02):
         name="tdma-matching8")
     algo = algorithm.dspg_algorithm(
         problem, dpsvrg.DSPGHyperParams(alpha0=0.2), num_steps=600)
-    t_host = _time_run(algo, problem, match, record_every=100, scan=False)
+    t_host = _time_run(algo, problem, match, record_every=100)
     t_dense = _time_run(algo, problem, match, record_every=100, scan=True,
                         gossip="dense")
     t_band = _time_run(algo, problem, match, record_every=100, scan=True,
@@ -147,18 +268,26 @@ def run(scale: float = 0.02):
                entry.get("note", "") + ")")))
 
     # DPSVRG: growing inner rounds, per-round chunks (record_every=0) —
-    # bucketing compiles O(#buckets) executables across all K_s lengths
+    # bucketing compiles O(#buckets) executables across all K_s lengths,
+    # and the persistent executable cache serves REBUILT instances warm
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4, num_outer=10,
                                   k_max=4)
     ks = schedules.inner_loop_lengths(hp.beta, hp.n0, hp.num_outer)
     algo = algorithm.dpsvrg_algorithm(problem, hp)
-    t_host = _time_run(algo, problem, sched, record_every=0, scan=False)
+    t_host = _time_run(algo, problem, sched, record_every=0)
+    runner.reset_executable_caches()   # measure a TRUE cold start
     algo_cold = algorithm.dpsvrg_algorithm(problem, hp)
     t0 = time.time()
     runner.run(algo_cold, problem, sched, seed=0, record_every=0, scan=True)
     t_cold = (time.time() - t0) * 1e6
-    t_scan = _time_run(algo, problem, sched, record_every=0, scan=True)
-    execs = runner.scan_executable_count(algo)
+    # a fresh instance (the sweep shape): compiled chunks persist across
+    # run() calls and instances, so this run compiles nothing
+    algo_warm = algorithm.dpsvrg_algorithm(problem, hp)
+    t0 = time.time()
+    runner.run(algo_warm, problem, sched, seed=0, record_every=0, scan=True)
+    t_warm_inst = (time.time() - t0) * 1e6
+    t_scan = _time_run(algo_warm, problem, sched, record_every=0, scan=True)
+    execs = runner.scan_executable_count(algo_warm)
     rows.append(common.Row("runner/dpsvrg_host_10outer", t_host,
                            "one dispatch per inner step"))
     rows.append(common.Row(
@@ -167,6 +296,10 @@ def run(scale: float = 0.02):
     rows.append(common.Row(
         "runner/dpsvrg_scan_cold", t_cold,
         f"{execs} compiled buckets for {len(set(ks))} distinct K_s"))
+    rows.append(common.Row(
+        "runner/dpsvrg_scan_warm_instance", t_warm_inst,
+        f"rebuilt Algorithm, persistent executable cache: "
+        f"{t_cold / t_warm_inst:.1f}x faster than cold"))
     return rows
 
 
@@ -175,11 +308,12 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.02)
     ap.add_argument("--json", nargs="?", const="BENCH_runner.json",
                     default=None, metavar="PATH",
-                    help="write per-backend ms/step + wire bytes to PATH "
+                    help="write per-backend + per-path stats to PATH "
                          "(default BENCH_runner.json) for cross-PR tracking")
     args = ap.parse_args()
     if args.json:
         out = backend_stats(args.scale)
+        out["resident"] = resident_stats(args.scale)
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {args.json}")
@@ -188,6 +322,12 @@ def main() -> None:
             print(f"  {name:11s} ms/step="
                   f"{'n/a' if ms is None else format(ms, '.3f'):>7s} "
                   f"wire_bytes/step={entry['wire_bytes_per_step']:.0f}")
+        rs = out["resident"]["dspg600"]
+        print(f"  dspg600     host={rs['host_ms_per_step']:.3f} "
+              f"scan={rs['scan_ms_per_step']:.3f} "
+              f"resident={rs['resident_ms_per_step']:.3f} ms/step "
+              f"({rs['speedup_resident_vs_scan']:.1f}x vs scan, transfers "
+              f"{rs['transfers']['resident']} vs {rs['transfers']['scan']})")
     else:
         print("name,us_per_call,derived")
         for r in run(args.scale):

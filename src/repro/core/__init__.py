@@ -9,8 +9,11 @@ Submodules:
   transport  — the pluggable `GossipBackend` wire formats (dense / banded /
                ppermute / compressed), "auto" selection, wire-byte accounting
   algorithm  — the unified `DecentralizedAlgorithm` protocol + all methods
-  runner     — the single generic driver (host loop + lax.scan fast path,
-               pluggable gossip transports, bucketed chunk compilation)
+  runner     — the single generic driver (host loop, lax.scan fast path,
+               and the device-resident path: one staged transfer per run,
+               donated carries, on-device metric recording; pluggable
+               gossip transports, bucketed chunk compilation, persistent
+               executable cache)
   dpsvrg     — Algorithm 1 hyper-params / step builders + centralized prox-GD
   inexact    — Algorithm 2 (Inexact Prox-SVRG) on the protocol + executable
                Theorem 1 (registered as ALGORITHMS["inexact_prox_svrg"])

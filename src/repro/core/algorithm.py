@@ -29,6 +29,7 @@ the SVRG correction a third time.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Callable, NamedTuple
 
@@ -50,6 +51,7 @@ __all__ = [
     "build_node_full_grad_fn",
     "build_dpsvrg_inner_step",
     "build_dspg_step",
+    "build_gt_svrg_inner_step",
     "dpsvrg_algorithm",
     "dspg_algorithm",
     "dpg_algorithm",
@@ -185,6 +187,39 @@ def build_node_full_grad_fn(loss_fn: Callable, full_batch) -> Callable:
 # Jitted step builders
 # ---------------------------------------------------------------------------
 
+# Step functions are memoized on their (hashable) ingredients so that
+# REBUILDING an Algorithm — as every sweep point does — returns the SAME
+# function objects, and therefore the same jax.jit compilation caches and the
+# same runner chunk executors.  This is what lets compiled scan/resident
+# chunks survive across ``runner.run`` calls: the executable cache in
+# ``core.runner`` keys on step identity, and step identity is stable across
+# instances with identical loss/prox closures.  Entries hold no datasets
+# (data-bound steps like DPG's full-gradient step are deliberately NOT
+# memoized), so the LRU cap only bounds compiled-code retention.
+_SHARED_STEPS: "collections.OrderedDict[tuple, Callable]" = \
+    collections.OrderedDict()
+_SHARED_STEPS_MAX = 128
+
+
+def memoize_into(cache: "collections.OrderedDict", cap: int, key: tuple,
+                 make: Callable[[], Callable]) -> Callable:
+    """Bounded (LRU) build-on-miss memoizer — shared by the step cache here
+    and the runner's executable cache."""
+    fn = cache.get(key)
+    if fn is None:
+        fn = make()
+        cache[key] = fn
+        while len(cache) > cap:
+            cache.popitem(last=False)
+    else:
+        cache.move_to_end(key)
+    return fn
+
+
+def _shared_step(key: tuple, make: Callable[[], Callable]) -> Callable:
+    return memoize_into(_SHARED_STEPS, _SHARED_STEPS_MAX, key, make)
+
+
 def build_dpsvrg_inner_step(loss_fn: Callable, prox: prox_lib.Prox,
                             compress_bits: int | None = None):
     """Returns jitted ``step(params, svrg_state, batch, phi, alpha, cstate)
@@ -197,34 +232,70 @@ def build_dpsvrg_inner_step(loss_fn: Callable, prox: prox_lib.Prox,
     ``CompressedPhi`` so hp-level compression and the ``compressed``
     transport backend share one code path.
     """
-    node_grad = build_node_grad_fn(loss_fn)
+    def make():
+        node_grad = build_node_grad_fn(loss_fn)
 
-    @jax.jit
-    def step(params, svrg_state, batch, phi, alpha, cstate):
-        if compress_bits is not None and \
-                not isinstance(phi, compression.CompressedPhi):
-            phi = compression.CompressedPhi(phi, compress_bits)
-        v = svrg.corrected_gradient(node_grad, params, svrg_state, batch)
-        q = jax.tree.map(lambda x, vi: x - alpha * vi.astype(x.dtype),
-                         params, v)
-        q_hat, cstate = compression.mix_with_state(phi, q, cstate)
-        x = prox.apply(q_hat, alpha)
-        return x, cstate
+        @jax.jit
+        def step(params, svrg_state, batch, phi, alpha, cstate):
+            if compress_bits is not None and \
+                    not isinstance(phi, compression.CompressedPhi):
+                phi = compression.CompressedPhi(phi, compress_bits)
+            v = svrg.corrected_gradient(node_grad, params, svrg_state, batch)
+            q = jax.tree.map(lambda x, vi: x - alpha * vi.astype(x.dtype),
+                             params, v)
+            q_hat, cstate = compression.mix_with_state(phi, q, cstate)
+            x = prox.apply(q_hat, alpha)
+            return x, cstate
 
-    return step
+        return step
+
+    return _shared_step(("dpsvrg_inner", loss_fn, prox, compress_bits), make)
 
 
 def build_dspg_step(loss_fn: Callable, prox: prox_lib.Prox):
     """DSPG [paper ref. 11]: plain stochastic gradient + single gossip + prox,
     decaying step size."""
-    node_grad = build_node_grad_fn(loss_fn)
+    def make():
+        node_grad = build_node_grad_fn(loss_fn)
 
-    @jax.jit
-    def step(params, batch, w, alpha):
-        g = node_grad(params, batch)
-        return prox_gossip_update(params, g, w, alpha, prox)
+        @jax.jit
+        def step(params, batch, w, alpha):
+            g = node_grad(params, batch)
+            return prox_gossip_update(params, g, w, alpha, prox)
 
-    return step
+        return step
+
+    return _shared_step(("dspg_step", loss_fn, prox), make)
+
+
+def build_gt_svrg_inner_step(loss_fn: Callable, prox: prox_lib.Prox):
+    """GT-SVRG inner update: prox-gossip step + gradient-tracking recursion.
+
+    Both collectives (the iterate mix and the tracker mix) route through
+    ``compression.mix_with_state``, so the step can ride the stateful
+    ``compressed`` transport: ``cstate`` is a pair of error-feedback states
+    (one per transmitted quantity — iterate and tracker carry independent
+    quantization residuals), or ``None`` for stateless transports.
+    """
+    def make():
+        node_grad = build_node_grad_fn(loss_fn)
+
+        @jax.jit
+        def inner(params, tracker, v_prev, est, batch, w, a, cstate):
+            cq, ct = cstate if cstate is not None else (None, None)
+            q = jax.tree.map(lambda x, y: x - a * y, params, tracker)
+            q_hat, cq = compression.mix_with_state(w, q, cq)
+            new_params = prox.apply(q_hat, a)
+            v_new = svrg.corrected_gradient(node_grad, new_params, est, batch)
+            t_mixed, ct = compression.mix_with_state(w, tracker, ct)
+            new_tracker = jax.tree.map(
+                lambda ty, vn, vp: ty + vn - vp, t_mixed, v_new, v_prev)
+            new_cstate = None if cq is None and ct is None else (cq, ct)
+            return new_params, new_tracker, v_new, new_cstate
+
+        return inner
+
+    return _shared_step(("gt_svrg_inner", loss_fn, prox), make)
 
 
 # ---------------------------------------------------------------------------
@@ -251,6 +322,10 @@ class AlgoMeta:
       gossip_rounds(k): consensus rounds at inner step k (in-round k for
                         outer/inner methods, global t for flat ones); the
                         runner turns rounds into one pre-multiplied Phi
+      gossip_payloads:  distinct quantities transmitted per mixing (wire
+                        accounting multiplier): 1 for prox-gossip methods,
+                        2 for gradient tracking, which gossips the iterate
+                        AND the tracking direction with the same Phi
       slot_start:       first slot of the time-varying schedule consumed
 
     Recording conventions (kept method-by-method identical to the historical
@@ -271,6 +346,20 @@ class AlgoMeta:
                         the wire-byte accounting matches what actually moves
                         (and raises if a conflicting compressed transport is
                         requested).
+
+    Resident-mode metric contract (``runner.run(resident=True)``):
+      resident_objective: traceable ``objective(stacked_params, full_data)
+                        -> scalar`` evaluated INSIDE the jitted on-device
+                        record kernel.  None (the default) means the
+                        standard composite objective F(x̄) = mean_i
+                        f_i(x̄) + h(x̄) via the vmap'd loss + prox value —
+                        correct for every method in the repo.  Algorithms
+                        whose recorded objective differs from F(x̄) declare
+                        it here; the consensus column always comes from the
+                        in-graph ``jnp`` norms when ``track_consensus`` is
+                        set.  (``Problem.objective_fn`` still overrides on
+                        the host paths, and is used by the resident path
+                        too when set — but then it must be jax-traceable.)
     """
     name: str
     stepsize: Callable[[int], float]
@@ -281,6 +370,7 @@ class AlgoMeta:
     outer_full_grad: bool = False
     init_full_grad: bool = False
     gossip_rounds: Callable[[int], int] = lambda k: 1
+    gossip_payloads: int = 1
     slot_start: int = 0
     snapshot_prob: float | None = None
     track_consensus: bool = False
@@ -289,6 +379,7 @@ class AlgoMeta:
     record_key: str = "round"
     final_record: bool = True
     compress_bits: int | None = None
+    resident_objective: Callable | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -303,7 +394,9 @@ class Algorithm:
     (the ``compressed`` backend's error-feedback residual): it injects a
     fresh mix state into an initialized algorithm state, and the step must
     thread that state through its mix (``compression.mix_with_state``).
-    Algorithms leaving it None can only be driven by stateless transports.
+    DPSVRG, GT-SVRG, and loopless DPSVRG all do (GT-SVRG carries one
+    residual per transmitted quantity — iterate and tracker); algorithms
+    leaving it None can only be driven by stateless transports.
     """
     meta: AlgoMeta
     init: Callable[[], Any]
@@ -340,11 +433,13 @@ class GTSVRGState(NamedTuple):
     tracker: Any                      # gradient-tracking direction y_i
     v_prev: Any
     inner_sum: Any
+    cstate: Any = None                # (iterate, tracker) error-feedback pair
 
 
 class LooplessState(NamedTuple):
     params: Any
     est: svrg.SvrgState
+    cstate: Any = None                # compression error-feedback state
 
 
 def _zeros_like(tree):
@@ -377,11 +472,16 @@ def dpsvrg_algorithm(problem: Problem, hp: DPSVRGHyperParams) -> Algorithm:
                              full_grad=full_grad_fn(state.anchor))
         return state._replace(est=est, inner_sum=_zeros_like(state.params))
 
-    def step(state, batch, phi, alpha):
-        params, cstate = inner(state.params, state.est, batch, phi, alpha,
-                               state.cstate)
-        return state._replace(params=params, cstate=cstate,
-                              inner_sum=svrg.tree_add(state.inner_sum, params))
+    def make_step():
+        def step(state, batch, phi, alpha):
+            params, cstate = inner(state.params, state.est, batch, phi,
+                                   alpha, state.cstate)
+            return state._replace(
+                params=params, cstate=cstate,
+                inner_sum=svrg.tree_add(state.inner_sum, params))
+        return step
+
+    step = _shared_step(("dpsvrg_proto_step", inner), make_step)
 
     def end_outer(state, K):
         return state._replace(
@@ -419,8 +519,12 @@ def dspg_algorithm(problem: Problem, hp: DSPGHyperParams,
     """DSPG baseline: one stochastic prox-gradient + one gossip per step."""
     step_fn = build_dspg_step(problem.loss_fn, problem.prox)
 
-    def step(state, batch, phi, alpha):
-        return ParamState(step_fn(state.params, batch, phi, alpha))
+    def make_step():
+        def step(state, batch, phi, alpha):
+            return ParamState(step_fn(state.params, batch, phi, alpha))
+        return step
+
+    step = _shared_step(("dspg_proto_step", step_fn), make_step)
 
     meta = AlgoMeta(
         name="dspg",
@@ -469,20 +573,8 @@ def gt_svrg_algorithm(problem: Problem, alpha: float, num_outer: int,
                       inner_steps: int, batch_size: int = 1) -> Algorithm:
     """GT-SVRG [paper refs 18/19]: SVRG estimator + gradient tracking; one
     gossip round per step (tracking replaces multi-consensus)."""
-    node_grad = build_node_grad_fn(problem.loss_fn)
+    inner = build_gt_svrg_inner_step(problem.loss_fn, problem.prox)
     full_grad_fn = build_node_full_grad_fn(problem.loss_fn, problem.full_data)
-    prox = problem.prox
-
-    @jax.jit
-    def inner(params, tracker, v_prev, est, batch, w, a):
-        q = jax.tree.map(lambda x, y: x - a * y, params, tracker)
-        q_hat = gossip.mix_stacked(w, q)
-        new_params = prox.apply(q_hat, a)
-        v_new = svrg.corrected_gradient(node_grad, new_params, est, batch)
-        new_tracker = jax.tree.map(
-            lambda ty, vn, vp: ty + vn - vp,
-            gossip.mix_stacked(w, tracker), v_new, v_prev)
-        return new_params, new_tracker, v_new
 
     def init():
         # standard GT init: tracker starts at the x0 full gradient (computed
@@ -493,17 +585,28 @@ def gt_svrg_algorithm(problem: Problem, alpha: float, num_outer: int,
                            tracker=est.full_grad, v_prev=est.full_grad,
                            inner_sum=_zeros_like(problem.x0))
 
+    def init_mix_state(state):
+        # one error-feedback residual per transmitted quantity: the step
+        # gossips both the iterate and the tracking direction
+        return state._replace(cstate=(compression.init_state(problem.x0),
+                                      compression.init_state(problem.x0)))
+
     def outer(state):
         est = svrg.SvrgState(snapshot=state.anchor,
                              full_grad=full_grad_fn(state.anchor))
         return state._replace(est=est, inner_sum=_zeros_like(state.params))
 
-    def step(state, batch, phi, alpha):
-        params, tracker, v_prev = inner(state.params, state.tracker,
-                                        state.v_prev, state.est, batch, phi,
-                                        alpha)
-        return state._replace(params=params, tracker=tracker, v_prev=v_prev,
-                              inner_sum=svrg.tree_add(state.inner_sum, params))
+    def make_step():
+        def step(state, batch, phi, alpha):
+            params, tracker, v_prev, cstate = inner(
+                state.params, state.tracker, state.v_prev, state.est, batch,
+                phi, alpha, state.cstate)
+            return state._replace(
+                params=params, tracker=tracker, v_prev=v_prev, cstate=cstate,
+                inner_sum=svrg.tree_add(state.inner_sum, params))
+        return step
+
+    step = _shared_step(("gt_svrg_proto_step", inner), make_step)
 
     def end_outer(state, K):
         return state._replace(
@@ -516,11 +619,13 @@ def gt_svrg_algorithm(problem: Problem, alpha: float, num_outer: int,
         batch_size=batch_size,
         step_grad_factor=2,
         outer_full_grad=True,
+        gossip_payloads=2,   # the step mixes the iterate AND the tracker
         record_key="global",
         final_record=False,
     )
     return Algorithm(meta=meta, init=init, step=step, outer=outer,
-                     end_outer=end_outer, rule=DPSVRG_RULE)
+                     end_outer=end_outer, rule=DPSVRG_RULE,
+                     init_mix_state=init_mix_state)
 
 
 def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
@@ -537,13 +642,21 @@ def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
                              full_grad=full_grad_fn(problem.x0))
         return LooplessState(params=problem.x0, est=est)
 
+    def init_mix_state(state):
+        return state._replace(cstate=compression.init_state(problem.x0))
+
     def outer(state):
         return state._replace(est=svrg.SvrgState(
             snapshot=state.params, full_grad=full_grad_fn(state.params)))
 
-    def step(state, batch, phi, alpha):
-        params, _ = inner(state.params, state.est, batch, phi, alpha, None)
-        return state._replace(params=params)
+    def make_step():
+        def step(state, batch, phi, alpha):
+            params, cstate = inner(state.params, state.est, batch, phi,
+                                   alpha, state.cstate)
+            return state._replace(params=params, cstate=cstate)
+        return step
+
+    step = _shared_step(("loopless_proto_step", inner), make_step)
 
     meta = AlgoMeta(
         name="loopless_dpsvrg",
@@ -557,7 +670,7 @@ def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
         snapshot_prob=snapshot_prob,
     )
     return Algorithm(meta=meta, init=init, step=step, outer=outer,
-                     rule=DPSVRG_RULE)
+                     rule=DPSVRG_RULE, init_mix_state=init_mix_state)
 
 
 ALGORITHMS: dict[str, Callable[..., Algorithm]] = {

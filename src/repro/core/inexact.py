@@ -96,15 +96,22 @@ def inexact_prox_svrg_algorithm(problem: Problem, hp: InexactHyperParams,
     exact closed forms; Algorithm 2's eps models the *decentralized* prox
     gap, which ``verify_theorem1`` measures on the real DPSVRG run instead).
     """
-    node_grad = build_node_grad_fn(problem.loss_fn)
     full_grad_fn = build_node_full_grad_fn(problem.loss_fn, problem.full_data)
     prox = problem.prox
 
-    @jax.jit
-    def _step(params, est, batch, phi, alpha, err):
-        v = svrg.corrected_gradient(node_grad, params, est, batch)
-        v = svrg.tree_add(v, err)
-        return prox_gossip_update(params, v, phi, alpha, prox)
+    def _make_inner():
+        node_grad = build_node_grad_fn(problem.loss_fn)
+
+        @jax.jit
+        def _step(params, est, batch, phi, alpha, err):
+            v = svrg.corrected_gradient(node_grad, params, est, batch)
+            v = svrg.tree_add(v, err)
+            return prox_gossip_update(params, v, phi, alpha, prox)
+
+        return _step
+
+    _step = algorithm_lib._shared_step(
+        ("inexact_inner", problem.loss_fn, prox), _make_inner)
 
     def _zeros(tree):
         return jax.tree.map(jnp.zeros_like, tree)
@@ -119,15 +126,22 @@ def inexact_prox_svrg_algorithm(problem: Problem, hp: InexactHyperParams,
                              full_grad=full_grad_fn(state.anchor))
         return state._replace(est=est, inner_sum=_zeros(state.params))
 
-    def step(state, batch, phi, alpha):
-        if grad_error_fn is None:
-            err = _zeros(state.params)
-        else:
-            err = grad_error_fn(state.t, gossip.unstack_tree(state.params))
-            err = jax.tree.map(lambda e: jnp.asarray(e)[None], err)
-        params = _step(state.params, state.est, batch, phi, alpha, err)
-        return state._replace(params=params, t=state.t + 1,
-                              inner_sum=svrg.tree_add(state.inner_sum, params))
+    def make_step():
+        def step(state, batch, phi, alpha):
+            if grad_error_fn is None:
+                err = _zeros(state.params)
+            else:
+                err = grad_error_fn(state.t,
+                                    gossip.unstack_tree(state.params))
+                err = jax.tree.map(lambda e: jnp.asarray(e)[None], err)
+            params = _step(state.params, state.est, batch, phi, alpha, err)
+            return state._replace(
+                params=params, t=state.t + 1,
+                inner_sum=svrg.tree_add(state.inner_sum, params))
+        return step
+
+    step = algorithm_lib._shared_step(
+        ("inexact_proto_step", _step, grad_error_fn), make_step)
 
     def end_outer(state, K):
         return state._replace(

@@ -8,7 +8,7 @@ extra recorders, and outer-round orchestration.  Algorithms only supply the
 :class:`~repro.core.algorithm.Algorithm` state/step/outer triple plus
 declarative metadata.
 
-Two execution paths:
+Three execution paths:
 
 * **host loop** (default): one device dispatch per inner step, iterating the
   algorithm's ``step`` exactly like the historical loops — bit-for-bit
@@ -20,6 +20,24 @@ Two execution paths:
   path.  Host-side rng draws happen in the same order as the host loop, so
   both paths consume identical batches; results agree to float tolerance
   (XLA may fuse the scanned body differently).
+* **device-resident path** (``resident=True``): the scan path still pays a
+  host<->device round trip per chunk (ship the stacked minibatch tree in,
+  pull metrics out at each record).  The resident path removes that seam:
+  the run is PLANNED on host first (chunk schedule, gossip products, step
+  sizes, minibatch indices — all data-independent), staged to the device in
+  ONE ``jax.device_put``, executed chunk-by-chunk with DONATED carries (XLA
+  updates the stacked iterate in place instead of copying the (m, d)
+  buffers), and metrics are recorded by a jitted on-device kernel into
+  preallocated buffers (objective via the vmap'd loss + prox, consensus via
+  ``jnp`` norms) that are pulled to host ONCE at run end — O(1) transfers
+  per run instead of two per chunk.  ``sampling="host"`` (default) draws
+  minibatch indices from the same ``np.random`` stream as the other paths
+  (histories agree to float tolerance); ``sampling="device"`` instead
+  threads a ``jax.random`` key through the scan carry and gathers
+  minibatches inside the compiled body — a different (but equally valid)
+  sample stream, and nothing per-step ever leaves the device.
+  ``RunResult.extras['transfers_h2d'/'transfers_d2h']`` reports the
+  driver-initiated transfer events for every path.
 
 Gossip transports are pluggable (``gossip``, a :mod:`repro.core.transport`
 backend name or instance; default ``"auto"``):
@@ -51,6 +69,15 @@ Padded steps are skipped at runtime via ``lax.cond`` and consume no rng
 draws, so histories are unchanged.  ``scan_executable_count`` exposes the
 compiled-variant count for benchmarks and tests.
 
+Compiled chunk executors are PERSISTENT across ``run()`` calls and across
+Algorithm instances: executors are cached by (algorithm name, path kind,
+sampling mode, step identity), and step identity is stable across rebuilt
+instances with identical loss/prox closures (``algorithm._shared_step``),
+so a sweep that reconstructs the algorithm per (topology, seed, ...) point
+compiles each (bucket, backend, m, d) chunk variant ONCE — the per-shape
+specialization lives in each executor's own ``jax.jit`` cache.  Use
+``reset_executable_caches()`` to measure true cold starts.
+
 The terminal record is deduplicated: the historical DPSVRG loop appended a
 final history point even when the last inner step had just been recorded,
 duplicating the last row whenever ``K_S % record_every == 0``.  The unified
@@ -59,6 +86,9 @@ recorder only emits the terminal point if the last step wasn't recorded.
 
 from __future__ import annotations
 
+import collections
+import contextlib
+import functools
 import warnings
 import weakref
 from typing import Any, Callable, NamedTuple
@@ -70,7 +100,8 @@ import numpy as np
 from . import algorithm as algorithm_lib, gossip, graphs, transport
 
 __all__ = ["RunHistory", "RunResult", "Recorder", "run", "sample_batch",
-           "scan_executable_count"]
+           "scan_executable_count", "reset_executable_caches",
+           "traceable_consensus"]
 
 
 class RunHistory(NamedTuple):
@@ -153,9 +184,36 @@ class Recorder:
         return out
 
 
-# Compiled chunk executors are cached per Algorithm instance: a fresh
-# ``jax.jit`` wrapper per run() would retrace every chunk shape on every run.
+# ---------------------------------------------------------------------------
+# Persistent executable cache
+# ---------------------------------------------------------------------------
+#
+# Compiled chunk executors / record kernels survive across run() calls AND
+# across Algorithm instances.  Keys embed the function identities an executor
+# closes over (the step fn, the loss/prox of the record kernel), which
+# ``algorithm._shared_step`` keeps stable for rebuilt instances with the same
+# closures — so the cache can never serve a stale computation, and a sweep
+# that reconstructs its Algorithm per point reuses every compiled
+# (bucket, backend, m, d) chunk variant from each executor's jax.jit cache.
+
+_EXEC_CACHE: "collections.OrderedDict[tuple, Callable]" = \
+    collections.OrderedDict()
+_EXEC_CACHE_MAX = 64
+
+# algo instance -> its scan executor, for scan_executable_count introspection
 _SCAN_EXEC_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _shared_exec(key: tuple, make: Callable[[], Callable]) -> Callable:
+    return algorithm_lib.memoize_into(_EXEC_CACHE, _EXEC_CACHE_MAX, key,
+                                      make)
+
+
+def reset_executable_caches() -> None:
+    """Drop every persistent executor/step cache (true cold-start measuring)."""
+    _EXEC_CACHE.clear()
+    _SCAN_EXEC_CACHE.clear()
+    algorithm_lib._SHARED_STEPS.clear()
 
 
 def _make_scan_exec(algo):
@@ -169,37 +227,48 @@ def _make_scan_exec(algo):
     step_fn = algo.step
     has_batch = algo.meta.batch_size > 0
 
-    def body(state, xs):
-        if has_batch:
-            batch, phi, alpha, keep = xs
-        else:
-            phi, alpha, keep = xs
-        # padded steps (keep=False) skip the update entirely at runtime, so
-        # bucketed chunks stay numerically identical to unpadded ones
-        new_state = jax.lax.cond(
-            keep,
-            lambda s: step_fn(s, batch if has_batch else None, phi, alpha),
-            lambda s: s,
-            state)
-        return new_state, None
+    def make():
+        def body(state, xs):
+            if has_batch:
+                batch, phi, alpha, keep = xs
+            else:
+                phi, alpha, keep = xs
+            # padded steps (keep=False) skip the update entirely at runtime,
+            # so bucketed chunks stay numerically identical to unpadded ones
+            new_state = jax.lax.cond(
+                keep,
+                lambda s: step_fn(s, batch if has_batch else None, phi,
+                                  alpha),
+                lambda s: s,
+                state)
+            return new_state, None
 
-    @jax.jit
-    def exec_chunk(state, xs):
-        return jax.lax.scan(body, state, xs)[0]
+        @jax.jit
+        def exec_chunk(state, xs):
+            return jax.lax.scan(body, state, xs)[0]
 
+        return exec_chunk
+
+    exec_chunk = _shared_exec(("scan", algo.meta.name, has_batch, step_fn),
+                              make)
     _SCAN_EXEC_CACHE[algo] = exec_chunk
     return exec_chunk
 
 
 def scan_executable_count(algo) -> int:
-    """Number of scan-chunk variants compiled for ``algo`` so far (0 if the
-    scan path never ran).  Chunk-length bucketing keeps this O(#buckets)
-    instead of O(#distinct chunk lengths).  Returns -1 when the running jax
-    no longer exposes the jit cache-size introspection (it is a private
-    API); callers must treat -1 as "unknown", not as a count."""
+    """Number of scan-chunk variants compiled for ``algo``'s executor so far
+    (0 if the scan path never ran).  Chunk-length bucketing keeps this
+    O(#buckets) instead of O(#distinct chunk lengths).  The executor is
+    SHARED across Algorithm instances with the same step closures (the
+    persistent executable cache), so counts accumulate across runs/instances
+    — compare before/after deltas to measure a single run.  Returns -1 when
+    the running jax no longer exposes the jit cache-size introspection (it
+    is a private API); callers must treat -1 as "unknown", not a count."""
     exec_chunk = _SCAN_EXEC_CACHE.get(algo)
     if exec_chunk is None:
-        return 0
+        # link (or reuse) the shared executor so before/after deltas work
+        # even when the caller asks before the first scan run
+        exec_chunk = _make_scan_exec(algo)
     cache_size = getattr(exec_chunk, "_cache_size", None)
     if cache_size is None:
         return -1
@@ -215,13 +284,24 @@ def _bucket_length(chunk: int, record_every: int) -> int:
     return 1 << max(chunk - 1, 0).bit_length()
 
 
+def _stack_wire(leaves):
+    """Stack per-step wire leaves, canonicalizing floats to f32 but KEEPING
+    integer payload dtypes (e.g. an 8-bit quantized transport's payload must
+    not silently widen to f32 on the wire — the historical force-cast here
+    quadrupled what the xs stacking shipped for int8 leaves)."""
+    out = np.stack([np.asarray(l) for l in leaves])
+    if np.issubdtype(out.dtype, np.floating):
+        return out.astype(np.float32, copy=False)
+    return out
+
+
 def _stack_phis(phis):
     """Stack host-side per-step wire representations into scan xs.  Every
     transport's phi is a pytree (dense array, BandedPhi, PermutePhi,
     CompressedPhi, ...) whose static parts are aux data, so one generic
-    leaf-stack covers all backends."""
-    return jax.tree.map(
-        lambda *leaves: jnp.asarray(np.stack(leaves), jnp.float32), *phis)
+    dtype-preserving leaf-stack covers all backends."""
+    return jax.tree.map(lambda *leaves: jnp.asarray(_stack_wire(leaves)),
+                        *phis)
 
 
 def _stack_inputs(meta, batches, phis, alphas, keep):
@@ -234,6 +314,441 @@ def _stack_inputs(meta, batches, phis, alphas, keep):
     return (phis, alphas, keep)
 
 
+# ---------------------------------------------------------------------------
+# Device-resident path: plan on host, stage once, execute on device,
+# pull the history once
+# ---------------------------------------------------------------------------
+
+# Test hook: the resident driver wraps every chunk/record DISPATCH in this
+# context.  Swapping in ``lambda: jax.transfer_guard("disallow")`` makes XLA
+# itself fault on any host<->device transfer during the compiled hot path —
+# the strongest form of the O(1)-transfers claim.
+_RESIDENT_DISPATCH_GUARD: Callable = contextlib.nullcontext
+
+
+def _flatten_nodes(params) -> jnp.ndarray:
+    """(m, total_d) view of a stacked pytree."""
+    return jnp.concatenate(
+        [l.reshape(l.shape[0], -1) for l in jax.tree.leaves(params)], axis=1)
+
+
+def traceable_consensus(params) -> jnp.ndarray:
+    """mean_i ||x_i - x_bar|| as a jittable kernel — the in-graph
+    replacement for the Recorder's per-node host ravel/concatenate loop."""
+    flat = _flatten_nodes(params)
+    xbar = jnp.mean(flat, axis=0, keepdims=True)
+    return jnp.mean(jnp.linalg.norm(flat - xbar, axis=1))
+
+
+def _make_record_kernel(problem, meta):
+    """Jitted on-device metric recorder: computes the objective (and
+    consensus when tracked) from the live state and writes them into the
+    preallocated history buffers at the carried record slot.  Buffers are
+    DONATED, so the update is in place.  The objective resolves, in order:
+    ``meta.resident_objective`` (the AlgoMeta traceable contract) ->
+    ``problem.objective_fn`` (must then be traceable) -> the default
+    composite F(x̄) via the vmap'd loss + prox value."""
+    def make():
+        if meta.resident_objective is not None:
+            obj = meta.resident_objective
+        elif problem.objective_fn is not None:
+            host_obj = problem.objective_fn
+
+            def obj(params, data):
+                del data
+                return host_obj(params)
+        else:
+            loss_fn, prox = problem.loss_fn, problem.prox
+
+            def obj(params, data):
+                xbar = gossip.node_mean(params)
+                m = jax.tree.leaves(params)[0].shape[0]
+                losses = jax.vmap(loss_fn)(gossip.stack_tree(xbar, m), data)
+                return jnp.mean(losses) + prox.value(xbar)
+
+        track = meta.track_consensus
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def record(bufs, params, data):
+            obj_buf, cons_buf, slot = bufs
+            obj_buf = obj_buf.at[slot].set(obj(params, data))
+            if track:
+                cons_buf = cons_buf.at[slot].set(traceable_consensus(params))
+            return (obj_buf, cons_buf, slot + 1)
+
+        return record
+
+    return _shared_exec(
+        ("record", meta.name, meta.track_consensus, problem.loss_fn,
+         problem.prox, problem.objective_fn, meta.resident_objective), make)
+
+
+def _make_resident_exec(algo, sampling: str):
+    """Compiled chunk executor for the resident path.  The carried state is
+    DONATED (XLA updates the stacked iterate in place — no (m, d) copy per
+    chunk); with ``sampling="device"`` the carry additionally threads a
+    ``jax.random`` key and minibatches are gathered from the device-resident
+    dataset inside the scan body, so the chunk's xs carry no batch tree at
+    all."""
+    step_fn = algo.step
+    meta = algo.meta
+    has_batch = meta.batch_size > 0
+    bsz = meta.batch_size
+    device_sampling = has_batch and sampling == "device"
+
+    def make():
+        if device_sampling:
+            def body_factory(data):
+                first = jax.tree.leaves(data)[0]
+                m, n = first.shape[0], first.shape[1]
+
+                def gather(idx):
+                    return jax.tree.map(
+                        lambda a: jnp.take_along_axis(
+                            a, idx.reshape(m, bsz, *([1] * (a.ndim - 2))),
+                            axis=1), data)
+
+                def body(carry, xs):
+                    phi, alpha, keep = xs
+
+                    def do(operand):
+                        state, key = operand
+                        key, sub = jax.random.split(key)
+                        idx = jax.random.randint(sub, (m, bsz), 0, n)
+                        return step_fn(state, gather(idx), phi, alpha), key
+
+                    return jax.lax.cond(keep, do, lambda o: o, carry), None
+
+                return body
+
+            @functools.partial(jax.jit, donate_argnums=0)
+            def exec_chunk(carry, xs, data):
+                return jax.lax.scan(body_factory(data), carry, xs)[0]
+        else:
+            def body(state, xs):
+                if has_batch:
+                    batch, phi, alpha, keep = xs
+                else:
+                    phi, alpha, keep = xs
+                new_state = jax.lax.cond(
+                    keep,
+                    lambda s: step_fn(s, batch if has_batch else None, phi,
+                                      alpha),
+                    lambda s: s,
+                    state)
+                return new_state, None
+
+            @functools.partial(jax.jit, donate_argnums=0)
+            def exec_chunk(carry, xs, data):
+                del data
+                return jax.lax.scan(body, carry, xs)[0]
+
+        return exec_chunk
+
+    return _shared_exec(
+        ("resident", meta.name, has_batch, sampling, bsz, step_fn), make)
+
+
+def _unalias_for_donation(tree):
+    """Copy duplicate leaves so the donated carry never hands XLA the same
+    buffer twice (``Attempt to donate the same buffer twice``): algorithm
+    transitions alias freely — e.g. DPSVRG's ``outer`` sets ``est.snapshot``
+    to the live ``anchor``, GT-SVRG's init points tracker/v_prev at the x0
+    full gradient.  Device-side copies only; no host transfer."""
+    seen: set = set()
+
+    def dedupe(leaf):
+        if id(leaf) in seen:
+            return jnp.array(leaf, copy=True)
+        seen.add(id(leaf))
+        return leaf
+
+    return jax.tree.map(dedupe, tree)
+
+
+def _shield_for_donation(tree):
+    """Fresh device copies of EVERY leaf: the initial state references
+    caller-owned buffers (``problem.x0``, dataset-derived full gradients)
+    that a donated call would invalidate for every later run."""
+    return jax.tree.map(lambda a: jnp.array(a, copy=True), tree)
+
+
+class _Chunk(NamedTuple):
+    xs: Any                        # host-side stacked xs for one chunk
+
+
+class _Plan(NamedTuple):
+    ops: list                      # ("chunk", i) | ("outer",) |
+    #                                ("end_outer", K) | ("record",)
+    chunks: list
+    cols: dict                     # host-computable history columns
+    wire: np.ndarray               # cumulative wire bytes per record
+    num_records: int
+
+
+def _plan_resident(algo, backend, aux, rng, *, m: int, n: int,
+                   param_count: int, record_every: int, sampling: str,
+                   host_data) -> _Plan:
+    """Walk the run's (data-independent) control flow WITHOUT touching the
+    device: chunk boundaries, bucket padding, gossip products, step sizes,
+    minibatch indices (``sampling="host"``: same ``np.random`` draw order as
+    the host/scan paths — per step, batch indices then the loopless coin
+    flip), and every host-computable history column.  The result is staged
+    in one transfer and executed without further host involvement."""
+    meta = algo.meta
+    has_batch = meta.batch_size > 0
+    host_sampling = has_batch and sampling == "host"
+    bsz = meta.batch_size
+
+    ops: list = []
+    chunks: list = []
+    cols = {"epochs": [], "comm_rounds": [], "steps": []}
+    wire_col: list = []
+
+    grad_evals = m * n if meta.init_full_grad else 0
+    full_grad_cost = m * n
+    comm = 0
+    wire = 0
+    slot = meta.slot_start
+    t = 0
+
+    def phi_for(rounds: int):
+        nonlocal slot, comm, wire
+        phi = backend.phi_for(aux, slot, rounds)
+        slot += rounds
+        comm += rounds
+        wire += (backend.bytes_per_step(aux, phi, param_count)
+                 * meta.gossip_payloads)
+        return phi
+
+    def plan_record():
+        ops.append(("record",))
+        cols["epochs"].append(grad_evals / float(m * n)
+                              if meta.epoch_metric == "grad" else float(t))
+        cols["comm_rounds"].append(comm if meta.comm_metric == "gossip"
+                                   else t)
+        cols["steps"].append(t)
+        wire_col.append(wire)
+
+    def finish_chunk(idxs, phis, alphas, chunk):
+        """Bucket-pad and stack one chunk's xs on host (batch gather is ONE
+        vectorized take per leaf — same indices as per-step sampling)."""
+        bucket = _bucket_length(chunk, record_every)
+        pad = bucket - chunk
+        if pad:
+            if idxs:
+                idxs.extend(idxs[-1:] * pad)
+            phis.extend(phis[-1:] * pad)
+            alphas.extend(alphas[-1:] * pad)
+        keep = np.array([True] * chunk + [False] * pad, np.bool_)
+        phis_st = jax.tree.map(lambda *l: _stack_wire(l), *phis)
+        alphas_st = np.asarray(alphas, np.float32)
+        if host_sampling:
+            idx = np.stack(idxs)                       # (bucket, m, B)
+            batch = jax.tree.map(
+                lambda a: np.take_along_axis(
+                    a[None],
+                    idx.reshape(bucket, m, bsz, *([1] * (a.ndim - 2))),
+                    axis=2), host_data)
+            xs = (batch, phis_st, alphas_st, keep)
+        else:
+            xs = (phis_st, alphas_st, keep)
+        ops.append(("chunk", len(chunks)))
+        chunks.append(_Chunk(xs))
+
+    plan_record()
+
+    if meta.outer_lengths is not None:
+        # ---- outer/inner structure (DPSVRG, GT-SVRG) ----------------------
+        just_recorded = False
+        for K in meta.outer_lengths:
+            ops.append(("outer",))
+            if meta.outer_full_grad:
+                grad_evals += full_grad_cost
+            k = 0
+            while k < K:
+                key0 = k if meta.record_key == "round" else t
+                until = (record_every - key0 % record_every
+                         if record_every else K - k)
+                chunk = min(K - k, until)
+                idxs, phis, alphas = [], [], []
+                for j in range(chunk):
+                    if host_sampling:
+                        idxs.append(rng.integers(0, n, size=(m, bsz)))
+                    phis.append(phi_for(meta.gossip_rounds(k + j + 1)))
+                    alphas.append(meta.stepsize(t + j + 1))
+                finish_chunk(idxs, phis, alphas, chunk)
+                k += chunk
+                t += chunk
+                grad_evals += chunk * meta.step_grad_factor * m * bsz
+                key = k if meta.record_key == "round" else t
+                if record_every and key % record_every == 0:
+                    plan_record()
+                    just_recorded = True
+                else:
+                    just_recorded = False
+            ops.append(("end_outer", K))
+            if not record_every:
+                plan_record()
+        if record_every and meta.final_record and not just_recorded:
+            plan_record()
+    else:
+        # ---- flat loop (DSPG, DPG, loopless DPSVRG) -----------------------
+        if record_every < 1:
+            raise ValueError(
+                f"{meta.name}: flat loops need record_every >= 1")
+        num_steps = meta.num_steps
+        while t < num_steps:
+            until = record_every - t % record_every
+            chunk_max = min(num_steps - t, until)
+            idxs, phis, alphas = [], [], []
+            refresh = False
+            chunk = 0
+            for j in range(chunk_max):
+                if host_sampling:
+                    idxs.append(rng.integers(0, n, size=(m, bsz)))
+                phis.append(phi_for(meta.gossip_rounds(t + j + 1)))
+                alphas.append(meta.stepsize(t + j + 1))
+                chunk += 1
+                if (meta.snapshot_prob is not None
+                        and rng.random() < meta.snapshot_prob):
+                    refresh = True   # snapshot lands here: cut the chunk
+                    break
+            finish_chunk(idxs, phis, alphas, chunk)
+            t += chunk
+            grad_evals += chunk * meta.step_grad_factor * m * bsz
+            if refresh:
+                ops.append(("outer",))
+                if meta.outer_full_grad:
+                    grad_evals += full_grad_cost
+            if t % record_every == 0 or t == num_steps:
+                plan_record()
+
+    return _Plan(ops=ops, chunks=chunks,
+                 cols={k: np.array(v) for k, v in cols.items()},
+                 wire=np.array(wire_col, dtype=np.int64),
+                 num_records=sum(1 for op in ops if op[0] == "record"))
+
+
+def _run_resident(algo, problem, backend, aux, rng, *, m: int,
+                  n: int, param_count: int, record_every: int, sampling: str,
+                  extra_metrics, transfers) -> RunResult:
+    meta = algo.meta
+    if extra_metrics:
+        raise ValueError(
+            "resident=True records metrics on device; host-side "
+            "extra_metrics callables need the host or scan path")
+    has_batch = meta.batch_size > 0
+    device_sampling = has_batch and sampling == "device"
+
+    # one host copy of the dataset for index gathering (the scan path pays
+    # the same once-per-run pull); device sampling skips it entirely
+    if has_batch and sampling == "host":
+        if any(isinstance(leaf, jax.Array)
+               for leaf in jax.tree.leaves(problem.full_data)):
+            transfers["d2h"] += 1
+        host_data = jax.tree.map(np.asarray, problem.full_data)
+    else:
+        host_data = None
+    # the device PRNG seed is drawn from the run's rng stream, so
+    # resident+device runs are reproducible from the same `seed`
+    key_seed = int(rng.integers(0, 2**31 - 1)) if device_sampling else 0
+
+    plan = _plan_resident(algo, backend, aux, rng, m=m, n=n,
+                          param_count=param_count, record_every=record_every,
+                          sampling=sampling, host_data=host_data)
+
+    exec_chunk = _make_resident_exec(algo, sampling)
+    record_kernel = _make_record_kernel(problem, meta)
+
+    # dataset staging only transfers when the problem holds host arrays
+    # (jnp.asarray on a committed device array is a no-op)
+    if any(not isinstance(leaf, jax.Array)
+           for leaf in jax.tree.leaves(problem.full_data)):
+        transfers["h2d"] += 1
+    data_dev = jax.tree.map(jnp.asarray, problem.full_data)
+    # ONE staging transfer ships every chunk's xs (and nothing per-step
+    # thereafter); the shielded state copy protects caller-owned buffers
+    # (problem.x0) from the donated carries.  NOTE the memory trade:
+    # host-sampled batches for the WHOLE run live on device at once —
+    # O(num_steps * m * batch * feature) bytes; warn when that gets big
+    # (sampling="device" stages no batches at all)
+    staged_bytes = sum(
+        leaf.nbytes for c in plan.chunks for leaf in jax.tree.leaves(c.xs))
+    if staged_bytes > 1 << 30:
+        warnings.warn(
+            f"resident staging ships {staged_bytes / 2**30:.1f} GiB of "
+            f"pre-sampled inputs to the device at once; for long runs use "
+            f"sampling='device' (in-scan minibatch gathers, zero batch "
+            f"staging) or the scan path", RuntimeWarning, stacklevel=3)
+    staged = jax.device_put([c.xs for c in plan.chunks])
+    transfers["h2d"] += 1
+
+    state = algo.init()
+    if backend.needs_mix_state:
+        if algo.init_mix_state is None:
+            raise ValueError(
+                f"{meta.name} does not thread a gossip mix state "
+                f"(Algorithm.init_mix_state is None), so it cannot be "
+                f"driven by the stateful {backend.name!r} transport")
+        state = algo.init_mix_state(state)
+    state = _shield_for_donation(state)
+
+    def pack(state):
+        if device_sampling:
+            return (state, jax.random.PRNGKey(key_seed))
+        return state
+
+    def unpack(carry):
+        return carry[0] if device_sampling else carry
+
+    def repack(carry, state):
+        return (state, carry[1]) if device_sampling else state
+
+    carry = pack(state)
+    bufs = (jnp.zeros(plan.num_records, jnp.float32),
+            jnp.zeros(plan.num_records, jnp.float32),
+            jnp.zeros((), jnp.int32))
+
+    guard = _RESIDENT_DISPATCH_GUARD
+    for op in plan.ops:
+        kind = op[0]
+        if kind == "chunk":
+            with guard():
+                carry = exec_chunk(carry, staged[op[1]], data_dev)
+        elif kind == "record":
+            with guard():
+                bufs = record_kernel(bufs, algo.get_params(unpack(carry)),
+                                     data_dev)
+        elif kind == "outer":
+            carry = repack(carry, _unalias_for_donation(
+                algo.outer(unpack(carry))))
+        else:  # ("end_outer", K)
+            state = unpack(carry)
+            if algo.end_outer is not None:
+                state = algo.end_outer(state, op[1])
+            carry = repack(carry, _unalias_for_donation(state))
+
+    objective, consensus, _ = jax.device_get(bufs)   # the ONE history pull
+    transfers["d2h"] += 1
+
+    history = RunHistory(
+        objective=np.asarray(objective, np.float64),
+        consensus=np.asarray(consensus, np.float64),
+        epochs=plan.cols["epochs"],
+        comm_rounds=plan.cols["comm_rounds"],
+        steps=plan.cols["steps"])
+    extras = {"wire_bytes": plan.wire,
+              "transfers_h2d": transfers["h2d"],
+              "transfers_d2h": transfers["d2h"]}
+    return RunResult(params=algo.get_params(unpack(carry)), history=history,
+                     extras=extras)
+
+
+# ---------------------------------------------------------------------------
+# The driver
+# ---------------------------------------------------------------------------
+
 def run(algo: algorithm_lib.Algorithm,
         problem: algorithm_lib.Problem,
         schedule: graphs.MixingSchedule,
@@ -241,6 +756,8 @@ def run(algo: algorithm_lib.Algorithm,
         seed: int = 0,
         record_every: int = 1,
         scan: bool = False,
+        resident: bool = False,
+        sampling: str = "host",
         gossip: "str | transport.GossipBackend" = "auto",
         mesh=None,
         extra_metrics: dict | None = None,
@@ -250,6 +767,17 @@ def run(algo: algorithm_lib.Algorithm,
     record_every: history cadence in inner steps; 0 = once per outer round
                   (outer/inner methods only).
     scan:         use the ``lax.scan`` chunked fast path.
+    resident:     keep the entire run device-resident: plan on host, stage
+                  in one transfer, execute donated compiled chunks, record
+                  metrics on device, pull the history once at run end
+                  (implies the chunked execution shape; ``scan`` is
+                  redundant alongside it).
+    sampling:     "host" (default): minibatch indices from the same
+                  ``np.random`` stream as the host/scan paths — resident
+                  histories agree with them to float tolerance.  "device"
+                  (resident only): a ``jax.random`` key rides the scan carry
+                  and minibatches are gathered inside the compiled chunk —
+                  a different sample stream, zero per-chunk batch staging.
     gossip:       transport backend — a ``transport.GOSSIP_BACKENDS`` name
                   ("dense", "banded", "ppermute", "compressed"), a
                   ``GossipBackend`` instance, or "auto" (select by schedule
@@ -258,7 +786,8 @@ def run(algo: algorithm_lib.Algorithm,
                   the ``ppermute`` backend (and lets "auto" pick it).
     extra_metrics: ``{name: fn(stacked_params) -> float}`` recorded alongside
                   the standard history columns (returned in ``extras``, next
-                  to the always-present ``wire_bytes`` column).
+                  to the always-present ``wire_bytes`` column).  Host-side
+                  callables — unavailable under ``resident=True``.
     gossip_mode:  DEPRECATED alias for ``gossip`` (one-release shim).
     """
     meta = algo.meta
@@ -268,6 +797,12 @@ def run(algo: algorithm_lib.Algorithm,
             "(same names, plus 'ppermute', 'compressed', and 'auto')",
             DeprecationWarning, stacklevel=2)
         gossip = gossip_mode
+    if sampling not in ("host", "device"):
+        raise ValueError(f"sampling must be 'host' or 'device', got "
+                         f"{sampling!r}")
+    if sampling == "device" and not resident:
+        raise ValueError("sampling='device' gathers minibatches inside the "
+                         "compiled chunk body — it requires resident=True")
     backend = transport.resolve_backend(gossip, schedule, meta, mesh)
     if meta.compress_bits is not None:
         # the method itself quantizes its gossip payload (hp-level
@@ -291,6 +826,18 @@ def run(algo: algorithm_lib.Algorithm,
     m = jax.tree.leaves(problem.x0)[0].shape[0]
     n = jax.tree.leaves(problem.full_data)[0].shape[1]
     param_count = transport.node_param_count(problem.x0)
+    # driver-initiated host<->device transfer EVENTS (coarse: one per staged
+    # tree / per metric pull, not per buffer) — the resident path's O(1)
+    # claim is asserted against these in benchmarks and tests
+    transfers = {"h2d": 0, "d2h": 0}
+
+    if resident:
+        return _run_resident(algo, problem, backend, aux, rng,
+                             m=m, n=n, param_count=param_count,
+                             record_every=record_every, sampling=sampling,
+                             extra_metrics=extra_metrics,
+                             transfers=transfers)
+
     obj = problem.objective_fn or (
         lambda p: objective_value(problem.loss_fn, problem.prox, p,
                                   problem.full_data))
@@ -298,8 +845,13 @@ def run(algo: algorithm_lib.Algorithm,
     exec_chunk = _make_scan_exec(algo) if scan else None
     # sample minibatches from a host-side copy: per-step np gathers on device
     # arrays would silently round-trip the whole dataset every step
-    host_data = (jax.tree.map(np.asarray, problem.full_data)
-                 if meta.batch_size > 0 else problem.full_data)
+    if meta.batch_size > 0:
+        if any(isinstance(leaf, jax.Array)
+               for leaf in jax.tree.leaves(problem.full_data)):
+            transfers["d2h"] += 1
+        host_data = jax.tree.map(np.asarray, problem.full_data)
+    else:
+        host_data = problem.full_data
 
     state = algo.init()
     if backend.needs_mix_state:
@@ -321,10 +873,14 @@ def run(algo: algorithm_lib.Algorithm,
         phi = backend.phi_for(aux, slot, rounds)
         slot += rounds
         comm += rounds
-        wire += backend.bytes_per_step(aux, phi, param_count)
+        # gossip_payloads: gradient tracking gossips the iterate AND the
+        # tracker with the same phi, so its wire cost is 2x per round
+        wire += (backend.bytes_per_step(aux, phi, param_count)
+                 * meta.gossip_payloads)
         return phi
 
     def device_phi(phi):
+        transfers["h2d"] += 1
         return jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), phi)
 
     def pad_chunk(batches, phis, alphas, chunk):
@@ -340,9 +896,15 @@ def run(algo: algorithm_lib.Algorithm,
         return [True] * chunk + [False] * pad
 
     def do_record(params=None):
+        transfers["d2h"] += 1 + (1 if meta.track_consensus else 0)
         rec.record(params if params is not None else algo.get_params(state),
                    t=t, grad_evals=grad_evals, comm_rounds=comm,
                    wire_bytes=wire)
+
+    def run_chunk(state, batches, phis, alphas, keep):
+        transfers["h2d"] += 1
+        return exec_chunk(state, _stack_inputs(meta, batches, phis, alphas,
+                                               keep))
 
     do_record()
 
@@ -368,9 +930,7 @@ def run(algo: algorithm_lib.Algorithm,
                         phis.append(phi_for(meta.gossip_rounds(k + j + 1)))
                         alphas.append(meta.stepsize(t + j + 1))
                     keep = pad_chunk(batches, phis, alphas, chunk)
-                    state = exec_chunk(
-                        state, _stack_inputs(meta, batches, phis, alphas,
-                                             keep))
+                    state = run_chunk(state, batches, phis, alphas, keep)
                     k += chunk
                     t += chunk
                     grad_evals += (chunk * meta.step_grad_factor * m
@@ -380,6 +940,8 @@ def run(algo: algorithm_lib.Algorithm,
                     t += 1
                     batch = (sample_batch(rng, host_data, meta.batch_size)
                              if meta.batch_size > 0 else None)
+                    if meta.batch_size > 0:
+                        transfers["h2d"] += 1
                     phi = device_phi(phi_for(meta.gossip_rounds(k)))
                     state = algo.step(state, batch, phi,
                                       jnp.float32(meta.stepsize(t)))
@@ -421,8 +983,7 @@ def run(algo: algorithm_lib.Algorithm,
                         refresh = True   # snapshot lands here: cut the chunk
                         break
                 keep = pad_chunk(batches, phis, alphas, chunk)
-                state = exec_chunk(
-                    state, _stack_inputs(meta, batches, phis, alphas, keep))
+                state = run_chunk(state, batches, phis, alphas, keep)
                 t += chunk
                 grad_evals += chunk * meta.step_grad_factor * m * meta.batch_size
                 if refresh:
@@ -433,6 +994,8 @@ def run(algo: algorithm_lib.Algorithm,
                 t += 1
                 batch = (sample_batch(rng, host_data, meta.batch_size)
                          if meta.batch_size > 0 else None)
+                if meta.batch_size > 0:
+                    transfers["h2d"] += 1
                 phi = device_phi(phi_for(meta.gossip_rounds(t)))
                 state = algo.step(state, batch, phi,
                                   jnp.float32(meta.stepsize(t)))
@@ -445,5 +1008,8 @@ def run(algo: algorithm_lib.Algorithm,
             if t % record_every == 0 or t == num_steps:
                 do_record()
 
+    extras = rec.extras()
+    extras["transfers_h2d"] = transfers["h2d"]
+    extras["transfers_d2h"] = transfers["d2h"]
     return RunResult(params=algo.get_params(state), history=rec.history(),
-                     extras=rec.extras())
+                     extras=extras)

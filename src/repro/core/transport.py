@@ -13,11 +13,19 @@ executes it.  This module makes that axis a plugin, the same way
   BandedPhi`, a :class:`~repro.core.gossip.PermutePhi`, ...).  Every
   representation is a pytree, so the runner stacks it through ``lax.scan``
   xs generically and algorithm steps dispatch on its type via
-  ``gossip.mix_stacked`` without knowing which transport is active,
+  ``gossip.mix_stacked`` without knowing which transport is active.
+  Schedules are periodic, so the ``rounds``-product starting at ``slot``
+  only depends on ``slot % period`` — ``phi_for`` memoizes its wire
+  representations in the per-run ``aux`` on that key, turning the per-step
+  host work (matrix products, band decompositions) into a dict lookup after
+  the first period,
 * ``mix(aux, phi, tree)`` — the actual collective (what ``mix_stacked``
   dispatches to), exposed for direct use by trainers and tests,
 * ``bytes_per_step(aux, phi, param_count)`` — wire-cost accounting, so
-  communication plots can report BYTES moved, not just gossip rounds.
+  communication plots can report BYTES moved, not just gossip rounds;
+  ``bytes_per_link(aux, phi, param_count)`` refines the same accounting to
+  a ``{(src, dst): bytes}`` map over directed node links (summing exactly
+  to ``bytes_per_step``), feeding per-edge communication plots.
 
 Registered backends (:data:`GOSSIP_BACKENDS`):
 
@@ -132,14 +140,31 @@ def node_param_count(tree) -> int:
                for leaf in jax.tree.leaves(tree))
 
 
+def _active_bands(offsets: tuple, coeffs, m: int) -> list:
+    """Off-diagonal band offsets that actually carry mass this step."""
+    c = np.asarray(coeffs)
+    return [d for b, d in enumerate(offsets)
+            if d % m != 0 and np.any(np.abs(c[b]) > 1e-12)]
+
+
 def _banded_wire_bytes(offsets: tuple, coeffs, m: int,
                        param_count: int) -> int:
     """Point-to-point accounting for band-structured gossip: each nonzero
     off-diagonal band moves one param vector per node."""
-    c = np.asarray(coeffs)
-    active = sum(1 for b, d in enumerate(offsets)
-                 if d % m != 0 and np.any(np.abs(c[b]) > 1e-12))
-    return active * m * param_count * F32_BYTES
+    return len(_active_bands(offsets, coeffs, m)) * m * param_count * F32_BYTES
+
+
+def _banded_link_bytes(offsets: tuple, coeffs, m: int,
+                       param_count: int) -> dict:
+    """Per-directed-link refinement of :func:`_banded_wire_bytes`: band
+    ``d`` means node ``i`` receives ``x_{(i+d) mod m}``, i.e. one param
+    vector moves over the link ``(i+d) mod m -> i`` for every node."""
+    links: dict = {}
+    for d in _active_bands(offsets, coeffs, m):
+        for i in range(m):
+            key = ((i + d) % m, i)
+            links[key] = links.get(key, 0) + param_count * F32_BYTES
+    return links
 
 
 # ---------------------------------------------------------------------------
@@ -161,7 +186,9 @@ class GossipBackend:
 
     def phi_for(self, aux, slot: int, rounds: int):
         """Host-side wire representation of the ``rounds``-product starting
-        at schedule slot ``slot`` (a pytree; scan-stackable)."""
+        at schedule slot ``slot`` (a pytree; scan-stackable).  Memoized in
+        ``aux`` on ``(slot % period, rounds)`` — products of a periodic
+        schedule repeat, so steady-state steps cost a dict lookup."""
         raise NotImplementedError
 
     def mix(self, aux, phi, tree):
@@ -173,10 +200,17 @@ class GossipBackend:
         """Wire bytes this step's mix moves across node links."""
         raise NotImplementedError
 
+    def bytes_per_link(self, aux, phi, param_count: int) -> dict:
+        """``{(src, dst): bytes}`` over directed node links for this step's
+        mix — the per-edge refinement of :meth:`bytes_per_step` (values sum
+        exactly to it), for topology-aware communication plots."""
+        raise NotImplementedError
+
 
 class _DenseAux(NamedTuple):
     schedule: graphs.MixingSchedule
     m: int
+    cache: dict
 
 
 class DenseBackend(GossipBackend):
@@ -185,10 +219,14 @@ class DenseBackend(GossipBackend):
     name = "dense"
 
     def prepare(self, schedule, meta, *, mesh=None):
-        return _DenseAux(schedule, schedule.m)
+        return _DenseAux(schedule, schedule.m, {})
 
     def phi_for(self, aux, slot, rounds):
-        return aux.schedule.consensus_rounds(slot, rounds)
+        key = (slot % aux.schedule.period, rounds)
+        phi = aux.cache.get(key)
+        if phi is None:
+            phi = aux.cache[key] = aux.schedule.consensus_rounds(slot, rounds)
+        return phi
 
     def bytes_per_step(self, aux, phi, param_count):
         # the dense einsum lowers to an all-gather of the full stacked
@@ -196,11 +234,16 @@ class DenseBackend(GossipBackend):
         # the product's sparsity
         return aux.m * (aux.m - 1) * param_count * F32_BYTES
 
+    def bytes_per_link(self, aux, phi, param_count):
+        return {(j, i): param_count * F32_BYTES
+                for i in range(aux.m) for j in range(aux.m) if i != j}
+
 
 class _BandedAux(NamedTuple):
     schedule: graphs.MixingSchedule
     m: int
     offsets: tuple
+    cache: dict
 
 
 class BandedBackend(GossipBackend):
@@ -221,14 +264,21 @@ class BandedBackend(GossipBackend):
                 f"exploit; gossip='auto' or 'dense' will be faster (cap "
                 f"multi-consensus rounds, e.g. k_max, to keep products "
                 f"banded)", RuntimeWarning, stacklevel=3)
-        return _BandedAux(schedule, schedule.m, offsets)
+        return _BandedAux(schedule, schedule.m, offsets, {})
 
     def phi_for(self, aux, slot, rounds):
-        return gossip.BandedPhi.from_dense(
-            aux.schedule.consensus_rounds(slot, rounds), aux.offsets)
+        key = (slot % aux.schedule.period, rounds)
+        phi = aux.cache.get(key)
+        if phi is None:
+            phi = aux.cache[key] = gossip.BandedPhi.from_dense(
+                aux.schedule.consensus_rounds(slot, rounds), aux.offsets)
+        return phi
 
     def bytes_per_step(self, aux, phi, param_count):
         return _banded_wire_bytes(phi.offsets, phi.coeffs, aux.m, param_count)
+
+    def bytes_per_link(self, aux, phi, param_count):
+        return _banded_link_bytes(phi.offsets, phi.coeffs, aux.m, param_count)
 
 
 class _PermuteAux(NamedTuple):
@@ -237,6 +287,7 @@ class _PermuteAux(NamedTuple):
     offsets: tuple
     mesh: Any
     axis: str
+    cache: dict
 
 
 def _node_axis(mesh, m: int) -> str | None:
@@ -279,15 +330,22 @@ class PPermuteBackend(GossipBackend):
                     f"mesh {dict(mesh.shape)} has no axis of size m={m} to "
                     f"carry the node dimension")
         return _PermuteAux(schedule, m, band_offset_union(schedule, meta),
-                           mesh, axis)
+                           mesh, axis, {})
 
     def phi_for(self, aux, slot, rounds):
-        return gossip.PermutePhi.from_dense(
-            aux.schedule.consensus_rounds(slot, rounds), aux.offsets,
-            aux.mesh, aux.axis)
+        key = (slot % aux.schedule.period, rounds)
+        phi = aux.cache.get(key)
+        if phi is None:
+            phi = aux.cache[key] = gossip.PermutePhi.from_dense(
+                aux.schedule.consensus_rounds(slot, rounds), aux.offsets,
+                aux.mesh, aux.axis)
+        return phi
 
     def bytes_per_step(self, aux, phi, param_count):
         return _banded_wire_bytes(phi.offsets, phi.coeffs, aux.m, param_count)
+
+    def bytes_per_link(self, aux, phi, param_count):
+        return _banded_link_bytes(phi.offsets, phi.coeffs, aux.m, param_count)
 
 
 class _CompressedAux(NamedTuple):
@@ -303,7 +361,8 @@ class CompressedBackend(GossipBackend):
     ``inner`` names (or is) the transport the quantized payload rides on;
     ``bits`` the integer width.  Stateful: the residual accumulator threads
     through the algorithm state (``Algorithm.init_mix_state``), so only
-    algorithms that support a mix state (DPSVRG) can be driven compressed.
+    algorithms that support a mix state (DPSVRG, GT-SVRG, loopless DPSVRG)
+    can be driven compressed.
     """
 
     inner: Any = "dense"   # str name or GossipBackend instance
@@ -342,6 +401,23 @@ class CompressedBackend(GossipBackend):
         inner = aux.inner_backend.bytes_per_step(aux.inner_aux, phi.inner,
                                                  param_count)
         return inner * aux.bits // 32
+
+    def bytes_per_link(self, aux, phi, param_count):
+        # per-link floors can undershoot the single-floor total
+        # (bytes_per_step) when bits doesn't divide 32 evenly; distribute
+        # the rounding remainder deterministically so the map still sums
+        # EXACTLY to bytes_per_step (the documented invariant)
+        inner = aux.inner_backend.bytes_per_link(aux.inner_aux, phi.inner,
+                                                 param_count)
+        links = {link: b * aux.bits // 32 for link, b in inner.items()}
+        remainder = (self.bytes_per_step(aux, phi, param_count)
+                     - sum(links.values()))
+        for link in sorted(links):
+            if remainder <= 0:
+                break
+            links[link] += 1
+            remainder -= 1
+        return links
 
 
 # ---------------------------------------------------------------------------

@@ -226,12 +226,15 @@ def test_extra_metric_recorders():
                          "nnz": lambda p: float(jnp.sum(jnp.abs(p) > 0)),
                      })
     # wire_bytes is the always-present driver-supplied column (transport
-    # backend byte accounting); user recorders ride alongside it
-    assert set(res.extras) == {"max_abs", "nnz", "wire_bytes"}
-    for arr in res.extras.values():
-        assert arr.shape == res.history.objective.shape
+    # backend byte accounting); user recorders ride alongside it, plus the
+    # scalar transfer-ledger entries the resident path is gated on
+    assert set(res.extras) == {"max_abs", "nnz", "wire_bytes",
+                               "transfers_h2d", "transfers_d2h"}
+    for name in ("max_abs", "nnz", "wire_bytes"):
+        assert res.extras[name].shape == res.history.objective.shape
     assert res.extras["max_abs"][-1] > 0.0
     assert res.extras["wire_bytes"][-1] > 0
+    assert res.extras["transfers_h2d"] > 0
 
 
 def test_run_result_shapes():

@@ -1,0 +1,340 @@
+"""Device-resident runner coverage: host/scan/resident history equivalence
+across every registered algorithm, donated-carry in-place updates (no copy of
+the stacked state in the compiled HLO), O(1) host<->device transfers per run
+(ledger counts AND an XLA transfer-guard over the dispatch hot path), in-scan
+device sampling (same convergence envelope, different stream), the AlgoMeta
+``resident_objective`` contract, and the dtype-preserving wire stacking."""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (algorithm, compression, dpsvrg, gossip, graphs,
+                        inexact, prox, runner)
+from repro.data import synthetic
+
+
+def logreg_loss(w, batch):
+    logits = batch["features"] @ w
+    y = batch["labels"]
+    return jnp.mean(-y * logits + jnp.log1p(jnp.exp(logits)))
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(m=4, n=128, d=12, seed=0):
+    ds = synthetic.make_classification(n=n, d=d, seed=seed)
+    data = {k: jnp.asarray(v)
+            for k, v in synthetic.partition_per_node(ds, m).items()}
+    h = prox.l1(0.01)
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    return data, h, x0
+
+
+def _problem(data, h, x0):
+    return algorithm.Problem(logreg_loss, h, x0, data)
+
+
+def _sched(m=4):
+    return graphs.b_connected_ring_schedule(m, b=2, seed=0)
+
+
+def _build(name, problem):
+    if name == "dpsvrg":
+        return algorithm.ALGORITHMS[name](
+            problem, dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=3,
+                                              num_outer=4))
+    if name == "dspg":
+        return algorithm.ALGORITHMS[name](
+            problem, dpsvrg.DSPGHyperParams(alpha0=0.3), 37)
+    if name == "dpg":
+        return algorithm.ALGORITHMS[name](problem, 0.3, 12)
+    if name == "gt_svrg":
+        return algorithm.ALGORITHMS[name](problem, 0.1, 3, 8)
+    if name == "loopless_dpsvrg":
+        return algorithm.ALGORITHMS[name](problem, 0.3, 33,
+                                          snapshot_prob=0.25)
+    raise KeyError(name)
+
+
+def _assert_agrees(a, b):
+    for field in ("epochs", "comm_rounds", "steps"):
+        np.testing.assert_array_equal(getattr(a, field), getattr(b, field),
+                                      err_msg=field)
+    np.testing.assert_allclose(a.objective, b.objective, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(a.consensus, b.consensus, rtol=1e-3, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# host / scan / resident equivalence, every registered algorithm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "name", ["dpsvrg", "dspg", "dpg", "gt_svrg", "loopless_dpsvrg"])
+def test_resident_matches_host_and_scan(name):
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    runs = {}
+    for mode in ("host", "scan", "resident"):
+        algo = _build(name, problem)
+        runs[mode] = runner.run(
+            algo, problem, sched, seed=3, record_every=5,
+            scan=(mode == "scan"), resident=(mode == "resident"),
+            gossip="dense").history
+    _assert_agrees(runs["host"], runs["scan"])
+    _assert_agrees(runs["host"], runs["resident"])
+
+
+def test_resident_matches_host_inexact_prox_svrg():
+    """Algorithm 2 (m = 1 virtual node, identity gossip) through the
+    resident path — the sixth registered algorithm."""
+    data, h, _ = _setup()
+    flat = {k: v.reshape(1, -1, *v.shape[2:]) for k, v in data.items()}
+    x0 = gossip.stack_tree(jnp.zeros(12), 1)
+    problem = algorithm.Problem(logreg_loss, h, x0, flat)
+    sched = graphs.static_schedule(np.eye(1), name="centralized")
+    hp = inexact.InexactHyperParams(alpha=0.3, beta=1.2, n0=3, num_outer=3)
+    host = runner.run(algorithm.ALGORITHMS["inexact_prox_svrg"](problem, hp),
+                      problem, sched, seed=0, record_every=2,
+                      gossip="dense").history
+    res = runner.run(algorithm.ALGORITHMS["inexact_prox_svrg"](problem, hp),
+                     problem, sched, seed=0, record_every=2, resident=True,
+                     gossip="dense").history
+    _assert_agrees(host, res)
+
+
+def test_resident_matches_host_on_banded_transport():
+    """Resident chunks stage BandedPhi xs like the scan path does."""
+    data, h, x0 = _setup()
+    mats = graphs.edge_matching_matrices(4)
+    sched = graphs.MixingSchedule(tuple(mats), b=len(mats), eta=0.5,
+                                  name="matching4")
+    problem = _problem(data, h, x0)
+    host = runner.run(_build("dspg", problem), problem, sched, seed=2,
+                      record_every=8, gossip="dense").history
+    res = runner.run(_build("dspg", problem), problem, sched, seed=2,
+                     record_every=8, resident=True, gossip="banded").history
+    _assert_agrees(host, res)
+
+
+def test_resident_matches_host_compressed_transport():
+    """The stateful compressed transport's error-feedback state rides the
+    donated resident carry."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=3, num_outer=3,
+                                  k_max=2)
+    host = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
+                      sched, seed=1, record_every=4,
+                      gossip="compressed").history
+    res = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
+                     sched, seed=1, record_every=4, resident=True,
+                     gossip="compressed").history
+    _assert_agrees(host, res)
+
+
+def test_resident_record_every_zero_outer_rounds():
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=3, num_outer=4)
+    host = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
+                      sched, seed=0, record_every=0, gossip="dense").history
+    res = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
+                     sched, seed=0, record_every=0, resident=True,
+                     gossip="dense").history
+    _assert_agrees(host, res)
+
+
+# ---------------------------------------------------------------------------
+# donated carries: in-place update, no stacked-state copy
+# ---------------------------------------------------------------------------
+
+def test_resident_exec_donates_state():
+    """The compiled chunk aliases the donated carry into its output
+    (input_output_alias in the HLO — the stacked iterate is updated in
+    place, not copied) and the input buffers are invalidated after the
+    call."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    algo = _build("dspg", problem)
+    exec_chunk = runner._make_resident_exec(algo, "host")
+
+    L, m, d = 4, 4, 12
+    state = jax.tree.map(lambda a: jnp.array(a, copy=True), algo.init())
+    batch = {"features": jnp.zeros((L, m, 1, d)),
+             "labels": jnp.zeros((L, m, 1))}
+    xs = (batch, jnp.stack([jnp.eye(m)] * L), jnp.ones(L, jnp.float32),
+          jnp.ones(L, bool))
+    compiled = exec_chunk.lower(state, xs, data).compile()
+    assert "input_output_alias" in compiled.as_text()
+
+    out = exec_chunk(state, xs, data)
+    assert state.params.is_deleted()          # donated, not copied
+    assert not out.params.is_deleted()
+
+
+def test_resident_run_shields_caller_buffers():
+    """Donation must never invalidate problem.x0 (the init state references
+    it): two consecutive resident runs from the same Problem agree."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    r1 = runner.run(_build("dspg", problem), problem, sched, seed=2,
+                    record_every=8, resident=True).history
+    r2 = runner.run(_build("dspg", problem), problem, sched, seed=2,
+                    record_every=8, resident=True).history
+    np.testing.assert_array_equal(r1.objective, r2.objective)
+    assert not x0.is_deleted()
+
+
+# ---------------------------------------------------------------------------
+# O(1) transfers per run
+# ---------------------------------------------------------------------------
+
+def test_resident_transfer_ledger_is_o1():
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    res = runner.run(_build("dspg", problem), problem, sched, seed=0,
+                     record_every=5, resident=True)
+    scan = runner.run(_build("dspg", problem), problem, sched, seed=0,
+                      record_every=5, scan=True)
+    # resident: one staging put + one host dataset copy + one history pull
+    assert res.extras["transfers_h2d"] == 1
+    assert res.extras["transfers_d2h"] <= 2
+    # the scan path pays per chunk and per record
+    assert scan.extras["transfers_h2d"] >= 8   # ~#chunks
+    assert scan.extras["transfers_d2h"] >= 8   # ~2 x #records
+
+
+def test_resident_dispatch_is_transfer_free_under_xla_guard():
+    """Run a resident DSPG with every chunk/record dispatch wrapped in
+    ``jax.transfer_guard("disallow")``: XLA itself faults on ANY implicit
+    host<->device transfer during the compiled hot path, so this is the
+    strongest form of the O(1)-transfers claim (staging and the final pull
+    happen outside the guarded dispatches, via explicit device_put/get)."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    old = runner._RESIDENT_DISPATCH_GUARD
+    runner._RESIDENT_DISPATCH_GUARD = lambda: jax.transfer_guard("disallow")
+    try:
+        res = runner.run(_build("dspg", problem), problem, sched, seed=0,
+                         record_every=5, resident=True)
+    finally:
+        runner._RESIDENT_DISPATCH_GUARD = old
+    assert res.history.objective[-1] < res.history.objective[0]
+
+
+# ---------------------------------------------------------------------------
+# in-scan device sampling
+# ---------------------------------------------------------------------------
+
+def test_device_sampling_same_envelope_different_stream():
+    """sampling="device" draws a different (jax.random) sample stream, so
+    the trajectory differs from the host stream — but it solves the same
+    problem: the final objective lands in the same convergence envelope."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    host = runner.run(_build("dspg", problem), problem, sched, seed=0,
+                      record_every=10, resident=True,
+                      sampling="host").history
+    dev = runner.run(_build("dspg", problem), problem, sched, seed=0,
+                     record_every=10, resident=True,
+                     sampling="device").history
+    # different stream: trajectories are not identical
+    assert not np.allclose(host.objective[1:], dev.objective[1:])
+    # same envelope: both descend, final gaps within a third of the total
+    # descent of each other
+    descent = host.objective[0] - host.objective[-1]
+    assert descent > 0
+    assert dev.objective[-1] < dev.objective[0]
+    assert abs(dev.objective[-1] - host.objective[-1]) < descent / 3
+    # reproducible from the seed
+    dev2 = runner.run(_build("dspg", problem), problem, sched, seed=0,
+                      record_every=10, resident=True,
+                      sampling="device").history
+    np.testing.assert_array_equal(dev.objective, dev2.objective)
+
+
+def test_device_sampling_requires_resident():
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    with pytest.raises(ValueError):
+        runner.run(_build("dspg", problem), problem, _sched(),
+                   sampling="device")
+    with pytest.raises(ValueError):
+        runner.run(_build("dspg", problem), problem, _sched(),
+                   sampling="banana")
+
+
+# ---------------------------------------------------------------------------
+# AlgoMeta resident contract + guard rails
+# ---------------------------------------------------------------------------
+
+def test_resident_objective_contract_overrides_default():
+    """AlgoMeta.resident_objective is the traceable objective the on-device
+    record kernel evaluates."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    algo = _build("dspg", problem)
+    meta = dataclasses.replace(
+        algo.meta,
+        resident_objective=lambda params, full_data: jnp.float32(42.0))
+    algo = dataclasses.replace(algo, meta=meta)
+    res = runner.run(algo, problem, _sched(), seed=0, record_every=10,
+                     resident=True)
+    np.testing.assert_allclose(res.history.objective, 42.0)
+
+
+def test_resident_rejects_host_extra_metrics():
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    with pytest.raises(ValueError):
+        runner.run(_build("dspg", problem), problem, _sched(),
+                   resident=True,
+                   extra_metrics={"max": lambda p: float(jnp.max(p))})
+
+
+# ---------------------------------------------------------------------------
+# dtype-preserving wire stacking (scan xs)
+# ---------------------------------------------------------------------------
+
+def test_stack_phis_preserves_integer_payload_dtype():
+    """8-bit quantized payload leaves must NOT silently widen to f32 when
+    stacked into scan xs (the historical force-cast quadrupled the staged
+    bytes and destroyed integer wire payloads); float leaves still
+    canonicalize to f32."""
+    payload = [compression.CompressedPhi(
+        np.arange(16, dtype=np.int8).reshape(4, 4), bits=8)
+        for _ in range(3)]
+    stacked = runner._stack_phis(payload)
+    assert stacked.inner.dtype == jnp.int8
+    assert stacked.inner.shape == (3, 4, 4)
+    assert stacked.bits == 8
+
+    dense = [np.eye(4, dtype=np.float64) for _ in range(3)]
+    assert runner._stack_phis(dense).dtype == jnp.float32
+
+    banded = [gossip.BandedPhi((0, 1), np.ones((2, 4), np.float32))
+              for _ in range(3)]
+    st = runner._stack_phis(banded)
+    assert st.coeffs.dtype == jnp.float32
+    assert st.coeffs.shape == (3, 2, 4)
+
+
+def test_resident_executor_cache_persists_across_instances():
+    """Rebuilding the algorithm (as sweeps do per point) reuses the SAME
+    resident executor object — compiled chunks survive run() calls."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    e1 = runner._make_resident_exec(_build("dspg", problem), "host")
+    e2 = runner._make_resident_exec(_build("dspg", problem), "host")
+    assert e1 is e2

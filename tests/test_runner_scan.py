@@ -184,14 +184,16 @@ def test_dpsvrg_scan_compiles_few_buckets():
     buckets = len({1 << max(k - 1, 0).bit_length() for k in ks})
     assert distinct > buckets  # the premise: many lengths, few buckets
     algo = algorithm.dpsvrg_algorithm(problem, hp)
+    # executors persist across runs AND instances now, so measure the DELTA
+    # this run contributes to the shared executor's compile count
+    before = runner.scan_executable_count(algo)
+    if before < 0:
+        pytest.skip("jit cache-size introspection unavailable on this jax")
     host = runner.run(algo, problem, sched, seed=0, record_every=0).history
     scan = runner.run(algo, problem, sched, seed=0, record_every=0,
                       scan=True).history
     _assert_agrees(host, scan)
-    count = runner.scan_executable_count(algo)
-    if count < 0:
-        pytest.skip("jit cache-size introspection unavailable on this jax")
-    assert count <= buckets
+    assert runner.scan_executable_count(algo) - before <= buckets
 
 
 def test_steady_state_chunk_is_not_padded():
@@ -203,8 +205,16 @@ def test_steady_state_chunk_is_not_padded():
     problem = _problem(data, h, x0)
     algo = algorithm.dspg_algorithm(
         problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=40)
-    runner.run(algo, problem, sched, seed=0, record_every=10, scan=True)
-    count = runner.scan_executable_count(algo)
-    if count < 0:
+    before = runner.scan_executable_count(algo)
+    if before < 0:
         pytest.skip("jit cache-size introspection unavailable on this jax")
-    assert count == 1
+    runner.run(algo, problem, sched, seed=0, record_every=10, scan=True)
+    delta = runner.scan_executable_count(algo) - before
+    assert delta <= 1
+    # a REBUILT algorithm on the same problem reuses the compiled chunk
+    # outright (the persistent executable cache): zero new executables
+    algo2 = algorithm.dspg_algorithm(
+        problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=40)
+    before2 = runner.scan_executable_count(algo2)
+    runner.run(algo2, problem, sched, seed=0, record_every=10, scan=True)
+    assert runner.scan_executable_count(algo2) - before2 == 0

@@ -473,3 +473,104 @@ def test_backend_mix_direct_use():
     np.testing.assert_allclose(np.asarray(mixed["w"]), ref, atol=0.05)
     with pytest.raises(ValueError, match="error-feedback"):
         comp.mix(aux, phi, tree)
+
+
+# ---------------------------------------------------------------------------
+# init_mix_state beyond DPSVRG: GT-SVRG and loopless ride compressed gossip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,args,kwargs", [
+    ("gt_svrg", (0.1, 4, 10), {}),
+    ("loopless_dpsvrg", (0.3, 40), {"snapshot_prob": 0.1,
+                                    "consensus_rounds": 1}),
+])
+def test_gt_svrg_and_loopless_ride_compressed(name, args, kwargs):
+    """Satellite smoke test: with init_mix_state extended beyond DPSVRG,
+    every SVRG-family method converges under error-feedback compressed
+    gossip on the paper logreg problem, tracking its uncompressed run."""
+    m = 8
+    ds = synthetic.make_paper_dataset("adult_like", scale=0.02, seed=0)
+    data = {k: jnp.asarray(v)
+            for k, v in synthetic.partition_per_node(ds, m).items()}
+    h = prox.l1(0.01)
+    x0 = gossip.stack_tree(jnp.zeros(ds.dim), m)
+    problem = _problem(data, h, x0)
+    sched = _ring(m)
+    full = runner.run(algorithm.ALGORITHMS[name](problem, *args, **kwargs),
+                      problem, sched, seed=0, record_every=5, scan=True,
+                      gossip="dense").history
+    comp = runner.run(algorithm.ALGORITHMS[name](problem, *args, **kwargs),
+                      problem, sched, seed=0, record_every=5, scan=True,
+                      gossip="compressed").history
+    descent = full.objective[0] - full.objective[-1]
+    assert descent > 0
+    assert comp.objective[-1] < comp.objective[0]
+    assert abs(comp.objective[-1] - full.objective[-1]) < max(
+        0.2 * descent, 5e-3)
+
+
+# ---------------------------------------------------------------------------
+# per-link byte maps (totals -> per-edge)
+# ---------------------------------------------------------------------------
+
+def test_bytes_per_link_sums_to_bytes_per_step():
+    """The per-edge refinement must account exactly the same bytes as the
+    scalar total, for every backend."""
+    data, h, x0 = _setup(m=6)
+    sched = _ring(6)
+    meta = transport.TransportMeta.constant(1)
+    pc = transport.node_param_count(x0)
+    for name in ("dense", "banded"):
+        backend = transport.GOSSIP_BACKENDS[name]
+        aux = backend.prepare(sched, meta)
+        phi = backend.phi_for(aux, 0, 1)
+        links = backend.bytes_per_link(aux, phi, pc)
+        assert sum(links.values()) == backend.bytes_per_step(aux, phi, pc)
+        assert all(src != dst for src, dst in links)
+    # bits=4 makes the per-link floors undershoot the single-floor total;
+    # the remainder distribution must keep the sum EXACT
+    for bits in (8, 4, 3):
+        comp = transport.CompressedBackend(inner="banded", bits=bits)
+        aux = comp.prepare(sched, meta)
+        phi = comp.phi_for(aux, 0, 1)
+        links = comp.bytes_per_link(aux, phi, pc)
+        assert sum(links.values()) == comp.bytes_per_step(aux, phi, pc)
+
+
+def test_bytes_per_link_topology():
+    """On the ring, banded gossip only loads actual ring links (both
+    directions of each active matching edge); dense loads every ordered
+    pair regardless of sparsity."""
+    data, h, x0 = _setup(m=6)
+    m = 6
+    sched = _ring(m)
+    meta = transport.TransportMeta.constant(1)
+    pc = transport.node_param_count(x0)
+    dense = transport.GOSSIP_BACKENDS["dense"]
+    aux_d = dense.prepare(sched, meta)
+    links_d = dense.bytes_per_link(aux_d, dense.phi_for(aux_d, 0, 1), pc)
+    assert len(links_d) == m * (m - 1)
+    banded = transport.GOSSIP_BACKENDS["banded"]
+    aux_b = banded.prepare(sched, meta)
+    links_b = banded.bytes_per_link(aux_b, banded.phi_for(aux_b, 0, 1), pc)
+    ring_links = {((i + 1) % m, i) for i in range(m)} | \
+                 {(i, (i + 1) % m) for i in range(m)}
+    assert set(links_b) <= ring_links
+    assert len(links_b) < len(links_d)
+
+
+def test_gt_svrg_wire_accounting_counts_both_payloads():
+    """Gradient tracking gossips TWO quantities per round (iterate and
+    tracker) with the same phi — AlgoMeta.gossip_payloads makes the wire
+    accounting charge both, so at equal rounds GT-SVRG moves exactly 2x a
+    single-payload method's bytes."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _ring(4)
+    gt = runner.run(algorithm.ALGORITHMS["gt_svrg"](problem, 0.1, 1, 5),
+                    problem, sched, record_every=5, gossip="dense")
+    ds = runner.run(algorithm.dspg_algorithm(
+        problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=5),
+        problem, sched, record_every=5, gossip="dense")
+    assert (gt.extras["wire_bytes"][-1]
+            == 2 * ds.extras["wire_bytes"][-1])
