@@ -1,46 +1,53 @@
 """CI regression gate for ``BENCH_runner.json`` against the committed
 baseline (``benchmarks/BENCH_baseline.json``).
 
-Checks, in order of importance:
+Checks, per section PRESENT in the current results (``runner_bench --json
+--only ...`` writes partial files; missing sections are skipped, a section
+missing from the BASELINE fails as stale):
 
-1. **Acceptance floor**: the resident path must be >= MIN_SPEEDUP (2x)
-   faster than the scan path on the paper logreg DSPG 600-step run, and its
-   transfer counts must be O(1) (the bench itself already asserted the
-   ledger; this re-checks the recorded numbers so the artifact is
-   self-certifying).
-2. **Regression vs baseline**: resident ms/step must not regress more than
-   TOLERANCE (20%) against the committed baseline.  Raw wall-clock is not
-   portable across machines (the baseline was recorded on the dev
-   container, CI runs elsewhere), so the comparison is CALIBRATED by the
-   scan path: both paths run the same problem on the same machine, so
-   ``scan_now / scan_baseline`` measures the machine-speed ratio and the
-   gate compares ``resident_now`` against
-   ``resident_baseline * calibration * (1 + TOLERANCE)``.
+1. **Acceptance floors**: the resident path must be >= MIN_SPEEDUP (2x)
+   faster than the scan path on the paper logreg DSPG 600-step run; the
+   batched 8-cell λ×seed sweep must be >= MIN_SWEEP_SPEEDUP (3x) faster
+   end-to-end than the same grid as sequential resident runs.  Transfer
+   ledgers must be O(1) (one staged put + at most two pulls per resident
+   run AND per whole batched sweep) and batched histories must match
+   sequential ones to float tolerance — the bench asserted all of this
+   live; re-checking the recorded numbers keeps the artifact
+   self-certifying.
+2. **Regression vs baseline**: resident ms/step and batched-sweep
+   ms/step-per-cell must not regress more than TOLERANCE (20%) against the
+   committed baseline.  Raw wall-clock is not portable across machines
+   (the baseline was recorded on the dev container, CI runs elsewhere), so
+   each comparison is CALIBRATED by a scan-path run of the same problem on
+   the same machine: ``scan_now / scan_baseline`` measures the
+   machine-speed ratio and the gate compares against
+   ``baseline * calibration * (1 + TOLERANCE)``.
 
 Usage:  python -m benchmarks.check_bench BENCH_runner.json \
             [--baseline benchmarks/BENCH_baseline.json] [--update]
 
-``--update`` rewrites the baseline from the current results instead of
-checking (run it on the reference machine when a PR legitimately shifts the
-perf envelope, and commit the result).
+``--update`` MERGES the current results into the baseline instead of
+checking: only the sections present in the current file are rewritten, so
+updating from a partial ``--only sweep`` run refreshes the sweep baseline
+without deleting the backends/resident sections.  Run it on the reference
+machine when a PR legitimately shifts the perf envelope, and commit the
+result.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import shutil
+import os
 import sys
 
 MIN_SPEEDUP = 2.0
+MIN_SWEEP_SPEEDUP = 3.0
 TOLERANCE = 0.20
 
 
-def check(current: dict, baseline: dict) -> list[str]:
+def _check_resident(cur: dict, base: "dict | None") -> list[str]:
     errors = []
-    cur = current["resident"]["dspg600"]
-    base = baseline["resident"]["dspg600"]
-
     speedup = cur["speedup_resident_vs_scan"]
     if speedup < MIN_SPEEDUP:
         errors.append(
@@ -58,6 +65,10 @@ def check(current: dict, baseline: dict) -> list[str]:
             f"resident history diverged from host by "
             f"{cur['history_max_abs_diff']:.2e} (> 1e-4)")
 
+    if base is None:
+        errors.append("baseline has no resident/dspg600 section — "
+                      "refresh benchmarks/BENCH_baseline.json (--update)")
+        return errors
     calibration = cur["scan_ms_per_step"] / base["scan_ms_per_step"]
     budget = base["resident_ms_per_step"] * calibration * (1 + TOLERANCE)
     if cur["resident_ms_per_step"] > budget:
@@ -69,29 +80,96 @@ def check(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
+def _check_sweep(cur: dict, base: "dict | None") -> list[str]:
+    errors = []
+    speedup = cur["speedup_batched_vs_sequential"]
+    if speedup < MIN_SWEEP_SPEEDUP:
+        errors.append(
+            f"batched {cur['cells']}-cell sweep is only {speedup:.2f}x "
+            f"faster than sequential resident runs (acceptance floor: "
+            f"{MIN_SWEEP_SPEEDUP}x)")
+
+    h2d, d2h = cur["transfers"]["batched"]
+    if h2d > 2 or d2h > 2:
+        errors.append(
+            f"batched sweep transfers are not O(1) for the WHOLE grid: "
+            f"h2d={h2d} d2h={d2h} (expected <= 2 each)")
+
+    if cur["history_max_abs_diff"] > 1e-4:
+        errors.append(
+            f"batched sweep histories diverged from sequential by "
+            f"{cur['history_max_abs_diff']:.2e} (> 1e-4)")
+
+    if base is None:
+        errors.append("baseline has no sweep section — refresh "
+                      "benchmarks/BENCH_baseline.json (--update)")
+        return errors
+    calibration = cur["scan_ms_per_step"] / base["scan_ms_per_step"]
+    budget = (base["batched_ms_per_step_per_cell"] * calibration
+              * (1 + TOLERANCE))
+    if cur["batched_ms_per_step_per_cell"] > budget:
+        errors.append(
+            f"batched sweep ms/step/cell regressed: "
+            f"{cur['batched_ms_per_step_per_cell']:.4f} > budget "
+            f"{budget:.4f} (baseline "
+            f"{base['batched_ms_per_step_per_cell']:.4f} x machine "
+            f"calibration {calibration:.2f} x {1 + TOLERANCE:.2f})")
+    return errors
+
+
+def check(current: dict, baseline: dict) -> list[str]:
+    errors = []
+    if "resident" in current:
+        errors += _check_resident(
+            current["resident"]["dspg600"],
+            baseline.get("resident", {}).get("dspg600"))
+    if "sweep" in current:
+        errors += _check_sweep(current["sweep"], baseline.get("sweep"))
+    if "resident" not in current and "sweep" not in current:
+        errors.append("current results contain neither a resident nor a "
+                      "sweep section — nothing to gate")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("current", help="BENCH_runner.json from this run")
     ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
     ap.add_argument("--update", action="store_true",
-                    help="rewrite the baseline from the current results")
+                    help="merge the current results' sections into the "
+                         "baseline (partial --only files only refresh what "
+                         "they contain)")
     args = ap.parse_args()
-
-    if args.update:
-        shutil.copyfile(args.current, args.baseline)
-        print(f"baseline updated: {args.baseline}")
-        return 0
 
     with open(args.current) as f:
         current = json.load(f)
+
+    if args.update:
+        baseline = {}
+        if os.path.exists(args.baseline):
+            with open(args.baseline) as f:
+                baseline = json.load(f)
+        baseline.update(current)     # only sections present in `current`
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1)
+        print(f"baseline updated: {args.baseline} "
+              f"(sections: {sorted(current)})")
+        return 0
     with open(args.baseline) as f:
         baseline = json.load(f)
 
     errors = check(current, baseline)
-    cur = current["resident"]["dspg600"]
-    print(f"resident {cur['resident_ms_per_step']:.4f} ms/step, "
-          f"{cur['speedup_resident_vs_scan']:.2f}x vs scan, transfers "
-          f"{cur['transfers']['resident']}")
+    if "resident" in current:
+        cur = current["resident"]["dspg600"]
+        print(f"resident {cur['resident_ms_per_step']:.4f} ms/step, "
+              f"{cur['speedup_resident_vs_scan']:.2f}x vs scan, transfers "
+              f"{cur['transfers']['resident']}")
+    if "sweep" in current:
+        cur = current["sweep"]
+        print(f"sweep    {cur['batched_ms_per_step_per_cell']:.4f} "
+              f"ms/step/cell batched, "
+              f"{cur['speedup_batched_vs_sequential']:.2f}x vs sequential "
+              f"resident, transfers {cur['transfers']['batched']}")
     if errors:
         for e in errors:
             print(f"FAIL: {e}")

@@ -16,7 +16,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner
+from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner, sweep
 from repro.data import synthetic
 
 
@@ -65,6 +65,24 @@ def run_algorithm(name: str, problem, sched, *factory_args, seed=0,
                       record_every=record_every, scan=scan,
                       resident=resident, sampling=sampling,
                       gossip=gossip)
+
+
+def run_sweep(build, grid, sched=None, *, seed=0, record_every=1,
+              resident=False, sweep_batched=False, mode="product",
+              gossip="dense") -> sweep.SweepResult:
+    """Drive a fig-experiment grid through ``core.sweep.run_sweep`` — the
+    one sweep calling convention the figure scripts share.  Default
+    (``resident=False, sweep_batched=False``) runs the cells sequentially
+    through the host path, reproducing the pre-sweep per-cell
+    ``runner.run`` numbers exactly; ``resident=True`` runs sequential
+    resident cells; ``sweep_batched=True`` stages the WHOLE grid as one
+    batched device program (O(1) transfers for the entire fig sweep).
+    ``gossip`` pins dense like :func:`run_algorithm`, keeping figure
+    numbers comparable across transport-selection changes."""
+    return sweep.run_sweep(
+        build, grid, sched, seed=seed, record_every=record_every,
+        resident=resident or sweep_batched, batched=sweep_batched,
+        mode=mode, gossip=gossip)
 
 
 def f_star(flat, h, d, alpha=0.4, steps=4000):

@@ -19,16 +19,33 @@ from repro.core import dpsvrg, graphs, transport
 from . import common
 
 
+def _rounds_stream(meta, steps: int) -> list:
+    """The in-run order of gossip ``rounds`` values, exactly as the runner
+    consumes schedule slots: ``gossip_rounds`` is keyed by the IN-ROUND
+    step for outer/inner methods (it restarts at 1 every outer round —
+    replaying a global step index would let capped multi-consensus drift
+    one round per outer round and shift the slot phase), and by the global
+    step for flat loops."""
+    out: list = []
+    if meta.outer_lengths is not None:
+        for K in meta.outer_lengths:
+            for k in range(1, K + 1):
+                out.append(meta.gossip_rounds(k))
+                if len(out) == steps:
+                    return out
+        return out
+    return [meta.gossip_rounds(t) for t in range(1, steps + 1)]
+
+
 def per_link_totals(backend_name: str, sched, meta, x0, steps: int) -> dict:
-    """Replay ``steps`` schedule slots through a backend's per-link
+    """Replay ``steps`` inner steps through a backend's per-link
     accounting and return cumulative ``{(src, dst): bytes}``."""
     backend = transport.GOSSIP_BACKENDS[backend_name]
     aux = backend.prepare(sched, meta)
     pc = transport.node_param_count(x0)
     totals: dict = {}
     slot = 0
-    for k in range(1, steps + 1):
-        rounds = meta.gossip_rounds(k)
+    for rounds in _rounds_stream(meta, steps):
         phi = backend.phi_for(aux, slot, rounds)
         for link, b in backend.bytes_per_link(aux, phi, pc).items():
             totals[link] = totals.get(link, 0) + b

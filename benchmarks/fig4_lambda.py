@@ -1,37 +1,58 @@
 """Fig. 4: robustness to the l1 coefficient lambda in {0.001, 0.01, 0.1}.
 
 Paper claims: lambda barely affects DPSVRG's stability, while larger
-lambda makes DSPG oscillate harder and stall at a higher loss."""
+lambda makes DSPG oscillate harder and stall at a higher loss.
+
+The λ grid runs through ``common.run_sweep``: sequential host cells by
+default (same numbers as the historical per-λ loop), ``--resident`` for
+sequential resident cells, ``--sweep-batched`` for the whole grid as ONE
+batched device program (λ reaches the prox as a traced cell scalar)."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import dpsvrg, graphs
+from repro.core import algorithm, dpsvrg, graphs, prox
 from . import common
+
+LAMBDAS = (0.001, 0.01, 0.1)
 
 
 def run(scale: float = 0.02, alpha: float = 0.2,
-        resident: bool = False):
+        resident: bool = False, sweep_batched: bool = False):
+    data, flat, h, x0, d = common.setup_problem("mnist_like", scale)
+    sched = graphs.b_connected_ring_schedule(8, b=1)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4, num_outer=9)
+
+    def build_dpsvrg(lam=0.01):
+        problem = algorithm.Problem(common.logreg_loss, prox.l1(lam), x0,
+                                    data)
+        return algorithm.ALGORITHMS["dpsvrg"](problem, hp), problem
+
+    sv = common.run_sweep(build_dpsvrg, {"lam": LAMBDAS}, sched,
+                          record_every=4, resident=resident,
+                          sweep_batched=sweep_batched)
+    num_steps = int(sv.history.steps[-1, 0])
+
+    def build_dspg(lam=0.01):
+        problem = algorithm.Problem(common.logreg_loss, prox.l1(lam), x0,
+                                    data)
+        return algorithm.ALGORITHMS["dspg"](
+            problem, dpsvrg.DSPGHyperParams(alpha0=alpha,
+                                            constant_step=True),
+            num_steps), problem
+
+    sd = common.run_sweep(build_dspg, {"lam": LAMBDAS}, sched,
+                          record_every=8, resident=resident,
+                          sweep_batched=sweep_batched)
+
+    osc = lambda obj: float(np.std(obj[-len(obj) // 3:]))
     rows = []
-    for lam in (0.001, 0.01, 0.1):
-        data, flat, h, x0, d = common.setup_problem("mnist_like", scale,
-                                                    lam=lam)
-        sched = graphs.b_connected_ring_schedule(8, b=1)
-        problem = common.make_problem(data, h, x0)
-        hp = dpsvrg.DPSVRGHyperParams(alpha=alpha, beta=1.2, n0=4,
-                                      num_outer=9)
-        hv = common.run_algorithm("dpsvrg", problem, sched, hp,
-                                  record_every=4,
-                                  resident=resident).history
-        hd = common.run_algorithm("dspg", problem, sched,
-                                  dpsvrg.DSPGHyperParams(alpha0=alpha,
-                                                         constant_step=True),
-                                  int(hv.steps[-1]), record_every=8,
-                                  resident=resident).history
-        osc = lambda hh: float(np.std(hh.objective[-len(hh.objective) // 3:]))
+    for i, lam in enumerate(LAMBDAS):
+        ov = sv.history.objective[:, i]
+        od = sd.history.objective[:, i]
         rows.append(common.Row(
             f"fig4/lambda={lam}", 0.0,
-            f"loss_dpsvrg={hv.objective[-1]:.5f} osc={osc(hv):.2e} "
-            f"loss_dspg={hd.objective[-1]:.5f} osc_dspg={osc(hd):.2e}"))
+            f"loss_dpsvrg={ov[-1]:.5f} osc={osc(ov):.2e} "
+            f"loss_dspg={od[-1]:.5f} osc_dspg={osc(od):.2e}"))
     return rows

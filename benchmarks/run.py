@@ -21,6 +21,11 @@ def main() -> None:
                     help="drive the fig sweeps through the device-resident "
                          "runner path (one transfer per run; histories "
                          "agree with the host path to float tolerance)")
+    ap.add_argument("--sweep-batched", action="store_true",
+                    help="stage each fig experiment grid (λ / connectivity "
+                         "/ seeds) as ONE batched resident device program "
+                         "via runner.run_sweep — O(1) transfers per fig, "
+                         "identical schedules across cells")
     args = ap.parse_args()
 
     from . import (baselines_compare, beyond_noniid, datasets_table,
@@ -39,16 +44,22 @@ def main() -> None:
         "baselines": baselines_compare.run,
     }
     only = {s for s in args.only.split(",") if s}
-    # the fig sweeps accept resident=; the non-sweep suites don't
+    # the fig sweeps accept resident=; the non-sweep suites don't; the
+    # grid-shaped figs additionally batch their whole grid into one
+    # resident device program under --sweep-batched
     resident_aware = {"fig1", "fig2", "fig3", "fig4", "fig5"}
+    sweep_aware = {"fig1", "fig4", "fig5"}
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if only and name not in only:
             continue
         t0 = time.time()
         try:
-            kw = ({"resident": True}
-                  if args.resident and name in resident_aware else {})
+            kw = {}
+            if args.resident and name in resident_aware:
+                kw["resident"] = True
+            if args.sweep_batched and name in sweep_aware:
+                kw["sweep_batched"] = True
             rows = fn(args.scale, **kw)
         except Exception as e:  # pragma: no cover
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}")

@@ -42,7 +42,7 @@ paper-scale repro and LM-scale training share one update implementation.
 """
 
 from . import (algorithm, dpsvrg, gossip, graphs, inexact, prox, runner,
-               schedules, svrg, transport)
+               schedules, svrg, sweep, transport)
 
 __all__ = ["algorithm", "dpsvrg", "gossip", "graphs", "inexact", "prox",
-           "runner", "schedules", "svrg", "transport"]
+           "runner", "schedules", "svrg", "sweep", "transport"]

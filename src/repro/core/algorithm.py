@@ -30,6 +30,7 @@ the SVRG correction a third time.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 from typing import Any, Callable, NamedTuple
 
@@ -45,6 +46,7 @@ __all__ = [
     "prox_gossip_update",
     "AlgoMeta",
     "Algorithm",
+    "ephemeral_steps",
     "DPSVRGHyperParams",
     "DSPGHyperParams",
     "build_node_grad_fn",
@@ -200,6 +202,26 @@ _SHARED_STEPS: "collections.OrderedDict[tuple, Callable]" = \
     collections.OrderedDict()
 _SHARED_STEPS_MAX = 128
 
+# When True, _shared_step builds fresh functions WITHOUT touching the global
+# LRU.  The batched sweep executor rebuilds algorithms INSIDE a trace (cell
+# hyperparameters arrive as tracers, e.g. a vmapped lambda grid), and those
+# tracer-closing steps must never be cached: their keys embed fresh Prox
+# objects so they could never be served again, but they would still evict
+# legitimate entries and pin tracers past their trace.
+_EPHEMERAL_STEPS = False
+
+
+@contextlib.contextmanager
+def ephemeral_steps():
+    """Build algorithm steps without memoizing them (in-trace rebuilds)."""
+    global _EPHEMERAL_STEPS
+    prev = _EPHEMERAL_STEPS
+    _EPHEMERAL_STEPS = True
+    try:
+        yield
+    finally:
+        _EPHEMERAL_STEPS = prev
+
 
 def memoize_into(cache: "collections.OrderedDict", cap: int, key: tuple,
                  make: Callable[[], Callable]) -> Callable:
@@ -217,6 +239,8 @@ def memoize_into(cache: "collections.OrderedDict", cap: int, key: tuple,
 
 
 def _shared_step(key: tuple, make: Callable[[], Callable]) -> Callable:
+    if _EPHEMERAL_STEPS:
+        return make()
     return memoize_into(_SHARED_STEPS, _SHARED_STEPS_MAX, key, make)
 
 
@@ -397,6 +421,27 @@ class Algorithm:
     DPSVRG, GT-SVRG, and loopless DPSVRG all do (GT-SVRG carries one
     residual per transmitted quantity — iterate and tracker); algorithms
     leaving it None can only be driven by stateless transports.
+
+    The TRACEABLE outer-transition contract (``outer_traced`` /
+    ``end_outer_traced`` / ``device_state``) lets the runner fold the
+    outer-round transitions into the compiled chunk program (``lax.cond``
+    on a precomputed round schedule) instead of dispatching ``outer`` /
+    ``end_outer`` from host between chunks — required for batched sweeps
+    (``core.sweep``) and the default for ``runner.run(resident=True)``
+    when declared:
+
+    * ``outer_traced(state, full_data) -> state`` — same transition as
+      ``outer`` but jit/vmap-safe with the dataset passed EXPLICITLY (so
+      the compiled chunk reads the staged device-resident copy instead of
+      baking the closed-over host array in as a constant) and a FIXED
+      output pytree structure.
+    * ``end_outer_traced(state, k) -> state`` — same as ``end_outer`` with
+      the round length as a traced f32 scalar.
+    * ``device_state(state) -> state`` — one-time host-side shim that gives
+      the initial state the fixed structure the traced transitions need
+      (e.g. DPSVRG's ``est=None`` becomes a zero-filled ``SvrgState``
+      placeholder; it is overwritten by the first in-chunk ``outer`` before
+      any step reads it).  None means the init state already has it.
     """
     meta: AlgoMeta
     init: Callable[[], Any]
@@ -405,6 +450,9 @@ class Algorithm:
     end_outer: Callable[[Any, int], Any] | None = None
     rule: UpdateRule | None = None
     init_mix_state: Callable[[Any], Any] | None = None
+    outer_traced: Callable[[Any, Any], Any] | None = None
+    end_outer_traced: Callable[[Any, Any], Any] | None = None
+    device_state: Callable[[Any], Any] | None = None
 
     @staticmethod
     def get_params(state):
@@ -444,6 +492,67 @@ class LooplessState(NamedTuple):
 
 def _zeros_like(tree):
     return jax.tree.map(jnp.zeros_like, tree)
+
+
+# Traced outer transitions are memoized like the steps: rebuilt Algorithm
+# instances with identical loss closures return the SAME function objects,
+# so the runner's chunk executors (whose cache keys embed these identities)
+# stay warm across sweep points.  They close over NO data — the dataset is
+# an explicit argument, read from the staged device-resident copy.
+
+def _svrg_outer_traced(loss_fn: Callable) -> Callable:
+    """snapshot <- anchor, full_grad <- grad at anchor over the full data,
+    inner_sum <- 0 — the traced twin of the DPSVRG/GT-SVRG ``outer``."""
+    def make():
+        node_grad = build_node_grad_fn(loss_fn)
+
+        def outer_traced(state, full_data):
+            est = svrg.SvrgState(snapshot=state.anchor,
+                                 full_grad=node_grad(state.anchor, full_data))
+            return state._replace(est=est,
+                                  inner_sum=_zeros_like(state.params))
+
+        return outer_traced
+
+    return _shared_step(("svrg_outer_traced", loss_fn), make)
+
+
+def _tail_average_end_outer_traced() -> Callable:
+    """anchor <- inner_sum / K (Algorithm 1 line 13) with K a traced f32."""
+    def make():
+        def end_outer_traced(state, k):
+            return state._replace(
+                anchor=jax.tree.map(lambda acc: acc / k, state.inner_sum))
+
+        return end_outer_traced
+
+    return _shared_step(("tail_average_end_outer",), make)
+
+
+def _loopless_outer_traced(loss_fn: Callable) -> Callable:
+    """Coin-flip snapshot refresh at the CURRENT iterate (L-SVRG style)."""
+    def make():
+        node_grad = build_node_grad_fn(loss_fn)
+
+        def outer_traced(state, full_data):
+            return state._replace(est=svrg.SvrgState(
+                snapshot=state.params,
+                full_grad=node_grad(state.params, full_data)))
+
+        return outer_traced
+
+    return _shared_step(("loopless_outer_traced", loss_fn), make)
+
+
+def _svrg_placeholder_state(state):
+    """Fixed-structure device state: fill ``est=None`` with a zero
+    ``SvrgState`` placeholder (overwritten by the first in-chunk ``outer``
+    before any step reads it)."""
+    if state.est is not None:
+        return state
+    est = svrg.SvrgState(snapshot=state.anchor,
+                         full_grad=_zeros_like(state.params))
+    return state._replace(est=est)
 
 
 # ---------------------------------------------------------------------------
@@ -511,7 +620,10 @@ def dpsvrg_algorithm(problem: Problem, hp: DPSVRGHyperParams) -> Algorithm:
     )
     return Algorithm(meta=meta, init=init, step=step, outer=outer,
                      end_outer=end_outer, rule=DPSVRG_RULE,
-                     init_mix_state=init_mix_state)
+                     init_mix_state=init_mix_state,
+                     outer_traced=_svrg_outer_traced(problem.loss_fn),
+                     end_outer_traced=_tail_average_end_outer_traced(),
+                     device_state=_svrg_placeholder_state)
 
 
 def dspg_algorithm(problem: Problem, hp: DSPGHyperParams,
@@ -625,7 +737,9 @@ def gt_svrg_algorithm(problem: Problem, alpha: float, num_outer: int,
     )
     return Algorithm(meta=meta, init=init, step=step, outer=outer,
                      end_outer=end_outer, rule=DPSVRG_RULE,
-                     init_mix_state=init_mix_state)
+                     init_mix_state=init_mix_state,
+                     outer_traced=_svrg_outer_traced(problem.loss_fn),
+                     end_outer_traced=_tail_average_end_outer_traced())
 
 
 def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
@@ -670,7 +784,8 @@ def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
         snapshot_prob=snapshot_prob,
     )
     return Algorithm(meta=meta, init=init, step=step, outer=outer,
-                     rule=DPSVRG_RULE, init_mix_state=init_mix_state)
+                     rule=DPSVRG_RULE, init_mix_state=init_mix_state,
+                     outer_traced=_loopless_outer_traced(problem.loss_fn))
 
 
 ALGORITHMS: dict[str, Callable[..., Algorithm]] = {

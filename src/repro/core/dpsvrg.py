@@ -24,6 +24,12 @@ The historical ``dpsvrg_run`` / ``dspg_run`` wrappers are GONE: build an
     res = runner.run(algo, problem, schedule, record_every=..., scan=True)
     res.params, res.history
 
+— and hyperparameter GRIDS (λ, seeds, topologies) batch into one staged
+device program via ``runner.run_sweep`` (``core.sweep``): DPSVRG declares
+the traceable outer-transition contract (``Algorithm.outer_traced`` /
+``end_outer_traced``), so its growing K_s rounds execute entirely inside
+the compiled chunks.
+
 Algorithm 1 (per node i, inner step k of outer round s):
     v_i   = grad_B f_i(x_i) - grad_B f_i(x~_i) + full_grad_i(x~_i)
     q_i   = x_i - alpha * v_i

@@ -147,6 +147,21 @@ def inexact_prox_svrg_algorithm(problem: Problem, hp: InexactHyperParams,
         return state._replace(
             anchor=jax.tree.map(lambda acc: acc / K, state.inner_sum))
 
+    # the traceable outer-transition contract (device-side transitions /
+    # batched sweeps): same refresh with the dataset passed explicitly
+    def _make_outer_traced():
+        node_grad = build_node_grad_fn(problem.loss_fn)
+
+        def outer_traced(state, full_data):
+            est = svrg.SvrgState(snapshot=state.anchor,
+                                 full_grad=node_grad(state.anchor, full_data))
+            return state._replace(est=est, inner_sum=_zeros(state.params))
+
+        return outer_traced
+
+    outer_traced = algorithm_lib._shared_step(
+        ("inexact_outer_traced", problem.loss_fn), _make_outer_traced)
+
     meta = AlgoMeta(
         name="inexact_prox_svrg",
         stepsize=schedules.constant(hp.alpha),
@@ -158,8 +173,11 @@ def inexact_prox_svrg_algorithm(problem: Problem, hp: InexactHyperParams,
         record_key="round",
         final_record=True,
     )
-    return Algorithm(meta=meta, init=init, step=step, outer=outer,
-                     end_outer=end_outer)
+    return Algorithm(
+        meta=meta, init=init, step=step, outer=outer, end_outer=end_outer,
+        outer_traced=outer_traced,
+        end_outer_traced=algorithm_lib._tail_average_end_outer_traced(),
+        device_state=algorithm_lib._svrg_placeholder_state)
 
 
 # Registered alongside the decentralized methods: Algorithm 2 is just another

@@ -99,9 +99,9 @@ import numpy as np
 
 from . import algorithm as algorithm_lib, gossip, graphs, transport
 
-__all__ = ["RunHistory", "RunResult", "Recorder", "run", "sample_batch",
-           "scan_executable_count", "reset_executable_caches",
-           "traceable_consensus"]
+__all__ = ["RunHistory", "RunResult", "Recorder", "run", "run_sweep",
+           "SweepResult", "sample_batch", "scan_executable_count",
+           "reset_executable_caches", "traceable_consensus"]
 
 
 class RunHistory(NamedTuple):
@@ -210,10 +210,15 @@ def _shared_exec(key: tuple, make: Callable[[], Callable]) -> Callable:
 
 
 def reset_executable_caches() -> None:
-    """Drop every persistent executor/step cache (true cold-start measuring)."""
+    """Drop every persistent executor/step cache (true cold-start
+    measuring).  Covers the scan and resident chunk executors, the on-device
+    record kernels, the vmapped batched-sweep executors (``core.sweep``
+    routes them through the same cache), and the shared step cache."""
     _EXEC_CACHE.clear()
     _SCAN_EXEC_CACHE.clear()
     algorithm_lib._SHARED_STEPS.clear()
+    from . import sweep as sweep_lib
+    sweep_lib._SWEEP_EXEC_CACHE.clear()
 
 
 def _make_scan_exec(algo):
@@ -340,32 +345,41 @@ def traceable_consensus(params) -> jnp.ndarray:
     return jnp.mean(jnp.linalg.norm(flat - xbar, axis=1))
 
 
+def _resolved_objective(meta, problem):
+    """The traceable recorded objective ``obj(stacked_params, data)`` for
+    the on-device record kernels (single-run AND batched sweep), resolved
+    in order: ``meta.resident_objective`` (the AlgoMeta traceable
+    contract) -> ``problem.objective_fn`` (must then be traceable) -> the
+    default composite F(x̄) via the vmap'd loss + prox value."""
+    if meta.resident_objective is not None:
+        return meta.resident_objective
+    if problem.objective_fn is not None:
+        host_obj = problem.objective_fn
+
+        def obj(params, data):
+            del data
+            return host_obj(params)
+
+        return obj
+    loss_fn, prox = problem.loss_fn, problem.prox
+
+    def obj(params, data):
+        xbar = gossip.node_mean(params)
+        m = jax.tree.leaves(params)[0].shape[0]
+        losses = jax.vmap(loss_fn)(gossip.stack_tree(xbar, m), data)
+        return jnp.mean(losses) + prox.value(xbar)
+
+    return obj
+
+
 def _make_record_kernel(problem, meta):
     """Jitted on-device metric recorder: computes the objective (and
     consensus when tracked) from the live state and writes them into the
     preallocated history buffers at the carried record slot.  Buffers are
-    DONATED, so the update is in place.  The objective resolves, in order:
-    ``meta.resident_objective`` (the AlgoMeta traceable contract) ->
-    ``problem.objective_fn`` (must then be traceable) -> the default
-    composite F(x̄) via the vmap'd loss + prox value."""
+    DONATED, so the update is in place.  The objective comes from
+    :func:`_resolved_objective`."""
     def make():
-        if meta.resident_objective is not None:
-            obj = meta.resident_objective
-        elif problem.objective_fn is not None:
-            host_obj = problem.objective_fn
-
-            def obj(params, data):
-                del data
-                return host_obj(params)
-        else:
-            loss_fn, prox = problem.loss_fn, problem.prox
-
-            def obj(params, data):
-                xbar = gossip.node_mean(params)
-                m = jax.tree.leaves(params)[0].shape[0]
-                losses = jax.vmap(loss_fn)(gossip.stack_tree(xbar, m), data)
-                return jnp.mean(losses) + prox.value(xbar)
-
+        obj = _resolved_objective(meta, problem)
         track = meta.track_consensus
 
         @functools.partial(jax.jit, donate_argnums=0)
@@ -383,70 +397,139 @@ def _make_record_kernel(problem, meta):
          problem.prox, problem.objective_fn, meta.resident_objective), make)
 
 
-def _make_resident_exec(algo, sampling: str):
+def _resolve_transitions(algo, device_transitions) -> bool:
+    """Whether the resident path folds ``outer``/``end_outer`` into the
+    compiled chunks (``lax.cond`` on the precomputed round schedule) instead
+    of dispatching them from host between chunks.  ``"auto"`` uses the
+    traceable contract whenever the algorithm declares it; ``True``
+    requires it; ``False`` keeps the host dispatches."""
+    meta = algo.meta
+    needs_outer = (meta.outer_lengths is not None
+                   or meta.snapshot_prob is not None)
+    if not needs_outer:
+        return False                # nothing to fold; plain chunks already
+    needs_end = meta.outer_lengths is not None and algo.end_outer is not None
+    has = (algo.outer is None or algo.outer_traced is not None) and \
+        (not needs_end or algo.end_outer_traced is not None)
+    if device_transitions == "auto":
+        return has
+    if device_transitions and not has:
+        raise ValueError(
+            f"{meta.name}: device_transitions=True needs the traceable "
+            f"outer-transition contract (Algorithm.outer_traced"
+            f"{' + end_outer_traced' if needs_end else ''}); this algorithm "
+            f"does not declare it")
+    return bool(device_transitions)
+
+
+def _chunk_body(data, *, step_fn, meta, device_sampling: bool,
+                transitions: bool, outer_fn=None, end_fn=None,
+                has_opre: bool = False, has_opost: bool = False,
+                has_end: bool = False):
+    """The ONE scan body both resident executors compile: the single-run
+    chunk executor uses it directly; the batched sweep executor builds it
+    per cell (inside ``vmap``, with the cell's traced step/transition
+    functions) — so a semantics fix here reaches both paths."""
+    has_batch = meta.batch_size > 0
+    bsz = meta.batch_size
+    if device_sampling:
+        first = jax.tree.leaves(data)[0]
+        m, n = first.shape[0], first.shape[1]
+
+        def gather(idx):
+            return jax.tree.map(
+                lambda a: jnp.take_along_axis(
+                    a, idx.reshape(m, bsz, *([1] * (a.ndim - 2))),
+                    axis=1), data)
+
+    def apply_step(carry, batch, phi, alpha, keep):
+        # padded steps (keep=False) skip the update entirely at runtime,
+        # so bucketed chunks stay numerically identical to unpadded ones
+        # (and consume no device-side rng draws)
+        if device_sampling:
+            def do(operand):
+                state, key = operand
+                key, sub = jax.random.split(key)
+                idx = jax.random.randint(sub, (m, bsz), 0, n)
+                return step_fn(state, gather(idx), phi, alpha), key
+
+            return jax.lax.cond(keep, do, lambda o: o, carry)
+        return jax.lax.cond(
+            keep,
+            lambda s: step_fn(s, batch, phi, alpha),
+            lambda s: s, carry)
+
+    def cond_state(pred, fn, carry):
+        # transitions act on the algorithm state, not the rng key
+        if device_sampling:
+            state, key = carry
+            return (jax.lax.cond(pred, fn, lambda s: s, state), key)
+        return jax.lax.cond(pred, fn, lambda s: s, carry)
+
+    def body(carry, xs):
+        if transitions:
+            if has_batch and not device_sampling:
+                batch, phi, alpha, keep, o_pre, o_post, e_post, e_k = xs
+            else:
+                phi, alpha, keep, o_pre, o_post, e_post, e_k = xs
+                batch = None
+        else:
+            if has_batch and not device_sampling:
+                batch, phi, alpha, keep = xs
+            else:
+                phi, alpha, keep = xs
+                batch = None
+        if has_opre:
+            carry = cond_state(o_pre, lambda s: outer_fn(s, data), carry)
+        carry = apply_step(carry, batch, phi, alpha, keep)
+        if has_opost:
+            carry = cond_state(o_post, lambda s: outer_fn(s, data), carry)
+        if has_end:
+            carry = cond_state(e_post, lambda s: end_fn(s, e_k), carry)
+        return carry, None
+
+    return body
+
+
+def _make_resident_exec(algo, sampling: str, transitions: bool = False):
     """Compiled chunk executor for the resident path.  The carried state is
     DONATED (XLA updates the stacked iterate in place — no (m, d) copy per
     chunk); with ``sampling="device"`` the carry additionally threads a
     ``jax.random`` key and minibatches are gathered from the device-resident
     dataset inside the scan body, so the chunk's xs carry no batch tree at
-    all."""
+    all.  With ``transitions=True`` the xs additionally carry per-step
+    outer-transition flags (outer-before, outer-after for coin-flip
+    snapshots, end-of-round + its K) and the body applies the algorithm's
+    TRACED transitions under ``lax.cond`` — no host dispatch per round."""
     step_fn = algo.step
     meta = algo.meta
     has_batch = meta.batch_size > 0
     bsz = meta.batch_size
     device_sampling = has_batch and sampling == "device"
+    outer_fn = algo.outer_traced if transitions else None
+    end_fn = algo.end_outer_traced if transitions else None
+    has_opre = (transitions and meta.outer_lengths is not None
+                and outer_fn is not None)
+    has_opost = (transitions and meta.snapshot_prob is not None
+                 and outer_fn is not None)
+    has_end = (transitions and meta.outer_lengths is not None
+               and end_fn is not None and algo.end_outer is not None)
 
     def make():
-        if device_sampling:
-            def body_factory(data):
-                first = jax.tree.leaves(data)[0]
-                m, n = first.shape[0], first.shape[1]
-
-                def gather(idx):
-                    return jax.tree.map(
-                        lambda a: jnp.take_along_axis(
-                            a, idx.reshape(m, bsz, *([1] * (a.ndim - 2))),
-                            axis=1), data)
-
-                def body(carry, xs):
-                    phi, alpha, keep = xs
-
-                    def do(operand):
-                        state, key = operand
-                        key, sub = jax.random.split(key)
-                        idx = jax.random.randint(sub, (m, bsz), 0, n)
-                        return step_fn(state, gather(idx), phi, alpha), key
-
-                    return jax.lax.cond(keep, do, lambda o: o, carry), None
-
-                return body
-
-            @functools.partial(jax.jit, donate_argnums=0)
-            def exec_chunk(carry, xs, data):
-                return jax.lax.scan(body_factory(data), carry, xs)[0]
-        else:
-            def body(state, xs):
-                if has_batch:
-                    batch, phi, alpha, keep = xs
-                else:
-                    phi, alpha, keep = xs
-                new_state = jax.lax.cond(
-                    keep,
-                    lambda s: step_fn(s, batch if has_batch else None, phi,
-                                      alpha),
-                    lambda s: s,
-                    state)
-                return new_state, None
-
-            @functools.partial(jax.jit, donate_argnums=0)
-            def exec_chunk(carry, xs, data):
-                del data
-                return jax.lax.scan(body, carry, xs)[0]
+        @functools.partial(jax.jit, donate_argnums=0)
+        def exec_chunk(carry, xs, data):
+            body = _chunk_body(
+                data, step_fn=step_fn, meta=meta,
+                device_sampling=device_sampling, transitions=transitions,
+                outer_fn=outer_fn, end_fn=end_fn, has_opre=has_opre,
+                has_opost=has_opost, has_end=has_end)
+            return jax.lax.scan(body, carry, xs)[0]
 
         return exec_chunk
 
     return _shared_exec(
-        ("resident", meta.name, has_batch, sampling, bsz, step_fn), make)
+        ("resident", meta.name, has_batch, sampling, bsz, step_fn,
+         transitions, outer_fn, end_fn), make)
 
 
 def _unalias_for_donation(tree):
@@ -484,55 +567,106 @@ class _Plan(NamedTuple):
     cols: dict                     # host-computable history columns
     wire: np.ndarray               # cumulative wire bytes per record
     num_records: int
+    phi_batched: bool = False      # batched plans: phis carry a cell axis
+    opost_batched: bool = False    # batched plans: coin flips per cell
 
 
-def _plan_resident(algo, backend, aux, rng, *, m: int, n: int,
+class _PlanCell(NamedTuple):
+    """One sweep cell's planning inputs.  The single-run resident path is
+    the one-cell special case."""
+    meta: Any
+    rng: Any
+    backend: Any
+    aux: Any
+
+
+def _plan_resident(cells: "list[_PlanCell]", *, m: int, n: int,
                    param_count: int, record_every: int, sampling: str,
-                   host_data) -> _Plan:
+                   host_data, transitions: bool = False,
+                   batched: bool = False) -> _Plan:
     """Walk the run's (data-independent) control flow WITHOUT touching the
     device: chunk boundaries, bucket padding, gossip products, step sizes,
     minibatch indices (``sampling="host"``: same ``np.random`` draw order as
     the host/scan paths — per step, batch indices then the loopless coin
     flip), and every host-computable history column.  The result is staged
-    in one transfer and executed without further host involvement."""
-    meta = algo.meta
-    has_batch = meta.batch_size > 0
+    in one transfer and executed without further host involvement.
+
+    ``cells`` is one entry per sweep cell (cell metas must agree on loop
+    STRUCTURE — the sweep driver validates; numeric values like step sizes,
+    rng streams, and snapshot probabilities vary per cell).  With
+    ``batched=True`` the chunk xs grow a cell axis (batches/alphas at axis
+    1, phis only when cells gossip over distinct schedules) and the
+    per-cell history columns stack to (records, cells).  With
+    ``transitions=True`` the plan contains NO host ``outer``/``end_outer``
+    ops: per-step flags in the xs drive the algorithm's traced transitions
+    inside the compiled chunk (``lax.cond`` on this precomputed round
+    schedule) — required for batched plans, optional for single runs."""
+    meta0 = cells[0].meta
+    B = len(cells)
+    if batched and not transitions:
+        raise ValueError("batched plans fold outer transitions into the "
+                         "compiled chunks; transitions=False only supports "
+                         "a single cell")
+    has_batch = meta0.batch_size > 0
     host_sampling = has_batch and sampling == "host"
-    bsz = meta.batch_size
+    bsz = meta0.batch_size
+    has_snapshot = meta0.snapshot_prob is not None
+    opost_batched = batched and has_snapshot
+    multi_aux = len({id(c.aux) for c in cells}) > 1
+    phi_batched = batched and multi_aux
 
     ops: list = []
     chunks: list = []
     cols = {"epochs": [], "comm_rounds": [], "steps": []}
     wire_col: list = []
 
-    grad_evals = m * n if meta.init_full_grad else 0
+    grad_evals = [m * n if c.meta.init_full_grad else 0 for c in cells]
     full_grad_cost = m * n
     comm = 0
-    wire = 0
-    slot = meta.slot_start
+    wire = [0] * B
+    slot = meta0.slot_start
     t = 0
 
     def phi_for(rounds: int):
-        nonlocal slot, comm, wire
-        phi = backend.phi_for(aux, slot, rounds)
+        nonlocal slot, comm
+        by_aux: dict = {}
+        per_cell = []
+        for c in cells:
+            phi = by_aux.get(id(c.aux))
+            if phi is None:
+                phi = by_aux[id(c.aux)] = c.backend.phi_for(c.aux, slot,
+                                                            rounds)
+            per_cell.append(phi)
+        for i, c in enumerate(cells):
+            wire[i] += (c.backend.bytes_per_step(c.aux, per_cell[i],
+                                                 param_count)
+                        * c.meta.gossip_payloads)
         slot += rounds
         comm += rounds
-        wire += (backend.bytes_per_step(aux, phi, param_count)
-                 * meta.gossip_payloads)
-        return phi
+        if phi_batched:
+            return transport.batch_phis(per_cell)
+        return per_cell[0]
 
     def plan_record():
         ops.append(("record",))
-        cols["epochs"].append(grad_evals / float(m * n)
-                              if meta.epoch_metric == "grad" else float(t))
-        cols["comm_rounds"].append(comm if meta.comm_metric == "gossip"
+        if meta0.epoch_metric == "grad":
+            ep = [g / float(m * n) for g in grad_evals]
+        else:
+            ep = [float(t)] * B
+        cols["epochs"].append(ep if batched else ep[0])
+        cols["comm_rounds"].append(comm if meta0.comm_metric == "gossip"
                                    else t)
         cols["steps"].append(t)
-        wire_col.append(wire)
+        wire_col.append(list(wire) if batched else wire[0])
 
-    def finish_chunk(idxs, phis, alphas, chunk):
+    def _no_flip():
+        return np.zeros(B, np.bool_) if opost_batched else False
+
+    def finish_chunk(idxs, phis, alphas, flags, chunk):
         """Bucket-pad and stack one chunk's xs on host (batch gather is ONE
-        vectorized take per leaf — same indices as per-step sampling)."""
+        vectorized take per leaf — same indices as per-step sampling).
+        Transition flags pad with False/0 so padded steps never fire an
+        outer transition."""
         bucket = _bucket_length(chunk, record_every)
         pad = bucket - chunk
         if pad:
@@ -542,97 +676,190 @@ def _plan_resident(algo, backend, aux, rng, *, m: int, n: int,
             alphas.extend(alphas[-1:] * pad)
         keep = np.array([True] * chunk + [False] * pad, np.bool_)
         phis_st = jax.tree.map(lambda *l: _stack_wire(l), *phis)
-        alphas_st = np.asarray(alphas, np.float32)
+        alphas_st = np.asarray(alphas, np.float32)   # (T,) or (T, B)
         if host_sampling:
-            idx = np.stack(idxs)                       # (bucket, m, B)
-            batch = jax.tree.map(
-                lambda a: np.take_along_axis(
-                    a[None],
-                    idx.reshape(bucket, m, bsz, *([1] * (a.ndim - 2))),
-                    axis=2), host_data)
+            idx = np.stack(idxs)      # (bucket, m, bsz) or (bucket, B, m, bsz)
+            if batched:
+                batch = jax.tree.map(
+                    lambda a: np.take_along_axis(
+                        a[None, None],
+                        idx.reshape(bucket, B, m, bsz,
+                                    *([1] * (a.ndim - 2))),
+                        axis=3), host_data)
+            else:
+                batch = jax.tree.map(
+                    lambda a: np.take_along_axis(
+                        a[None],
+                        idx.reshape(bucket, m, bsz, *([1] * (a.ndim - 2))),
+                        axis=2), host_data)
             xs = (batch, phis_st, alphas_st, keep)
         else:
             xs = (phis_st, alphas_st, keep)
+        if transitions:
+            fpad = [False] * pad
+            o_post = flags["o_post"] + [_no_flip()] * pad
+            xs = xs + (np.array(flags["o_pre"] + fpad, np.bool_),
+                       np.asarray(o_post, np.bool_),
+                       np.array(flags["e_post"] + fpad, np.bool_),
+                       np.array(flags["e_k"] + [0.0] * pad, np.float32))
         ops.append(("chunk", len(chunks)))
         chunks.append(_Chunk(xs))
 
+    def draw_idx():
+        per_cell = [c.rng.integers(0, n, size=(m, bsz)) for c in cells]
+        return np.stack(per_cell) if batched else per_cell[0]
+
+    def draw_alpha(step_t: int):
+        per_cell = [c.meta.stepsize(step_t) for c in cells]
+        return (np.asarray(per_cell, np.float32) if batched
+                else per_cell[0])
+
     plan_record()
 
-    if meta.outer_lengths is not None:
+    if meta0.outer_lengths is not None:
         # ---- outer/inner structure (DPSVRG, GT-SVRG) ----------------------
         just_recorded = False
-        for K in meta.outer_lengths:
-            ops.append(("outer",))
-            if meta.outer_full_grad:
-                grad_evals += full_grad_cost
+        pending_outer = False
+        for K in meta0.outer_lengths:
+            if transitions:
+                pending_outer = True
+            else:
+                ops.append(("outer",))
+            if meta0.outer_full_grad:
+                for i in range(B):
+                    grad_evals[i] += full_grad_cost
             k = 0
             while k < K:
-                key0 = k if meta.record_key == "round" else t
+                key0 = k if meta0.record_key == "round" else t
                 until = (record_every - key0 % record_every
                          if record_every else K - k)
                 chunk = min(K - k, until)
                 idxs, phis, alphas = [], [], []
+                flags = {"o_pre": [], "o_post": [], "e_post": [], "e_k": []}
                 for j in range(chunk):
                     if host_sampling:
-                        idxs.append(rng.integers(0, n, size=(m, bsz)))
-                    phis.append(phi_for(meta.gossip_rounds(k + j + 1)))
-                    alphas.append(meta.stepsize(t + j + 1))
-                finish_chunk(idxs, phis, alphas, chunk)
+                        idxs.append(draw_idx())
+                    phis.append(phi_for(meta0.gossip_rounds(k + j + 1)))
+                    alphas.append(draw_alpha(t + j + 1))
+                    if transitions:
+                        flags["o_pre"].append(pending_outer)
+                        pending_outer = False
+                        flags["o_post"].append(_no_flip())
+                        flags["e_post"].append(k + j + 1 == K)
+                        flags["e_k"].append(float(K))
+                finish_chunk(idxs, phis, alphas, flags, chunk)
                 k += chunk
                 t += chunk
-                grad_evals += chunk * meta.step_grad_factor * m * bsz
-                key = k if meta.record_key == "round" else t
+                for i in range(B):
+                    grad_evals[i] += chunk * meta0.step_grad_factor * m * bsz
+                key = k if meta0.record_key == "round" else t
                 if record_every and key % record_every == 0:
                     plan_record()
                     just_recorded = True
                 else:
                     just_recorded = False
-            ops.append(("end_outer", K))
+            if not transitions:
+                ops.append(("end_outer", K))
             if not record_every:
                 plan_record()
-        if record_every and meta.final_record and not just_recorded:
+        if record_every and meta0.final_record and not just_recorded:
             plan_record()
     else:
         # ---- flat loop (DSPG, DPG, loopless DPSVRG) -----------------------
         if record_every < 1:
             raise ValueError(
-                f"{meta.name}: flat loops need record_every >= 1")
-        num_steps = meta.num_steps
+                f"{meta0.name}: flat loops need record_every >= 1")
+        num_steps = meta0.num_steps
         while t < num_steps:
             until = record_every - t % record_every
             chunk_max = min(num_steps - t, until)
             idxs, phis, alphas = [], [], []
+            flags = {"o_pre": [], "o_post": [], "e_post": [], "e_k": []}
             refresh = False
             chunk = 0
             for j in range(chunk_max):
                 if host_sampling:
-                    idxs.append(rng.integers(0, n, size=(m, bsz)))
-                phis.append(phi_for(meta.gossip_rounds(t + j + 1)))
-                alphas.append(meta.stepsize(t + j + 1))
+                    idxs.append(draw_idx())
+                phis.append(phi_for(meta0.gossip_rounds(t + j + 1)))
+                alphas.append(draw_alpha(t + j + 1))
                 chunk += 1
-                if (meta.snapshot_prob is not None
-                        and rng.random() < meta.snapshot_prob):
+                if transitions:
+                    flags["o_pre"].append(False)
+                    flags["e_post"].append(False)
+                    flags["e_k"].append(0.0)
+                    if has_snapshot:
+                        # coin-flip snapshots fold into the chunk: one flag
+                        # per (step, cell), no chunk cut — same per-cell rng
+                        # draw order as the host loop (indices, then coin)
+                        flips = np.array(
+                            [c.rng.random() < c.meta.snapshot_prob
+                             for c in cells], np.bool_)
+                        if meta0.outer_full_grad:
+                            for i in range(B):
+                                if flips[i]:
+                                    grad_evals[i] += full_grad_cost
+                        flags["o_post"].append(
+                            flips if opost_batched else bool(flips[0]))
+                    else:
+                        flags["o_post"].append(_no_flip())
+                elif (has_snapshot
+                        and cells[0].rng.random()
+                        < meta0.snapshot_prob):
                     refresh = True   # snapshot lands here: cut the chunk
                     break
-            finish_chunk(idxs, phis, alphas, chunk)
+            finish_chunk(idxs, phis, alphas, flags, chunk)
             t += chunk
-            grad_evals += chunk * meta.step_grad_factor * m * bsz
+            for i in range(B):
+                grad_evals[i] += chunk * meta0.step_grad_factor * m * bsz
             if refresh:
                 ops.append(("outer",))
-                if meta.outer_full_grad:
-                    grad_evals += full_grad_cost
+                if meta0.outer_full_grad:
+                    grad_evals[0] += full_grad_cost
             if t % record_every == 0 or t == num_steps:
                 plan_record()
 
-    return _Plan(ops=ops, chunks=chunks,
-                 cols={k: np.array(v) for k, v in cols.items()},
-                 wire=np.array(wire_col, dtype=np.int64),
-                 num_records=sum(1 for op in ops if op[0] == "record"))
+    num_records = sum(1 for op in ops if op[0] == "record")
+    if batched:
+        cols_np = {
+            "epochs": np.array(cols["epochs"], np.float64),
+            "comm_rounds": np.broadcast_to(
+                np.asarray(cols["comm_rounds"])[:, None],
+                (num_records, B)).copy(),
+            "steps": np.broadcast_to(
+                np.asarray(cols["steps"])[:, None], (num_records, B)).copy(),
+        }
+        wire_np = np.array(wire_col, dtype=np.int64)          # (R, B)
+    else:
+        cols_np = {k: np.array(v) for k, v in cols.items()}
+        wire_np = np.array(wire_col, dtype=np.int64)
+    return _Plan(ops=ops, chunks=chunks, cols=cols_np, wire=wire_np,
+                 num_records=num_records, phi_batched=phi_batched,
+                 opost_batched=opost_batched)
+
+
+def _staged_bytes(chunks) -> int:
+    return sum(leaf.nbytes for c in chunks
+               for leaf in jax.tree.leaves(c.xs))
+
+
+def _warn_staging(staged: int, cells: int = 1) -> None:
+    """Warn when the one-shot staging transfer gets large.  ``cells``
+    reflects the sweep batch axis: a batched sweep stages ALL cells' inputs
+    at once, so the threshold applies to the TOTAL, not per cell."""
+    if staged > 1 << 30:
+        where = (f"for all {cells} sweep cells " if cells > 1 else "")
+        warnings.warn(
+            f"resident staging ships {staged / 2**30:.1f} GiB of "
+            f"pre-sampled inputs {where}to the device at once; for long "
+            f"runs use sampling='device' (in-scan minibatch gathers, zero "
+            f"batch staging) or the scan path", RuntimeWarning,
+            stacklevel=4)
 
 
 def _run_resident(algo, problem, backend, aux, rng, *, m: int,
                   n: int, param_count: int, record_every: int, sampling: str,
-                  extra_metrics, transfers) -> RunResult:
+                  extra_metrics, transfers,
+                  device_transitions="auto") -> RunResult:
     meta = algo.meta
     if extra_metrics:
         raise ValueError(
@@ -640,6 +867,7 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
             "extra_metrics callables need the host or scan path")
     has_batch = meta.batch_size > 0
     device_sampling = has_batch and sampling == "device"
+    transitions = _resolve_transitions(algo, device_transitions)
 
     # one host copy of the dataset for index gathering (the scan path pays
     # the same once-per-run pull); device sampling skips it entirely
@@ -654,11 +882,12 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
     # resident+device runs are reproducible from the same `seed`
     key_seed = int(rng.integers(0, 2**31 - 1)) if device_sampling else 0
 
-    plan = _plan_resident(algo, backend, aux, rng, m=m, n=n,
-                          param_count=param_count, record_every=record_every,
-                          sampling=sampling, host_data=host_data)
+    plan = _plan_resident(
+        [_PlanCell(meta, rng, backend, aux)], m=m, n=n,
+        param_count=param_count, record_every=record_every,
+        sampling=sampling, host_data=host_data, transitions=transitions)
 
-    exec_chunk = _make_resident_exec(algo, sampling)
+    exec_chunk = _make_resident_exec(algo, sampling, transitions)
     record_kernel = _make_record_kernel(problem, meta)
 
     # dataset staging only transfers when the problem holds host arrays
@@ -673,14 +902,7 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
     # host-sampled batches for the WHOLE run live on device at once —
     # O(num_steps * m * batch * feature) bytes; warn when that gets big
     # (sampling="device" stages no batches at all)
-    staged_bytes = sum(
-        leaf.nbytes for c in plan.chunks for leaf in jax.tree.leaves(c.xs))
-    if staged_bytes > 1 << 30:
-        warnings.warn(
-            f"resident staging ships {staged_bytes / 2**30:.1f} GiB of "
-            f"pre-sampled inputs to the device at once; for long runs use "
-            f"sampling='device' (in-scan minibatch gathers, zero batch "
-            f"staging) or the scan path", RuntimeWarning, stacklevel=3)
+    _warn_staging(_staged_bytes(plan.chunks))
     staged = jax.device_put([c.xs for c in plan.chunks])
     transfers["h2d"] += 1
 
@@ -692,6 +914,8 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
                 f"(Algorithm.init_mix_state is None), so it cannot be "
                 f"driven by the stateful {backend.name!r} transport")
         state = algo.init_mix_state(state)
+    if transitions and algo.device_state is not None:
+        state = algo.device_state(state)
     state = _shield_for_donation(state)
 
     def pack(state):
@@ -749,6 +973,28 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
 # The driver
 # ---------------------------------------------------------------------------
 
+def _resolved_backend(gossip, schedule, meta, mesh):
+    """Resolve the transport and honor hp-level quantization: a method that
+    quantizes its own gossip payload (``AlgoMeta.compress_bits``) gets its
+    resolved transport wrapped in a ``CompressedBackend`` at those bits, so
+    the wire accounting matches what actually moves (conflicting explicit
+    compressed transports raise)."""
+    backend = transport.resolve_backend(gossip, schedule, meta, mesh)
+    if meta.compress_bits is not None:
+        if isinstance(backend, transport.CompressedBackend):
+            if backend.bits != meta.compress_bits:
+                raise ValueError(
+                    f"conflicting compression: the algorithm quantizes its "
+                    f"gossip at {meta.compress_bits} bits "
+                    f"(meta.compress_bits) but the requested transport "
+                    f"compresses at {backend.bits} bits — drop one of the "
+                    f"two, or make them agree")
+        else:
+            backend = transport.CompressedBackend(inner=backend,
+                                                  bits=meta.compress_bits)
+    return backend
+
+
 def run(algo: algorithm_lib.Algorithm,
         problem: algorithm_lib.Problem,
         schedule: graphs.MixingSchedule,
@@ -758,6 +1004,7 @@ def run(algo: algorithm_lib.Algorithm,
         scan: bool = False,
         resident: bool = False,
         sampling: str = "host",
+        device_transitions: "bool | str" = "auto",
         gossip: "str | transport.GossipBackend" = "auto",
         mesh=None,
         extra_metrics: dict | None = None,
@@ -778,6 +1025,13 @@ def run(algo: algorithm_lib.Algorithm,
                   (resident only): a ``jax.random`` key rides the scan carry
                   and minibatches are gathered inside the compiled chunk —
                   a different sample stream, zero per-chunk batch staging.
+    device_transitions: resident only.  "auto" (default) folds ``outer`` /
+                  ``end_outer`` into the compiled chunks (``lax.cond`` on
+                  the precomputed round schedule — zero per-round host
+                  dispatches) whenever the algorithm declares the traceable
+                  contract (``Algorithm.outer_traced`` et al.; all six
+                  registered algorithms do).  ``False`` keeps the host
+                  dispatches; ``True`` requires the contract.
     gossip:       transport backend — a ``transport.GOSSIP_BACKENDS`` name
                   ("dense", "banded", "ppermute", "compressed"), a
                   ``GossipBackend`` instance, or "auto" (select by schedule
@@ -803,24 +1057,12 @@ def run(algo: algorithm_lib.Algorithm,
     if sampling == "device" and not resident:
         raise ValueError("sampling='device' gathers minibatches inside the "
                          "compiled chunk body — it requires resident=True")
-    backend = transport.resolve_backend(gossip, schedule, meta, mesh)
-    if meta.compress_bits is not None:
-        # the method itself quantizes its gossip payload (hp-level
-        # compression, e.g. DPSVRGHyperParams.compress_bits): wrap the
-        # resolved transport so the wire carries CompressedPhi at the
-        # method's bit width and bytes_per_step accounts the quantized
-        # payload instead of the f32 rate
-        if isinstance(backend, transport.CompressedBackend):
-            if backend.bits != meta.compress_bits:
-                raise ValueError(
-                    f"conflicting compression: the algorithm quantizes its "
-                    f"gossip at {meta.compress_bits} bits "
-                    f"(meta.compress_bits) but the requested transport "
-                    f"compresses at {backend.bits} bits — drop one of the "
-                    f"two, or make them agree")
-        else:
-            backend = transport.CompressedBackend(inner=backend,
-                                                  bits=meta.compress_bits)
+    if device_transitions is not False and device_transitions != "auto" \
+            and not resident:
+        raise ValueError("device_transitions folds outer rounds into the "
+                         "compiled resident chunks — it requires "
+                         "resident=True")
+    backend = _resolved_backend(gossip, schedule, meta, mesh)
     aux = backend.prepare(schedule, meta, mesh=mesh)
     rng = np.random.default_rng(seed)
     m = jax.tree.leaves(problem.x0)[0].shape[0]
@@ -836,7 +1078,8 @@ def run(algo: algorithm_lib.Algorithm,
                              m=m, n=n, param_count=param_count,
                              record_every=record_every, sampling=sampling,
                              extra_metrics=extra_metrics,
-                             transfers=transfers)
+                             transfers=transfers,
+                             device_transitions=device_transitions)
 
     obj = problem.objective_fn or (
         lambda p: objective_value(problem.loss_fn, problem.prox, p,
@@ -1013,3 +1256,10 @@ def run(algo: algorithm_lib.Algorithm,
     extras["transfers_d2h"] = transfers["d2h"]
     return RunResult(params=algo.get_params(state), history=rec.history(),
                      extras=extras)
+
+
+# Batched hyperparameter sweeps (one staged device program per fig sweep)
+# live in core.sweep; re-exported here so `runner.run_sweep` is the public
+# entry next to `runner.run`.  The import sits at module bottom because
+# sweep builds on the planner/executor machinery above.
+from .sweep import SweepResult, run_sweep  # noqa: E402

@@ -86,6 +86,7 @@ __all__ = [
     "select_backend_name",
     "resolve_backend",
     "node_param_count",
+    "batch_phis",
 ]
 
 F32_BYTES = 4
@@ -138,6 +139,31 @@ def node_param_count(tree) -> int:
     """Per-node parameter count of a stacked pytree (leaves (m, ...))."""
     return sum(int(np.prod(leaf.shape[1:], dtype=np.int64))
                for leaf in jax.tree.leaves(tree))
+
+
+def batch_phis(phis: "list") -> Any:
+    """Stack per-cell wire representations along a new leading CELL axis —
+    the batched-sweep staging primitive (the runner's chunk stacking then
+    prepends the time axis, giving (T, B, ...) phi leaves that a vmapped
+    chunk executor slices per cell).
+
+    Every phi must share its pytree STRUCTURE including static aux data
+    (same ``BandedPhi`` offset union, same ``PermutePhi`` mesh/axis): the
+    compiled step specializes on the aux, so cells gossiping over
+    structurally different wire formats cannot ride one batched program —
+    the clear error here is what the sweep driver surfaces for such ragged
+    grids (use ``gossip="dense"``, whose (m, m) wire format is structure-
+    free, to batch across arbitrary topologies).  Leaf dtypes are
+    preserved (integer quantized payloads must not widen to f32)."""
+    defs = {str(jax.tree.structure(p)) for p in phis}
+    if len(defs) > 1:
+        raise ValueError(
+            f"cannot batch gossip wire representations with different "
+            f"static structure across sweep cells: {sorted(defs)}; cells "
+            f"whose schedules decompose into different band/permute "
+            f"structures need gossip='dense' to share one batched program")
+    return jax.tree.map(
+        lambda *leaves: np.stack([np.asarray(l) for l in leaves]), *phis)
 
 
 def _active_bands(offsets: tuple, coeffs, m: int) -> list:
