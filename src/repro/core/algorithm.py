@@ -54,11 +54,13 @@ __all__ = [
     "build_dpsvrg_inner_step",
     "build_dspg_step",
     "build_gt_svrg_inner_step",
+    "build_dvr_inner_step",
     "dpsvrg_algorithm",
     "dspg_algorithm",
     "dpg_algorithm",
     "gt_svrg_algorithm",
     "loopless_dpsvrg_algorithm",
+    "dvr_algorithm",
     "ALGORITHMS",
 ]
 
@@ -322,6 +324,45 @@ def build_gt_svrg_inner_step(loss_fn: Callable, prox: prox_lib.Prox):
     return _shared_step(("gt_svrg_inner", loss_fn, prox), make)
 
 
+def build_dvr_inner_step(loss_fn: Callable, prox: prox_lib.Prox, rho: float):
+    """Dual-Free DVR inner update (Hendrikx et al., arXiv 2006.14384),
+    adapted to this runner's primal sampled-batch interface.
+
+    Exact DVR runs dual-free coordinate ascent with a PER-SAMPLE dual table
+    z_ij and needs the sampled indices j to update it; the runner's sampling
+    contract hands steps batch VALUES only.  What this plugin keeps is DVR's
+    structure that the paper's multi-consensus lacks: variance-reduced local
+    computation DECOUPLED from a partial communication step with its own
+    step size ``rho`` (DVR's p_comm-scaled gossip) —
+
+        v  = SVRG-corrected gradient          (dual-free VR surrogate)
+        y  = x - alpha v                      (local computation step)
+        x' = prox_h((1-rho) y + rho W y)      (damped gossip: rho = 1 is the
+                                               usual full mixing, rho < 1
+                                               trades consensus for staleness
+                                               tolerance)
+
+    The mix routes through ``compression.mix_with_state`` so DVR rides
+    stateful transports (compressed / scenario) like the DPSVRG family.
+    """
+    def make():
+        node_grad = build_node_grad_fn(loss_fn)
+
+        @jax.jit
+        def step(params, est, batch, phi, alpha, cstate):
+            v = svrg.corrected_gradient(node_grad, params, est, batch)
+            y = jax.tree.map(lambda x, vi: x - alpha * vi.astype(x.dtype),
+                             params, v)
+            y_mixed, cstate = compression.mix_with_state(phi, y, cstate)
+            q = jax.tree.map(lambda a, b: (1.0 - rho) * a + rho * b,
+                             y, y_mixed)
+            return prox.apply(q, alpha), cstate
+
+        return step
+
+    return _shared_step(("dvr_inner", loss_fn, prox, rho), make)
+
+
 # ---------------------------------------------------------------------------
 # Protocol: declarative metadata + the state/step/outer triple
 # ---------------------------------------------------------------------------
@@ -572,9 +613,12 @@ def dpsvrg_algorithm(problem: Problem, hp: DPSVRGHyperParams) -> Algorithm:
         return DPSVRGState(params=problem.x0, anchor=problem.x0, est=None,
                            inner_sum=_zeros_like(problem.x0), cstate=cstate)
 
-    def init_mix_state(state):
-        # the compressed transport threads its residual through cstate
-        return state._replace(cstate=compression.init_state(problem.x0))
+    def init_mix_state(state, make=compression.init_state):
+        # the stateful transport threads its state through cstate; ``make``
+        # defaults to the compressed backend's error-feedback residual, and
+        # the runner passes the resolved backend's own initializer (bound to
+        # its aux) for other stateful transports (scenario delay buffers)
+        return state._replace(cstate=make(problem.x0))
 
     def outer(state):
         est = svrg.SvrgState(snapshot=state.anchor,
@@ -697,11 +741,10 @@ def gt_svrg_algorithm(problem: Problem, alpha: float, num_outer: int,
                            tracker=est.full_grad, v_prev=est.full_grad,
                            inner_sum=_zeros_like(problem.x0))
 
-    def init_mix_state(state):
-        # one error-feedback residual per transmitted quantity: the step
-        # gossips both the iterate and the tracking direction
-        return state._replace(cstate=(compression.init_state(problem.x0),
-                                      compression.init_state(problem.x0)))
+    def init_mix_state(state, make=compression.init_state):
+        # one transport state per transmitted quantity: the step gossips
+        # both the iterate and the tracking direction
+        return state._replace(cstate=(make(problem.x0), make(problem.x0)))
 
     def outer(state):
         est = svrg.SvrgState(snapshot=state.anchor,
@@ -756,8 +799,8 @@ def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
                              full_grad=full_grad_fn(problem.x0))
         return LooplessState(params=problem.x0, est=est)
 
-    def init_mix_state(state):
-        return state._replace(cstate=compression.init_state(problem.x0))
+    def init_mix_state(state, make=compression.init_state):
+        return state._replace(cstate=make(problem.x0))
 
     def outer(state):
         return state._replace(est=svrg.SvrgState(
@@ -788,10 +831,58 @@ def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
                      outer_traced=_loopless_outer_traced(problem.loss_fn))
 
 
+def dvr_algorithm(problem: Problem, alpha: float, num_steps: int,
+                  rho: float = 0.5, snapshot_prob: float = 0.05,
+                  batch_size: int = 1) -> Algorithm:
+    """Dual-Free DVR (Hendrikx et al., arXiv 2006.14384) — see
+    :func:`build_dvr_inner_step` for the adaptation notes.  Flat loop with
+    loopless coin-flip snapshot refreshes (DVR samples its full-gradient
+    resyncs the same way); one gossip round per step with communication step
+    size ``rho`` — the scenario matrix's non-gradient-tracking VR column."""
+    inner = build_dvr_inner_step(problem.loss_fn, problem.prox, rho)
+    full_grad_fn = build_node_full_grad_fn(problem.loss_fn, problem.full_data)
+
+    def init():
+        est = svrg.SvrgState(snapshot=problem.x0,
+                             full_grad=full_grad_fn(problem.x0))
+        return LooplessState(params=problem.x0, est=est)
+
+    def init_mix_state(state, make=compression.init_state):
+        return state._replace(cstate=make(problem.x0))
+
+    def outer(state):
+        return state._replace(est=svrg.SvrgState(
+            snapshot=state.params, full_grad=full_grad_fn(state.params)))
+
+    def make_step():
+        def step(state, batch, phi, alpha):
+            params, cstate = inner(state.params, state.est, batch, phi,
+                                   alpha, state.cstate)
+            return state._replace(params=params, cstate=cstate)
+        return step
+
+    step = _shared_step(("dvr_proto_step", inner), make_step)
+
+    meta = AlgoMeta(
+        name="dvr",
+        stepsize=schedules.constant(alpha),
+        num_steps=num_steps,
+        batch_size=batch_size,
+        step_grad_factor=2,
+        outer_full_grad=True,
+        init_full_grad=True,
+        snapshot_prob=snapshot_prob,
+    )
+    return Algorithm(meta=meta, init=init, step=step, outer=outer,
+                     rule=DPSVRG_RULE, init_mix_state=init_mix_state,
+                     outer_traced=_loopless_outer_traced(problem.loss_fn))
+
+
 ALGORITHMS: dict[str, Callable[..., Algorithm]] = {
     "dpsvrg": dpsvrg_algorithm,
     "dspg": dspg_algorithm,
     "dpg": dpg_algorithm,
     "gt_svrg": gt_svrg_algorithm,
     "loopless_dpsvrg": loopless_dpsvrg_algorithm,
+    "dvr": dvr_algorithm,
 }

@@ -30,7 +30,21 @@ import jax.numpy as jnp
 from . import gossip
 
 __all__ = ["CompressionState", "init_state", "quantize_leaf",
-           "compressed_mix", "CompressedPhi", "mix_with_state"]
+           "compressed_mix", "CompressedPhi", "mix_with_state",
+           "register_mix_handler"]
+
+# Extension point: phi pytree types (beyond CompressedPhi) with their own
+# stateful mix semantics.  {phi_type: handler(phi, tree, state) ->
+# (mixed, new_state)}.  Registered types are also marked stateful-only in
+# gossip.mix_stacked so stateless call sites fail loudly.
+_MIX_HANDLERS: dict = {}
+
+
+def register_mix_handler(phi_type: type, handler) -> None:
+    """Route ``mix_with_state`` calls on ``phi_type`` phis to ``handler``
+    (signature ``handler(phi, tree, state) -> (mixed, new_state)``)."""
+    _MIX_HANDLERS[phi_type] = handler
+    gossip.mark_stateful(phi_type)
 
 
 class CompressionState(NamedTuple):
@@ -104,6 +118,12 @@ class CompressedPhi:
         return f"CompressedPhi(bits={self.bits}, inner={self.inner!r})"
 
 
+# stateless mix_stacked would previously die inside jnp.asarray with an
+# opaque conversion error; the stateful-only mark turns that into a clear
+# "thread a mix state" TypeError
+gossip.mark_stateful(CompressedPhi)
+
+
 def mix_with_state(phi, tree, state: CompressionState | None):
     """Transport-dispatching mix for steps that thread a mix state.
 
@@ -111,8 +131,12 @@ def mix_with_state(phi, tree, state: CompressionState | None):
     returned untouched, and may be None); a :class:`CompressedPhi` routes to
     :func:`compressed_mix` with its inner wire format.  The isinstance check
     happens at trace time (phi's type is pytree structure), so jitted steps
-    specialize per transport with zero runtime dispatch cost.
+    specialize per transport with zero runtime dispatch cost.  Types added
+    via :func:`register_mix_handler` (scenario transports) dispatch first.
     """
+    handler = _MIX_HANDLERS.get(type(phi))
+    if handler is not None:
+        return handler(phi, tree, state)
     if isinstance(phi, CompressedPhi):
         if state is None:
             raise ValueError(

@@ -89,6 +89,21 @@ def broadcast_to_nodes(tree_mean, m: int):
     return stack_tree(tree_mean, m)
 
 
+# Phi pytree types whose mixing REQUIRES a threaded transport state (error
+# feedback, delay buffers, ...): stateless mix_stacked cannot apply them.
+# compression/ scenario modules register their types via mark_stateful so
+# algorithms that bypass compression.mix_with_state (plain prox-gossip) fail
+# loudly instead of silently dropping the state semantics.
+_STATEFUL_ONLY: tuple = ()
+
+
+def mark_stateful(phi_type: type) -> None:
+    """Register a phi pytree type as stateful-only (see ``_STATEFUL_ONLY``)."""
+    global _STATEFUL_ONLY
+    if phi_type not in _STATEFUL_ONLY:
+        _STATEFUL_ONLY = _STATEFUL_ONLY + (phi_type,)
+
+
 def mix_stacked(phi, tree):
     """One consensus application: leaf <- einsum('ij,j...->i...', phi, leaf).
 
@@ -98,6 +113,14 @@ def mix_stacked(phi, tree):
     contraction is dispatched to the O(degree) cyclic-band collectives of
     :func:`mix_stacked_banded` / :func:`mix_stacked_permute`.
     """
+    if _STATEFUL_ONLY and isinstance(phi, _STATEFUL_ONLY):
+        raise TypeError(
+            f"{type(phi).__name__} mixing is stateful (error feedback / "
+            f"delay buffers) and cannot run through the stateless "
+            f"gossip.mix_stacked: the driven algorithm must route mixing "
+            f"through compression.mix_with_state and thread a mix state "
+            f"(Algorithm.init_mix_state) — only DPSVRG-family algorithms "
+            f"do; dspg/dpg support stateless transports only")
     if isinstance(phi, BandedPhi):
         return mix_stacked_banded(phi.offsets, phi.coeffs, tree)
     if isinstance(phi, PermutePhi):

@@ -173,6 +173,27 @@ class MixingSchedule:
     def period(self) -> int:
         return len(self.matrices)
 
+    @property
+    def aperiodic(self) -> bool:
+        """True when ``matrix(t)`` is NOT a pure function of ``t % period``.
+
+        Transport caches key their per-slot phi products on
+        ``slot % period`` only when this is False; scenario wrappers that
+        degrade matrices per absolute step override this.
+        """
+        return False
+
+    @property
+    def structure_schedule(self) -> "MixingSchedule":
+        """Schedule whose sparsity pattern bounds this one's (self here).
+
+        Scenario wrappers return their base schedule: a degraded matrix only
+        ever REMOVES edges, and supports of products of nonnegative matrices
+        are monotone in the factor supports, so band/offset unions computed
+        on the base schedule are valid (superset) for the wrapper.
+        """
+        return self
+
     def matrix(self, t: int) -> np.ndarray:
         return self.matrices[t % self.period]
 
@@ -196,12 +217,25 @@ class MixingSchedule:
             t += 1
 
 
+def _as_rng(seed) -> np.random.Generator:
+    """Accept either an int seed or an already-constructed Generator.
+
+    Passing a Generator lets callers keep schedule randomness on a stream
+    that cannot alias a scenario/failure stream built from the same int.
+    """
+    if isinstance(seed, np.random.Generator):
+        return seed
+    return np.random.default_rng(seed)
+
+
 def static_schedule(w: np.ndarray, name: str = "static") -> MixingSchedule:
     eta = float(w[w > 1e-12].min()) if (w > 1e-12).any() else 0.0
     return MixingSchedule(matrices=(w,), b=1, eta=eta, name=name)
 
 
-def b_connected_ring_schedule(m: int, b: int, seed: int = 0) -> MixingSchedule:
+def b_connected_ring_schedule(m: int, b: int,
+                              seed: "int | np.random.Generator" = 0,
+                              ) -> MixingSchedule:
     """Paper Section V-D: a set of ``b`` doubly-stochastic matrices such that
     only the union of all ``b`` of them is connected; matrices are cycled
     periodically, so the sequence is b-connected.
@@ -212,7 +246,7 @@ def b_connected_ring_schedule(m: int, b: int, seed: int = 0) -> MixingSchedule:
     """
     if b <= 1:
         return static_schedule(ring_matrix(m), name=f"ring{m}")
-    rng = np.random.default_rng(seed)
+    rng = _as_rng(seed)
     edges = [(i, (i + 1) % m) for i in range(m)]
     order = list(rng.permutation(m))
     # Greedy matching partition: place every ring edge into one of the b
@@ -246,12 +280,16 @@ def b_connected_ring_schedule(m: int, b: int, seed: int = 0) -> MixingSchedule:
 
 
 def random_b_connected_schedule(m: int, b: int, p_keep: float = 0.5,
-                                seed: int = 0) -> MixingSchedule:
+                                seed: "int | np.random.Generator" = 0,
+                                ) -> MixingSchedule:
     """Random time-varying graphs: each slot keeps a random subset of a base
     connected graph's edges; every b-th slot inserts the full ring to
     guarantee b-connectivity.  Metropolis weights keep double stochasticity.
+
+    ``seed`` may be an int or an ``np.random.Generator`` (the latter keeps
+    schedule draws on a stream disjoint from scenario-event streams).
     """
-    rng = np.random.default_rng(seed)
+    rng = _as_rng(seed)
     mats = []
     for t in range(b):
         adj = np.zeros((m, m), dtype=bool)

@@ -89,6 +89,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import functools
+import inspect
 import warnings
 import weakref
 from typing import Any, Callable, NamedTuple
@@ -907,13 +908,7 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
     transfers["h2d"] += 1
 
     state = algo.init()
-    if backend.needs_mix_state:
-        if algo.init_mix_state is None:
-            raise ValueError(
-                f"{meta.name} does not thread a gossip mix state "
-                f"(Algorithm.init_mix_state is None), so it cannot be "
-                f"driven by the stateful {backend.name!r} transport")
-        state = algo.init_mix_state(state)
+    state = inject_mix_state(algo, backend, aux, state)
     if transitions and algo.device_state is not None:
         state = algo.device_state(state)
     state = _shield_for_donation(state)
@@ -973,6 +968,28 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
 # The driver
 # ---------------------------------------------------------------------------
 
+def inject_mix_state(algo, backend, aux, state):
+    """Give ``state`` the transport state a stateful backend needs.
+
+    The algorithm owns WHERE the state lives (its ``cstate`` slot(s), via
+    ``Algorithm.init_mix_state``); the backend owns WHAT the state is.
+    Factories whose ``init_mix_state`` takes a ``make`` initializer get the
+    resolved backend's own ``init_mix_state(aux, x0)`` bound to its aux
+    (scenario delay buffers, ...); legacy single-argument initializers keep
+    their built-in error-feedback default (tests call them directly)."""
+    if not backend.needs_mix_state:
+        return state
+    if algo.init_mix_state is None:
+        raise ValueError(
+            f"{algo.meta.name} does not thread a gossip mix state "
+            f"(Algorithm.init_mix_state is None), so it cannot be "
+            f"driven by the stateful {backend.name!r} transport")
+    if len(inspect.signature(algo.init_mix_state).parameters) >= 2:
+        return algo.init_mix_state(
+            state, make=functools.partial(backend.init_mix_state, aux))
+    return algo.init_mix_state(state)
+
+
 def _resolved_backend(gossip, schedule, meta, mesh):
     """Resolve the transport and honor hp-level quantization: a method that
     quantizes its own gossip payload (``AlgoMeta.compress_bits``) gets its
@@ -981,6 +998,13 @@ def _resolved_backend(gossip, schedule, meta, mesh):
     compressed transports raise)."""
     backend = transport.resolve_backend(gossip, schedule, meta, mesh)
     if meta.compress_bits is not None:
+        if getattr(backend, "scenario_transport", False):
+            raise ValueError(
+                f"the algorithm quantizes its own gossip "
+                f"(meta.compress_bits={meta.compress_bits}) but the "
+                f"requested scenario transport owns the full wire stack — "
+                f"pass the quantization inside the scenario spec "
+                f"(compress_bits=...) instead")
         if isinstance(backend, transport.CompressedBackend):
             if backend.bits != meta.compress_bits:
                 raise ValueError(
@@ -1097,13 +1121,7 @@ def run(algo: algorithm_lib.Algorithm,
         host_data = problem.full_data
 
     state = algo.init()
-    if backend.needs_mix_state:
-        if algo.init_mix_state is None:
-            raise ValueError(
-                f"{meta.name} does not thread a gossip mix state "
-                f"(Algorithm.init_mix_state is None), so it cannot be "
-                f"driven by the stateful {backend.name!r} transport")
-        state = algo.init_mix_state(state)
+    state = inject_mix_state(algo, backend, aux, state)
     grad_evals = m * n if meta.init_full_grad else 0
     full_grad_cost = m * n
     comm = 0

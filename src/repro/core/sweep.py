@@ -510,15 +510,9 @@ def run_sweep(build: Callable,
     transfers["h2d"] += 1
 
     states = []
-    for algo, _ in built:
+    for (algo, _), aux in zip(built, auxes):
         state = algo.init()
-        if backend.needs_mix_state:
-            if algo.init_mix_state is None:
-                raise ValueError(
-                    f"{meta0.name} does not thread a gossip mix state "
-                    f"(Algorithm.init_mix_state is None), so it cannot be "
-                    f"driven by the stateful {backend.name!r} transport")
-            state = algo.init_mix_state(state)
+        state = runner_lib.inject_mix_state(algo, backend, aux, state)
         if algo.device_state is not None:
             state = algo.device_state(state)
         states.append(state)

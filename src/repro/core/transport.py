@@ -67,7 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, Iterator, NamedTuple
 
 import jax
 import numpy as np
@@ -125,7 +125,14 @@ def band_offset_union(schedule: graphs.MixingSchedule, meta) -> tuple:
     """The static band-offset union a compiled banded step must support:
     offsets of every `rounds`-product the schedule can produce, for every
     rounds value the gossip policy will request.  Early-exits once the union
-    saturates at m offsets (no structure left to exploit)."""
+    saturates at m offsets (no structure left to exploit).
+
+    Computed on ``schedule.structure_schedule``: an aperiodic scenario
+    wrapper only ever removes edges from its base schedule, and supports of
+    products of nonnegative matrices are monotone in the factor supports, so
+    the base schedule's (finitely enumerable) union is a valid superset for
+    every degraded realization."""
+    schedule = schedule.structure_schedule
     m = schedule.m
     offs: set = set()
     for rounds in _rounds_values(meta):
@@ -133,6 +140,18 @@ def band_offset_union(schedule: graphs.MixingSchedule, meta) -> tuple:
         if len(offs) >= m:
             break
     return tuple(sorted(offs))
+
+
+def _phi_key(schedule: graphs.MixingSchedule, slot: int, rounds: int):
+    """Memoization key for a per-slot wire representation.
+
+    Periodic schedules repeat every ``period`` slots, so steady-state steps
+    hit the cache; aperiodic (scenario-degraded) schedules key on the
+    absolute slot — every step's realized product is cached under its own
+    key, which is still a win for repeated runs over the same aux."""
+    if schedule.aperiodic:
+        return (slot, rounds)
+    return (slot % schedule.period, rounds)
 
 
 def node_param_count(tree) -> int:
@@ -166,30 +185,38 @@ def batch_phis(phis: "list") -> Any:
         lambda *leaves: np.stack([np.asarray(l) for l in leaves]), *phis)
 
 
-def _active_bands(offsets: tuple, coeffs, m: int) -> list:
-    """Off-diagonal band offsets that actually carry mass this step."""
+def _active_entries(offsets: tuple, coeffs, m: int) -> Iterator:
+    """(band offset d, node i) pairs whose coefficient actually carries mass
+    this step: node i receives ``x_{(i+d) mod m}`` with weight coeffs[b][i].
+
+    Per-ENTRY (not whole-band) so links a failure model dropped at this step
+    — whose Metropolis reweighting zeroes exactly those coefficients — are
+    not charged."""
     c = np.asarray(coeffs)
-    return [d for b, d in enumerate(offsets)
-            if d % m != 0 and np.any(np.abs(c[b]) > 1e-12)]
+    for b, d in enumerate(offsets):
+        if d % m == 0:
+            continue
+        for i in np.flatnonzero(np.abs(c[b]) > 1e-12):
+            yield d, int(i)
 
 
 def _banded_wire_bytes(offsets: tuple, coeffs, m: int,
                        param_count: int) -> int:
     """Point-to-point accounting for band-structured gossip: each nonzero
-    off-diagonal band moves one param vector per node."""
-    return len(_active_bands(offsets, coeffs, m)) * m * param_count * F32_BYTES
+    off-diagonal coefficient moves one param vector over one link."""
+    n = sum(1 for _ in _active_entries(offsets, coeffs, m))
+    return n * param_count * F32_BYTES
 
 
 def _banded_link_bytes(offsets: tuple, coeffs, m: int,
                        param_count: int) -> dict:
     """Per-directed-link refinement of :func:`_banded_wire_bytes`: band
-    ``d`` means node ``i`` receives ``x_{(i+d) mod m}``, i.e. one param
-    vector moves over the link ``(i+d) mod m -> i`` for every node."""
+    ``d`` at node ``i`` means one param vector moves over the link
+    ``(i+d) mod m -> i``."""
     links: dict = {}
-    for d in _active_bands(offsets, coeffs, m):
-        for i in range(m):
-            key = ((i + d) % m, i)
-            links[key] = links.get(key, 0) + param_count * F32_BYTES
+    for d, i in _active_entries(offsets, coeffs, m):
+        key = ((i + d) % m, i)
+        links[key] = links.get(key, 0) + param_count * F32_BYTES
     return links
 
 
@@ -222,6 +249,14 @@ class GossipBackend:
         for stateless backends (the dispatch algorithm steps rely on)."""
         return gossip.mix_stacked(phi, tree)
 
+    def init_mix_state(self, aux, x0):
+        """Per-run transport state threaded through the algorithm state
+        (``needs_mix_state`` backends only).  ``x0`` is the stacked initial
+        iterate — the state the first mix sees."""
+        raise NotImplementedError(
+            f"gossip backend {self.name!r} is stateless (needs_mix_state="
+            f"{self.needs_mix_state})")
+
     def bytes_per_step(self, aux, phi, param_count: int) -> int:
         """Wire bytes this step's mix moves across node links."""
         raise NotImplementedError
@@ -248,7 +283,7 @@ class DenseBackend(GossipBackend):
         return _DenseAux(schedule, schedule.m, {})
 
     def phi_for(self, aux, slot, rounds):
-        key = (slot % aux.schedule.period, rounds)
+        key = _phi_key(aux.schedule, slot, rounds)
         phi = aux.cache.get(key)
         if phi is None:
             phi = aux.cache[key] = aux.schedule.consensus_rounds(slot, rounds)
@@ -293,7 +328,7 @@ class BandedBackend(GossipBackend):
         return _BandedAux(schedule, schedule.m, offsets, {})
 
     def phi_for(self, aux, slot, rounds):
-        key = (slot % aux.schedule.period, rounds)
+        key = _phi_key(aux.schedule, slot, rounds)
         phi = aux.cache.get(key)
         if phi is None:
             phi = aux.cache[key] = gossip.BandedPhi.from_dense(
@@ -359,7 +394,7 @@ class PPermuteBackend(GossipBackend):
                            mesh, axis, {})
 
     def phi_for(self, aux, slot, rounds):
-        key = (slot % aux.schedule.period, rounds)
+        key = _phi_key(aux.schedule, slot, rounds)
         phi = aux.cache.get(key)
         if phi is None:
             phi = aux.cache[key] = gossip.PermutePhi.from_dense(

@@ -112,3 +112,15 @@ def test_spectral_gap_ordering():
     full = graphs.spectral_gap(graphs.fully_connected_matrix(8))
     ring = graphs.spectral_gap(graphs.ring_matrix(8))
     assert full > ring > 0
+
+@pytest.mark.parametrize("ctor", [graphs.random_b_connected_schedule,
+                                  graphs.b_connected_ring_schedule])
+def test_schedule_ctors_accept_generator_seed(ctor):
+    """Passing a np.random.Generator draws the same matrices as the int
+    seed that spawned it — so callers can hand schedule construction its
+    own dedicated stream (keeping scenario-event seeds disjoint)."""
+    a = ctor(6, b=3, seed=11)
+    b = ctor(6, b=3, seed=np.random.default_rng(11))
+    assert a.period == b.period
+    for t in range(a.period):
+        np.testing.assert_array_equal(a.matrix(t), b.matrix(t))
