@@ -6,8 +6,13 @@ decoder LM for a few hundred steps on synthetic token streams.
 
 The default config is ~100M params (12L x 512d x 32k vocab).  On this CPU
 container expect a few seconds/step; pass --d-model 128 --layers 4
---vocab 2048 for a quick demo.  The same TrainerConfig drives the
-production mesh path (see repro/launch/train.py).
+--vocab 2048 for a quick demo.  Execution defaults to the device-resident
+chunked path (one staging transfer, one metrics pull per log window) —
+pass --host for the per-step reference loop; the two produce identical
+histories.  --resume continues bitwise from the newest checkpoint in
+--ckpt-dir, and --tracker jsonl:<path> streams metrics as JSON lines.
+The same TrainerConfig drives the production mesh path (see
+repro/launch/train.py).
 """
 
 import argparse
@@ -33,10 +38,27 @@ def main():
     ap.add_argument("--algorithm", default="dpsvrg",
                     choices=["dpsvrg", "dspg"])
     ap.add_argument("--gossip", default="auto",
-                    choices=["auto", "dense", "banded", "ppermute"],
+                    choices=["auto", "dense", "banded", "ppermute",
+                             "compressed"],
                     help="transport backend (transport.GOSSIP_BACKENDS); "
                          "auto picks banded on band-structured schedules")
+    path = ap.add_mutually_exclusive_group()
+    path.add_argument("--resident", dest="resident", action="store_true",
+                      default=True,
+                      help="device-resident chunked execution (default)")
+    path.add_argument("--host", dest="resident", action="store_false",
+                      help="per-step host loop (reference semantics)")
+    ap.add_argument("--sampling", default="host", choices=["host", "device"],
+                    help="draw minibatch windows on host (matches --host "
+                         "bitwise) or inside the compiled chunk body")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--keep-last", type=int, default=0,
+                    help="prune all but N newest checkpoints (0 = keep all)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest checkpoint in --ckpt-dir")
+    ap.add_argument("--tracker", default="",
+                    help="extra metrics sink, e.g. jsonl:/tmp/metrics.jsonl")
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -50,32 +72,34 @@ def main():
     n = transformer.param_count(
         jax.eval_shape(lambda k: transformer.init_params(cfg, k),
                        jax.random.PRNGKey(0)))
-    print(f"model: {cfg.name}, {n/1e6:.1f}M params, {args.nodes} nodes")
+    print(f"model: {cfg.name}, {n/1e6:.1f}M params, {args.nodes} nodes, "
+          f"{'resident' if args.resident else 'host'} path")
 
     stream = synthetic.make_token_stream(2_000_000, cfg.vocab_size, seed=0)
     ld = loader.LMLoader(stream.tokens, num_nodes=args.nodes,
                          per_node_batch=args.batch, seq_len=args.seq)
-
-    def batches():
-        for toks, labs in ld:
-            yield {"tokens": toks, "labels": labs}
 
     sched = graphs.b_connected_ring_schedule(args.nodes, b=2, seed=0)
     tc = trainer.TrainerConfig(
         num_steps=args.steps, snapshot_every=max(args.steps // 6, 25),
         alpha=args.alpha, consensus_rounds=2, algorithm=args.algorithm,
         gossip=args.gossip, log_every=10, ckpt_dir=args.ckpt_dir or None,
-        ckpt_every=100 if args.ckpt_dir else 0)
+        ckpt_every=args.ckpt_every or (100 if args.ckpt_dir else 0),
+        keep_last=args.keep_last or None,
+        resident=args.resident, sampling=args.sampling,
+        tracker=args.tracker or None)
     t0 = time.time()
-    hist = trainer.train_loop(cfg, prox.l1(args.lam), sched, batches(), tc)
+    hist = trainer.train_loop(cfg, prox.l1(args.lam), sched, ld, tc,
+                              resume=args.resume)
     dt = time.time() - t0
-    print(f"\nstep  loss    v_norm      wire_MB")
-    for s, l, v, w in zip(hist["step"], hist["loss"], hist["v_norm"],
-                          hist["wire_bytes"]):
-        print(f"{s:5d} {l:7.4f} {v:9.2f} {w / 1e6:10.1f}")
+    print(f"\nstep  loss    v_norm      wire_MB   alpha")
+    for s, l, v, w, a in zip(hist["step"], hist["loss"], hist["v_norm"],
+                             hist["wire_bytes"], hist["alpha"]):
+        print(f"{s:5d} {l:7.4f} {v:9.2f} {w / 1e6:10.1f} {a:9.5f}")
     print(f"\n{args.steps} steps in {dt:.1f}s "
-          f"({dt / args.steps * 1e3:.0f} ms/step); "
-          f"loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f}")
+          f"({dt / max(args.steps, 1) * 1e3:.0f} ms/step); "
+          f"loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f}; "
+          f"transfers {hist['transfers']}")
 
 
 if __name__ == "__main__":

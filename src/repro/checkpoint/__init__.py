@@ -49,8 +49,35 @@ def _flatten_with_paths(tree):
     return out, dtypes
 
 
-def save(directory: str, step: int, tree, metadata: dict | None = None) -> str:
+def _sweep_orphan_tmpdirs(directory: str) -> None:
+    """Remove ``.tmp_ckpt_*`` leftovers from interrupted saves.  An
+    interrupted ``save`` dies between mkdtemp and the atomic rename, so any
+    tmp dir present when a NEW save starts is garbage by construction
+    (single-writer format — concurrent savers already race on the final
+    rename)."""
+    for name in os.listdir(directory):
+        if name.startswith(".tmp_ckpt_"):
+            shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+
+
+def _prune_old(directory: str, keep_last: int) -> None:
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for step in steps[:-keep_last] if keep_last else steps:
+        shutil.rmtree(os.path.join(directory, f"step_{step:08d}"),
+                      ignore_errors=True)
+
+
+def save(directory: str, step: int, tree, metadata: dict | None = None,
+         keep_last: int | None = None) -> str:
+    """Atomic checkpoint write.  ``keep_last=N`` prunes all but the N newest
+    ``step_*`` dirs after a successful write (None keeps everything);
+    orphaned ``.tmp_ckpt_*`` dirs from previously interrupted saves are
+    swept on entry either way."""
+    if keep_last is not None and keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
     os.makedirs(directory, exist_ok=True)
+    _sweep_orphan_tmpdirs(directory)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
     try:
@@ -66,6 +93,8 @@ def save(directory: str, step: int, tree, metadata: dict | None = None) -> str:
     except Exception:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    if keep_last is not None:
+        _prune_old(directory, keep_last)
     return final
 
 

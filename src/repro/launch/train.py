@@ -1,14 +1,21 @@
 """Production training driver.
 
-Two modes:
-  * ``--local`` (default on this container): CPU-scale decentralized
-    training of any smoke-reduced assigned architecture through the full
-    trainer stack.
-  * ``--mesh single|multi``: builds the production mesh (requires the real
-    slice, or the dry-run device forcing) and runs the sharded step.
+Config-driven front end for ``trainer.train_loop``:
+
+  * execution path: ``--resident`` (device-resident chunked scan, the
+    default) or ``--host`` (one dispatch per step); ``--sampling device``
+    moves minibatch drawing into the compiled chunk body,
+  * persistence: ``--ckpt-dir``/``--ckpt-every``/``--keep-last``, and
+    ``--resume`` to continue bitwise from ``checkpoint.latest_step``,
+  * metrics: ``--tracker jsonl:<path>`` streams one JSON line per log
+    window next to the in-memory history,
+  * ``--mesh single|multi``: builds the production mesh (requires the
+    real slice, or the dry-run device forcing) and runs the sharded
+    host-loop step.
 
     PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
-        --steps 50 --local
+        --steps 50 --resident --ckpt-dir /tmp/run0 --ckpt-every 25 \
+        --tracker jsonl:/tmp/run0/metrics.jsonl
 """
 
 from __future__ import annotations
@@ -25,8 +32,24 @@ def main():
     ap.add_argument("--lam", type=float, default=1e-6)
     ap.add_argument("--algorithm", default="dpsvrg",
                     choices=["dpsvrg", "dspg"])
-    ap.add_argument("--local", action="store_true", default=True)
+    path = ap.add_mutually_exclusive_group()
+    path.add_argument("--resident", dest="resident", action="store_true",
+                      default=True,
+                      help="device-resident chunked execution (default)")
+    path.add_argument("--host", dest="resident", action="store_false",
+                      help="per-step host loop")
+    ap.add_argument("--sampling", default="host", choices=["host", "device"],
+                    help="where minibatch window starts are drawn "
+                         "(device = inside the compiled chunk; resident only)")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--keep-last", type=int, default=0,
+                    help="prune all but the N newest checkpoints (0 = keep "
+                         "everything)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from checkpoint.latest_step(ckpt_dir)")
+    ap.add_argument("--tracker", default="",
+                    help="extra metrics sink, e.g. jsonl:/tmp/metrics.jsonl")
     args = ap.parse_args()
 
     from repro import configs
@@ -42,19 +65,21 @@ def main():
     ld = loader.LMLoader(stream.tokens, num_nodes=args.nodes,
                          per_node_batch=4, seq_len=64)
 
-    def batches():
-        for toks, labs in ld:
-            yield {"tokens": toks, "labels": labs}
-
     sched = graphs.b_connected_ring_schedule(args.nodes, b=2, seed=0)
     tc = trainer.TrainerConfig(
         num_steps=args.steps, snapshot_every=max(args.steps // 4, 10),
         alpha=args.alpha, consensus_rounds=2, algorithm=args.algorithm,
         log_every=max(args.steps // 10, 1),
         ckpt_dir=args.ckpt_dir or None,
-        ckpt_every=args.steps if args.ckpt_dir else 0)
-    hist = trainer.train_loop(cfg, prox.l1(args.lam), sched, batches(), tc)
-    print("step loss:", list(zip(hist["step"], [round(l, 4) for l in hist["loss"]])))
+        ckpt_every=args.ckpt_every or (args.steps if args.ckpt_dir else 0),
+        keep_last=args.keep_last or None,
+        resident=args.resident, sampling=args.sampling,
+        tracker=args.tracker or None)
+    hist = trainer.train_loop(cfg, prox.l1(args.lam), sched, ld, tc,
+                              resume=args.resume)
+    print("step loss:", list(zip(hist["step"],
+                                 [round(l, 4) for l in hist["loss"]])))
+    print("transfers:", hist["transfers"])
 
 
 if __name__ == "__main__":

@@ -1,3 +1,3 @@
-from . import sharding, steps, trainer
+from . import sharding, steps, tracker, trainer
 
-__all__ = ["sharding", "steps", "trainer"]
+__all__ = ["sharding", "steps", "tracker", "trainer"]

@@ -17,6 +17,7 @@ training rule for every architecture in the zoo:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Callable, NamedTuple
 
@@ -25,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import algorithm as algo_lib, gossip, prox as prox_lib, svrg
+from repro.core import algorithm as algo_lib, compression, gossip, \
+    prox as prox_lib, svrg
 from repro.models import transformer
 from repro.models.api import ModelConfig
 from . import sharding
@@ -39,6 +41,10 @@ class TrainState(NamedTuple):
     snapshot: Any          # stacked (m, ...)
     full_grad: Any         # stacked (m, ...)
     step: jax.Array
+    # transport state for stateful gossip (compressed error feedback,
+    # scenario delay FIFOs) — None for stateless wire formats, so legacy
+    # 4-field construction sites and checkpoints keep working unchanged
+    mix_state: Any = None
 
 
 class TrainBundle(NamedTuple):
@@ -79,6 +85,18 @@ def make_stacked_init(cfg: ModelConfig, m: int):
     return init
 
 
+# Rebuilt bundles with identical (cfg, prox, m, rule) are served from this
+# cache so their jitted step identities stay stable across train_loop calls
+# — what lets the trainer's compiled chunk executors (and jax.jit's own
+# cache) persist across runs, the same property algorithm._shared_step
+# gives the repro-scale runner.  Keyed on the frozen-dataclass equality of
+# cfg/prox (reusing a prox INSTANCE hits; rebuilding one recompiles, which
+# is merely slow, never wrong).
+_BUNDLE_CACHE: "collections.OrderedDict[tuple, TrainBundle]" = \
+    collections.OrderedDict()
+_BUNDLE_CACHE_MAX = 16
+
+
 def build_train_step(cfg: ModelConfig,
                      prox: prox_lib.Prox,
                      m: int,
@@ -102,6 +120,26 @@ def build_train_step(cfg: ModelConfig,
     ``repro.core.transport`` backend (see ``trainer.train_loop``)."""
     rule = (algo_lib.UPDATE_RULES[algorithm] if isinstance(algorithm, str)
             else algorithm)
+    cache_key = None
+    if plan is None and mesh is None:
+        try:
+            cache_key = (cfg, prox, m, rule, donate)
+            cached = _BUNDLE_CACHE.get(cache_key)
+        except TypeError:            # unhashable custom cfg/prox: just build
+            cache_key, cached = None, None
+        if cached is not None:
+            _BUNDLE_CACHE.move_to_end(cache_key)
+            return cached
+    bundle = _build_train_step(cfg, prox, m, plan, mesh, rule, donate)
+    if cache_key is not None:
+        _BUNDLE_CACHE[cache_key] = bundle
+        while len(_BUNDLE_CACHE) > _BUNDLE_CACHE_MAX:
+            _BUNDLE_CACHE.popitem(last=False)
+    return bundle
+
+
+def _build_train_step(cfg, prox, m, plan, mesh, rule,
+                      donate) -> TrainBundle:
     loss = transformer.loss_fn(cfg)
     vgrad = jax.vmap(jax.value_and_grad(loss))
     grad_only = jax.vmap(jax.grad(loss))
@@ -111,13 +149,26 @@ def build_train_step(cfg: ModelConfig,
         g_snap = grad_only(state.snapshot, batch) if rule.needs_snapshot \
             else None
         v = rule.direction(g_now, g_snap, state.full_grad)
+
+        # the mix threads the transport state (compressed error feedback,
+        # scenario delay FIFOs) via the dispatching mix_with_state; for
+        # stateless wire formats it degenerates to gossip.mix_stacked and
+        # the state (None) passes through untouched
+        mix_out = {}
+
+        def mix_fn(phi_, tree):
+            mixed, mix_out["state"] = compression.mix_with_state(
+                phi_, tree, state.mix_state)
+            return mixed
+
         new_params = algo_lib.prox_gossip_update(state.params, v, phi, alpha,
-                                                 prox)
+                                                 prox, mix_fn=mix_fn)
         metrics = {
             "loss": jnp.mean(losses),
             "v_norm": svrg.tree_norm(v),
         }
-        return state._replace(params=new_params, step=state.step + 1), metrics
+        return state._replace(params=new_params, step=state.step + 1,
+                              mix_state=mix_out["state"]), metrics
 
     def snapshot_step(state: TrainState, big_batch):
         """Outer loop: refresh snapshot + (large-batch) full local gradient."""

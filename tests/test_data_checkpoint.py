@@ -47,6 +47,91 @@ def test_lm_loader_shards_disjoint():
         assert t[i].min() >= i * 1000 and t[i].max() < (i + 1) * 1000
 
 
+def test_lm_loader_trailing_tokens_dropped():
+    # 4010 tokens over 4 nodes: shard_len = 1002, the trailing 2 dropped —
+    # shards stay CONTIGUOUS and DISJOINT, node i owning [i*1002, (i+1)*1002)
+    toks = np.arange(4010, dtype=np.int32)
+    ld = loader.LMLoader(toks, num_nodes=4, per_node_batch=8, seq_len=16,
+                         seed=0)
+    assert ld.shard_len == 1002
+    stacked = ld.stacked_shards()
+    assert stacked.shape == (4, 1002)
+    for i in range(4):
+        np.testing.assert_array_equal(stacked[i],
+                                      np.arange(i * 1002, (i + 1) * 1002))
+    assert 4008 not in stacked and 4009 not in stacked
+    t, _ = ld.sample()
+    for i in range(4):
+        assert t[i].min() >= i * 1002 and t[i].max() < (i + 1) * 1002
+
+
+def test_lm_loader_epoch_wrap_windows_stay_in_shard():
+    # sampling far past one epoch-worth of windows keeps drawing valid
+    # windows: starts are uniform on [0, shard_len - seq_len - 1) forever
+    toks = np.arange(4 * 40, dtype=np.int32)
+    ld = loader.LMLoader(toks, num_nodes=4, per_node_batch=4, seq_len=16,
+                         seed=3)
+    assert ld.max_start == 40 - 16 - 1
+    seen_starts = set()
+    for _ in range(50):                      # >> one epoch of 23 starts/node
+        t, l = ld.sample()
+        assert t.shape == (4, 4, 16)
+        np.testing.assert_array_equal(t[:, :, 1:], l[:, :, :-1])
+        for i in range(4):
+            assert t[i].min() >= i * 40 and l[i].max() < (i + 1) * 40
+        seen_starts.update((t[:, :, 0] % 40).ravel().tolist())
+    assert seen_starts == set(range(ld.max_start))   # full coverage, no OOB
+
+
+def test_lm_loader_seed_determinism():
+    toks = np.random.default_rng(0).integers(0, 64, 2000).astype(np.int32)
+    a = loader.LMLoader(toks, 4, 3, 16, seed=11)
+    b = loader.LMLoader(toks, 4, 3, 16, seed=11)
+    for _ in range(3):
+        ta, _ = a.sample()
+        tb, _ = b.sample()
+        np.testing.assert_array_equal(ta, tb)
+    c = loader.LMLoader(toks, 4, 3, 16, seed=12)
+    assert not np.array_equal(a.sample()[0], c.sample()[0])
+
+
+def test_lm_loader_state_dict_roundtrip():
+    toks = np.arange(2000, dtype=np.int32)
+    ld = loader.LMLoader(toks, 4, 3, 16, seed=5)
+    ld.sample()
+    cursor = ld.state_dict()
+    # the cursor is msgpack/json-safe: only str/bool/dict/list/str-hex ints
+    import json
+    json.dumps(cursor)
+    expected = [ld.sample() for _ in range(2)]
+    fresh = loader.LMLoader(toks, 4, 3, 16, seed=999)   # different seed
+    fresh.load_state_dict(cursor)
+    for (et, el), _ in zip(expected, range(2)):
+        ft, fl = fresh.sample()
+        np.testing.assert_array_equal(et, ft)
+        np.testing.assert_array_equal(el, fl)
+
+
+def test_lm_loader_sample_starts_matches_sample_stream():
+    # index-based planning (resident trainer) and batch-based sampling
+    # consume the SAME rng stream
+    toks = np.arange(2000, dtype=np.int32)
+    a = loader.LMLoader(toks, 4, 3, 16, seed=7)
+    b = loader.LMLoader(toks, 4, 3, 16, seed=7)
+    starts = a.sample_starts()
+    assert starts.shape == (4, 3)
+    t, l = b.sample()
+    ta, la = a.gather(starts)
+    np.testing.assert_array_equal(t, ta)
+    np.testing.assert_array_equal(l, la)
+
+
+def test_lm_loader_too_short_shard_raises():
+    with pytest.raises(ValueError, match="seq_len"):
+        loader.LMLoader(np.arange(64, dtype=np.int32), num_nodes=4,
+                        per_node_batch=2, seq_len=16)
+
+
 def test_token_stream_has_structure():
     ts = synthetic.make_token_stream(20000, 64, seed=0)
     assert ts.tokens.min() >= 0 and ts.tokens.max() < 64
@@ -69,6 +154,40 @@ def test_checkpoint_roundtrip(tmp_path):
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32))
+
+
+def test_checkpoint_keep_last_prunes_old_steps(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.ones((2,))}
+    for step in (10, 20, 30):
+        ckpt.save(d, step, tree, keep_last=2)
+    names = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+    assert names == ["step_00000020", "step_00000030"]
+    assert ckpt.latest_step(d) == 30
+    back, step, _ = ckpt.restore(d, tree)
+    assert step == 30
+    # keep_last=None keeps everything
+    ckpt.save(d, 40, tree)
+    assert len([n for n in os.listdir(d) if n.startswith("step_")]) == 3
+
+
+def test_checkpoint_keep_last_validates():
+    with pytest.raises(ValueError, match="keep_last"):
+        ckpt.save("/tmp/never-created", 1, {"w": jnp.ones((1,))},
+                  keep_last=0)
+
+
+def test_checkpoint_sweeps_orphan_tmpdirs(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.ones((2,))}
+    ckpt.save(d, 1, tree)
+    # simulate an interrupted save: a stale tmp dir with partial contents
+    orphan = os.path.join(d, ".tmp_ckpt_dead")
+    os.makedirs(orphan)
+    open(os.path.join(orphan, "arrays.npz"), "wb").close()
+    ckpt.save(d, 2, tree)
+    assert not os.path.exists(orphan)
+    assert ckpt.latest_step(d) == 2
 
 
 def test_checkpoint_shape_mismatch_raises(tmp_path):

@@ -1,0 +1,76 @@
+"""Tracker protocol tests: history accumulation, jsonl sink, fan-out,
+spec resolution."""
+
+import json
+
+import pytest
+
+from repro.train import tracker as tr
+
+
+def test_history_tracker_accumulates_columns():
+    t = tr.HistoryTracker()
+    t.log_metrics({"loss": 1.0, "v_norm": 2.0}, step=0)
+    t.log_metrics({"loss": 0.5, "v_norm": 1.5}, step=10)
+    t.log_summary({"final_loss": 0.5})
+    h = t.history()
+    assert h["step"] == [0, 10]
+    assert h["loss"] == [1.0, 0.5]
+    assert h["v_norm"] == [2.0, 1.5]
+    assert t.summary == {"final_loss": 0.5}
+    # history() returns copies: mutating the view leaves the tracker intact
+    h["loss"].append(99)
+    assert t.history()["loss"] == [1.0, 0.5]
+
+
+def test_jsonl_tracker_writes_lines_and_summary(tmp_path):
+    path = tmp_path / "sub" / "metrics.jsonl"   # parent created lazily
+    t = tr.JsonlTracker(str(path))
+    assert not path.exists()                    # constructing touches nothing
+    import numpy as np
+    t.log_metrics({"loss": np.float32(1.5)}, step=3)
+    t.log_metrics({"loss": 0.75}, step=6)
+    t.log_summary({"transfers": {"h2d": 1, "d2h": 2}})
+    t.finish()
+    t.finish()                                  # idempotent
+    rows = [json.loads(l) for l in path.read_text().splitlines()]
+    assert rows[0] == {"step": 3, "loss": 1.5}
+    assert rows[1] == {"step": 6, "loss": 0.75}
+    assert rows[2] == {"summary": {"transfers": {"h2d": 1, "d2h": 2}}}
+
+
+def test_jsonl_tracker_appends_across_instances(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    a = tr.JsonlTracker(path)
+    a.log_metrics({"x": 1}, step=0)
+    a.finish()
+    b = tr.JsonlTracker(path)                   # e.g. a resumed run
+    b.log_metrics({"x": 2}, step=1)
+    b.finish()
+    assert len(open(path).readlines()) == 2
+
+
+def test_composite_tracker_fans_out():
+    h1, h2 = tr.HistoryTracker(), tr.HistoryTracker()
+    c = tr.CompositeTracker([h1, h2])
+    c.log_metrics({"loss": 1.0}, step=0)
+    c.log_summary({"done": True})
+    c.finish()
+    assert h1.history()["loss"] == [1.0] == h2.history()["loss"]
+    assert h1.summary == {"done": True} == h2.summary
+
+
+def test_resolve_tracker_specs(tmp_path):
+    assert tr.resolve_tracker(None) == []
+    h = tr.HistoryTracker()
+    assert tr.resolve_tracker(h) == [h]
+    js = tr.resolve_tracker(f"jsonl:{tmp_path}/x.jsonl")
+    assert len(js) == 1 and isinstance(js[0], tr.JsonlTracker)
+    both = tr.resolve_tracker([h, f"jsonl:{tmp_path}/y.jsonl"])
+    assert both[0] is h and isinstance(both[1], tr.JsonlTracker)
+    with pytest.raises(ValueError):
+        tr.resolve_tracker("wandb:nope")
+    with pytest.raises(ValueError):
+        tr.resolve_tracker("jsonl:")            # missing path
+    with pytest.raises(TypeError):
+        tr.resolve_tracker(42)
