@@ -14,6 +14,7 @@ restores across mesh changes).
 from __future__ import annotations
 
 import os
+import re
 import shutil
 import tempfile
 from typing import Any
@@ -60,12 +61,24 @@ def _sweep_orphan_tmpdirs(directory: str) -> None:
             shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
 
 
+# only exact step_<digits> names are checkpoints; stray entries (a user's
+# step_notes dir, editor droppings) are ignored rather than crashing saves
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _step_entries(directory: str) -> list[tuple[int, str]]:
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), name))
+    return sorted(out)
+
+
 def _prune_old(directory: str, keep_last: int) -> None:
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
-                   if d.startswith("step_"))
-    for step in steps[:-keep_last] if keep_last else steps:
-        shutil.rmtree(os.path.join(directory, f"step_{step:08d}"),
-                      ignore_errors=True)
+    entries = _step_entries(directory)
+    for _, name in entries[:-keep_last] if keep_last else entries:
+        shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
 
 
 def save(directory: str, step: int, tree, metadata: dict | None = None,
@@ -101,9 +114,8 @@ def save(directory: str, step: int, tree, metadata: dict | None = None,
 def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_")]
-    return max(steps) if steps else None
+    entries = _step_entries(directory)
+    return entries[-1][0] if entries else None
 
 
 def restore(directory: str, template, step: int | None = None):

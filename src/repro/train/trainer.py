@@ -137,6 +137,11 @@ class _LMChunk(NamedTuple):
     ckpt_next: int | None   # checkpoint step number to save, or None
     alpha_last: float       # realized alpha at last_step
     wire_end: int           # cumulative wire bytes after this chunk
+    slot_end: int           # gossip slot cursor after this chunk
+    loader_state: Any       # loader cursor snapshot AT this boundary (ckpt
+    #                         chunks only; planning consumes the rng for the
+    #                         whole run, so the live end-of-run state_dict
+    #                         would be wrong for mid-run resumes)
 
 
 def _make_lm_exec(bundle, *, vr: bool, sampling: str, seq_len: int,
@@ -258,6 +263,12 @@ def train_loop(cfg: ModelConfig,
     if resume and not (tc.ckpt_dir and is_loader):
         raise ValueError("resume=True needs ckpt_dir and an LMLoader (the "
                          "checkpoint stores the loader's data cursor)")
+    if is_loader and snapshot_batch_iter is not None:
+        raise ValueError(
+            "snapshot_batch_iter is not supported with an LMLoader: both "
+            "execution paths draw snapshot batches from the loader's own "
+            "stream (per_node_batch * snapshot_batch_mult windows) — pass a "
+            "legacy batch iterator as `data` to control snapshot batches")
     device_sampling = resident and sampling == "device"
 
     # the transport backend owns the wire format: its per-step phi pytree
@@ -313,14 +324,25 @@ def train_loop(cfg: ModelConfig,
         return bool(tc.ckpt_dir and tc.ckpt_every
                     and (step + 1) % tc.ckpt_every == 0)
 
-    def save_ckpt(cur_state, cur_key, next_step: int):
+    def save_ckpt(cur_state, cur_key, next_step: int, *,
+                  slot_at: int | None = None, wire_at: int | None = None,
+                  loader_state: dict | None = None):
+        """Write a resumable checkpoint.  The host loop's live ``slot``/
+        ``wire``/loader cursor ARE the values at the save point, so the
+        defaults suffice; the resident path plans (and thus advances all
+        three to end-of-run) before executing, so its periodic saves pass
+        the per-chunk boundary values explicitly."""
         tree = {"state": jax.device_get(cur_state)}
         if device_sampling:
             tree["key"] = jax.device_get(cur_key)
         transfers["d2h"] += 1
-        md = {"step": next_step, "slot": slot, "wire": wire,
+        if loader_state is None and is_loader:
+            loader_state = data.state_dict()
+        md = {"step": next_step,
+              "slot": slot if slot_at is None else slot_at,
+              "wire": wire if wire_at is None else wire_at,
               "algorithm": rule.name,
-              "loader": data.state_dict() if is_loader else None}
+              "loader": loader_state}
         ckpt_lib.save(tc.ckpt_dir, next_step, tree, md,
                       keep_last=tc.keep_last)
 
@@ -409,11 +431,18 @@ def train_loop(cfg: ModelConfig,
                 else:
                     xs = ((np.asarray(cur["snaps"], np.bool_), phis, alphas)
                           if vr else (phis, alphas))
+                # ckpt boundaries snapshot the loader cursor HERE: at this
+                # point planning has drawn exactly the starts the host loop
+                # would have consumed through `step`, which is the cursor a
+                # mid-run resume must restore (the live state_dict after
+                # planning completes is the END-of-run cursor)
                 chunks.append(_LMChunk(
                     xs=xs, length=len(cur["alphas"]), last_step=step,
                     record=is_record(step),
                     ckpt_next=step + 1 if is_ckpt(step) else None,
-                    alpha_last=alpha, wire_end=wire))
+                    alpha_last=alpha, wire_end=wire, slot_end=slot,
+                    loader_state=data.state_dict() if is_ckpt(step)
+                    else None))
                 cur = {k: [] for k in cur}
 
         exec_chunk = _make_lm_exec(bundle, vr=vr, sampling=sampling,
@@ -441,11 +470,11 @@ def train_loop(cfg: ModelConfig,
                 record(ch.last_step, losses[ch.length - 1],
                        vnorms[ch.length - 1], ch.alpha_last, ch.wire_end)
             if ch.ckpt_next is not None:
-                wire = ch.wire_end
-                if device_sampling:
-                    save_ckpt(carry[0], carry[1], ch.ckpt_next)
-                else:
-                    save_ckpt(carry, None, ch.ckpt_next)
+                cur_state, cur_key = (carry if device_sampling
+                                      else (carry, None))
+                save_ckpt(cur_state, cur_key, ch.ckpt_next,
+                          slot_at=ch.slot_end, wire_at=ch.wire_end,
+                          loader_state=ch.loader_state)
         state = carry[0] if device_sampling else carry
         if device_sampling:
             key = carry[1]

@@ -190,6 +190,23 @@ def test_checkpoint_sweeps_orphan_tmpdirs(tmp_path):
     assert ckpt.latest_step(d) == 2
 
 
+def test_checkpoint_ignores_stray_step_names(tmp_path):
+    # a non-numeric step_* entry (user notes, editor droppings) must not
+    # break latest_step or poison every subsequent pruning save
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.ones((2,))}
+    ckpt.save(d, 10, tree, keep_last=2)
+    os.makedirs(os.path.join(d, "step_notes"))
+    open(os.path.join(d, "step_10_copy"), "w").close()
+    assert ckpt.latest_step(d) == 10
+    ckpt.save(d, 20, tree, keep_last=2)
+    ckpt.save(d, 30, tree, keep_last=2)
+    names = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+    assert names == ["step_00000020", "step_00000030",
+                     "step_10_copy", "step_notes"]   # strays untouched
+    assert ckpt.latest_step(d) == 30
+
+
 def test_checkpoint_shape_mismatch_raises(tmp_path):
     d = str(tmp_path / "ckpt")
     ckpt.save(d, 1, {"w": jnp.ones((3,))})

@@ -5,6 +5,7 @@ round-trip through the checkpoint."""
 
 import dataclasses
 import os
+import shutil
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +72,58 @@ def test_resume_is_bitwise_continuous(tmp_path, resident, sampling):
     _assert_trees_equal(full["final_state"].full_grad,
                         res["final_state"].full_grad)
     assert int(res["final_state"].step) == 16
+
+
+@pytest.mark.parametrize("resident,sampling", [
+    (False, "host"), (True, "host"), (True, "device")])
+def test_resume_from_periodic_checkpoint(tmp_path, resident, sampling):
+    """Crash recovery: resume from a MID-RUN ``ckpt_every`` checkpoint, not
+    the end-of-run one.  On the resident path the planning loop advances
+    the gossip slot and the loader rng for the whole run before execution,
+    so periodic saves must record the per-boundary cursors — end-of-run
+    values silently break the continuation (wrong mixing matrices on
+    time-varying schedules, wrong minibatch starts)."""
+    tc = trainer.TrainerConfig(
+        num_steps=16, snapshot_every=6, log_every=4, alpha=0.05, seed=0,
+        ckpt_every=6, ckpt_dir=str(tmp_path / "full"))
+    full = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc,
+                              resident=resident, sampling=sampling)
+
+    # "crashed" run: completes, then we drop every ckpt after step 6 so the
+    # resume starts from the periodic mid-run save
+    d2 = str(tmp_path / "crash")
+    tc2 = dataclasses.replace(tc, ckpt_dir=d2)
+    trainer.train_loop(TINY, PROX, _sched(), _loader(), tc2,
+                       resident=resident, sampling=sampling)
+    for late in ("step_00000012", "step_00000016"):
+        shutil.rmtree(os.path.join(d2, late))
+    assert ckpt.latest_step(d2) == 6
+
+    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc2,
+                             resident=resident, sampling=sampling,
+                             resume=True)
+    full_by_step = dict(zip(full["step"], zip(full["loss"], full["v_norm"],
+                                              full["wire_bytes"])))
+    assert res["step"] == [8, 12, 15]
+    for s, l, v, w in zip(res["step"], res["loss"], res["v_norm"],
+                          res["wire_bytes"]):
+        assert full_by_step[s] == (l, v, w)
+    _assert_trees_equal(full["final_state"].params,
+                        res["final_state"].params)
+    _assert_trees_equal(full["final_state"].full_grad,
+                        res["final_state"].full_grad)
+
+
+def test_snapshot_batch_iter_rejected_with_loader():
+    tc = trainer.TrainerConfig(num_steps=4)
+
+    def big_batches():
+        while True:
+            yield {}
+
+    with pytest.raises(ValueError, match="snapshot_batch_iter"):
+        trainer.train_loop(TINY, PROX, _sched(), _loader(), tc,
+                           snapshot_batch_iter=big_batches())
 
 
 def test_resume_requires_ckpt_dir_and_loader(tmp_path):
