@@ -1,0 +1,238 @@
+"""Serving microbenchmark: host ``ContinuousBatcher`` vs the device-resident
+``ResidentEngine`` under a sustained synthetic stream, plus prefill/decode
+split timings at the tiny and smoke-LM shapes.
+
+The serving analogue of ``runner_bench.train_stats``:
+
+* **host vs resident ms/token** — both backends replay the SAME seeded
+  request stream (``repro.serve.stream``, Poisson arrivals fast enough to
+  saturate the slots) and the whole-stream ms/token is compared best-of-N.
+  The bench ASSERTS the two backends' per-request outputs are bit-identical
+  (each cache row's decode is independent of its batch neighbours, so
+  residency must not change a single token) and that the engine's transfer
+  ledger is O(1) per chunk: one h2d per admission (the prompt upload), one
+  d2h per chunk (the emission-buffer pull) — vs the host loop's
+  O(tokens x slots) ``int(...)`` syncs.
+* **sustained-traffic percentiles** — TTFT / TPOT p50/p95/p99 and sustained
+  tokens/s for the resident engine under the same stream
+  (``repro.serve.metrics``).
+* **prefill/decode split** — jitted+warmed ``transformer.prefill`` ms and
+  per-token decode-step ms, separately, at the tiny shape (1 layer, d16 —
+  dispatch-overhead territory, what residency amortizes) and the smoke-LM
+  shape (h2o-danube smoke variant — real per-layer work).
+
+``--json [PATH]`` merges a ``serve`` section into PATH (default
+``BENCH_runner.json``), PRESERVING the other sections, so the runner and
+serve benches can refresh the same artifact independently;
+``benchmarks.check_bench`` gates the section (speedup floor, ledger,
+output equality, calibrated regression) against the committed baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.models import transformer
+from repro.models.api import ModelConfig
+from repro.serve import metrics as metrics_lib
+from repro.serve import stream as stream_lib
+from repro.serve.engine import ResidentEngine
+from repro.serve.scheduler import ContinuousBatcher
+
+from . import common
+
+# dispatch-overhead-dominated shape (matches runner_bench's bench-lm): the
+# residency win is per-token Python/dispatch overhead, so per-token XLA
+# compute must not swamp it
+TINY = ModelConfig(name="bench-lm", arch_type="dense", num_layers=1,
+                   d_model=16, num_heads=1, num_kv_heads=1, d_ff=32,
+                   vocab_size=64)
+
+_STREAM = stream_lib.StreamConfig(
+    num_requests=24, vocab_size=TINY.vocab_size, arrival="poisson",
+    rate=2000.0,                      # saturating: arrivals never throttle
+    prompt_lens=(8, 16), new_low=8, new_high=24, seed=0)
+_SLOTS, _MAX_LEN, _CHUNK = 4, 64, 8
+
+
+def _smoke_cfg() -> ModelConfig:
+    from repro import configs
+    return configs.smoke_variant(configs.get_config("h2o-danube-1.8b"))
+
+
+def _make_backend(resident: bool, cfg, params):
+    if resident:
+        return ResidentEngine(cfg, params, max_slots=_SLOTS,
+                              max_len=_MAX_LEN, chunk=_CHUNK)
+    return stream_lib.HostBatcherDriver(ContinuousBatcher(
+        cfg, params, max_slots=_SLOTS, max_len=_MAX_LEN))
+
+
+def _replay_once(resident: bool, cfg, params, requests):
+    backend = _make_backend(resident, cfg, params)
+    timings = stream_lib.replay(backend, requests)
+    return metrics_lib.summarize(timings), backend
+
+
+def prefill_decode_split(cfg, *, batch: int, prompt_len: int,
+                         iters: int = 5) -> dict:
+    """Jitted + warmed prefill ms and decode ms/token at one shape."""
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    toks = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
+    prefill = jax.jit(lambda p, t: transformer.prefill(
+        cfg, p, t, max_len=_MAX_LEN))
+    decode = jax.jit(lambda p, c, t: transformer.decode_step(cfg, p, c, t))
+
+    logits, cache = jax.block_until_ready(prefill(params, toks))  # warm
+    best_p = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(prefill(params, toks))
+        best_p = min(best_p, time.perf_counter() - t0)
+
+    cur = np.argmax(np.asarray(logits), -1).astype(np.int32)
+    cache = jax.block_until_ready(decode(params, cache, cur)[1])   # warm
+    n_dec = 16
+    best_d = float("inf")
+    for _ in range(iters):
+        c = cache
+        t0 = time.perf_counter()
+        for _ in range(n_dec):
+            _, c = decode(params, c, cur)
+        jax.block_until_ready(c)
+        best_d = min(best_d, time.perf_counter() - t0)
+
+    return {"batch": batch, "prompt_len": prompt_len,
+            "prefill_ms": best_p * 1e3,
+            "decode_ms_per_token": best_d * 1e3 / n_dec}
+
+
+def serve_stats(iters: int = 3) -> dict:
+    """The check_bench-gated section: host vs resident under the stream."""
+    params = transformer.init_params(TINY, jax.random.PRNGKey(0))
+    requests = stream_lib.make_requests(_STREAM)
+
+    # warm both backends' executables before any timing
+    host_sum, host_backend = _replay_once(False, TINY, params, requests)
+    res_sum, res_backend = _replay_once(True, TINY, params, requests)
+
+    # residency must not change a single token: bit-identical outputs
+    host_out = host_backend.outputs
+    res_out = res_backend.outputs
+    assert set(host_out) == set(res_out), (set(host_out), set(res_out))
+    outputs_equal = all(np.array_equal(host_out[u], res_out[u])
+                        for u in host_out)
+    assert outputs_equal, "resident engine diverged from host batcher"
+
+    # O(1) transfers per chunk: one prompt upload per admission, one
+    # emission-buffer pull per chunk — independent of tokens x slots
+    tr = res_backend.transfers
+    assert tr["d2h"] == tr["chunks"], tr
+    assert tr["h2d"] == len(requests), (tr, len(requests))
+
+    best_host = host_sum
+    best_res = res_sum
+    for _ in range(iters):
+        s, _ = _replay_once(False, TINY, params, requests)
+        if s["ms_per_token"] < best_host["ms_per_token"]:
+            best_host = s
+        s, _ = _replay_once(True, TINY, params, requests)
+        if s["ms_per_token"] < best_res["ms_per_token"]:
+            best_res = s
+
+    return {
+        "model": "lm1x16_v64", "slots": _SLOTS, "max_len": _MAX_LEN,
+        "chunk": _CHUNK,
+        "stream": {"requests": _STREAM.num_requests,
+                   "arrival": _STREAM.arrival, "rate": _STREAM.rate,
+                   "prompt_lens": list(_STREAM.prompt_lens),
+                   "new": [_STREAM.new_low, _STREAM.new_high],
+                   "tokens": best_res["tokens"]},
+        "host_ms_per_token": best_host["ms_per_token"],
+        "resident_ms_per_token": best_res["ms_per_token"],
+        "speedup_resident_vs_host": (best_host["ms_per_token"]
+                                     / best_res["ms_per_token"]),
+        "resident_tokens_per_s": best_res["tokens_per_s"],
+        "ttft_ms": best_res["ttft_ms"],
+        "tpot_ms": best_res["tpot_ms"],
+        "transfers": {"resident": [tr["h2d"], tr["d2h"]],
+                      "chunks": tr["chunks"],
+                      "admissions": len(requests)},
+        "outputs_equal": bool(outputs_equal),
+        "prefill_decode": {
+            "tiny": prefill_decode_split(TINY, batch=1, prompt_len=16),
+            "lm": prefill_decode_split(_smoke_cfg(), batch=1,
+                                       prompt_len=32),
+        },
+    }
+
+
+def run(scale: float = 0.02):
+    ss = serve_stats()
+    rows = [
+        common.Row("serve/host_stream_ms_per_token",
+                   ss["host_ms_per_token"] * 1e3,
+                   "per-token Python round-trips"),
+        common.Row("serve/resident_stream_ms_per_token",
+                   ss["resident_ms_per_token"] * 1e3,
+                   f"chunk={ss['chunk']} "
+                   f"speedup={ss['speedup_resident_vs_host']:.1f}x, "
+                   f"h2d/d2h={ss['transfers']['resident']} for "
+                   f"{ss['transfers']['chunks']} chunks"),
+        common.Row("serve/resident_ttft_p95_ms",
+                   ss["ttft_ms"]["p95"] * 1e3,
+                   f"{ss['resident_tokens_per_s']:.0f} tok/s sustained"),
+    ]
+    for shape, pd in ss["prefill_decode"].items():
+        rows.append(common.Row(
+            f"serve/prefill_{shape}", pd["prefill_ms"] * 1e3,
+            f"batch={pd['batch']} prompt={pd['prompt_len']} (warm jit)"))
+        rows.append(common.Row(
+            f"serve/decode_{shape}", pd["decode_ms_per_token"] * 1e3,
+            "ms/token, single decode step"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--json", nargs="?", const="BENCH_runner.json",
+                    default=None, metavar="PATH",
+                    help="merge the serve section into PATH (other "
+                         "sections preserved) for check_bench gating")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+    ss = serve_stats(iters=args.iters)
+    if args.json:
+        out = {}
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                out = json.load(f)
+        out["serve"] = ss
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.json} (serve section)")
+    print(f"  serve       host={ss['host_ms_per_token']:.3f} "
+          f"resident={ss['resident_ms_per_token']:.3f} ms/token "
+          f"({ss['speedup_resident_vs_host']:.1f}x, "
+          f"{ss['resident_tokens_per_s']:.0f} tok/s, transfers "
+          f"{ss['transfers']['resident']} over "
+          f"{ss['transfers']['chunks']} chunks)")
+    print(f"  ttft p50/p95/p99 = {ss['ttft_ms']['p50']:.2f}/"
+          f"{ss['ttft_ms']['p95']:.2f}/{ss['ttft_ms']['p99']:.2f} ms; "
+          f"tpot p50/p95/p99 = {ss['tpot_ms']['p50']:.2f}/"
+          f"{ss['tpot_ms']['p95']:.2f}/{ss['tpot_ms']['p99']:.2f} ms")
+    for shape, pd in ss["prefill_decode"].items():
+        print(f"  prefill/{shape:4s} {pd['prefill_ms']:.3f} ms "
+              f"(prompt={pd['prompt_len']}), decode "
+              f"{pd['decode_ms_per_token']:.3f} ms/token")
+
+
+if __name__ == "__main__":
+    main()

@@ -56,6 +56,10 @@ class ModelConfig:
     use_rope: bool = True
     nope_on_global: bool = False         # llama4: global layers have no RoPE
     qk_norm: bool = False
+    # route eligible attention layers through kernels/flash_attention in the
+    # no-cache forward (training + prefill); ineligible variants keep the
+    # einsum path (attention._flash_ok)
+    use_flash: bool = False
     max_position: int = 1 << 20          # learned pos-emb size when use_rope=False
     # (batch_axis, head_axis) with_sharding_constraint on q/k/v activations
     # (see AttnSpec.shard_constraint); set by the launcher, None by default
@@ -142,6 +146,7 @@ def _attn_spec(cfg: ModelConfig, i: int, cross: bool = False,
         sliding_window=sw, chunk=chunk, softcap=cfg.attn_softcap,
         causal=causal, cross=cross, use_rope=use_rope,
         rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+        use_flash=cfg.use_flash,
         shard_constraint=cfg.attn_shard_constraint)
 
 

@@ -44,6 +44,9 @@ class AttnSpec:
     use_rope: bool = True               # llama4 global layers use NoPE
     rope_theta: float = 10000.0
     qk_norm: bool = False
+    # route the no-cache forward through kernels/flash_attention where the
+    # variant permits (see _flash_ok); the einsum path stays the fallback
+    use_flash: bool = False
     # (batch_axis, head_axis) activation sharding constraint.  When the head
     # count does not divide the model axis (llama4: 40 heads on 16), GSPMD
     # otherwise contracts over head_dim and ALL-REDUCES the (S, S) score
@@ -121,6 +124,16 @@ def _qkv(params, spec: AttnSpec, x, kv_src=None):
     return q, k, v
 
 
+def _flash_ok(spec: AttnSpec, kv_src, positions) -> bool:
+    """The flash kernel covers the self-attention causal variants (full,
+    sliding-window, softcap, GQA).  Chunked-local masking, cross-attention,
+    non-contiguous query positions, and sharding-constrained runs fall back
+    to the einsum path."""
+    return (spec.use_flash and spec.causal and not spec.cross
+            and spec.chunk is None and kv_src is None and positions is None
+            and spec.shard_constraint is None)
+
+
 def attention_forward(params, spec: AttnSpec, x, kv_src=None, positions=None):
     """Training/prefill forward without cache.  x: (B, S, d)."""
     b, s, _ = x.shape
@@ -133,6 +146,12 @@ def attention_forward(params, spec: AttnSpec, x, kv_src=None, positions=None):
         q = common.apply_rope(q, cos, sin)
         kcos, ksin = common.rope_angles(k_pos, spec.head_dim, spec.rope_theta)
         k = common.apply_rope(k, kcos, ksin)
+    if _flash_ok(spec, kv_src, positions):
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(          # handles GQA: k/v unrepeated
+            q, k, v, causal=True, sliding_window=spec.sliding_window,
+            softcap=spec.softcap)
+        return _merge_heads(out) @ params["wo"]
     k = _repeat_kv(k, spec.num_heads)
     v = _repeat_kv(v, spec.num_heads)
     if spec.shard_constraint is not None:

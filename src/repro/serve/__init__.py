@@ -1,3 +1,14 @@
-from . import scheduler
+"""Serving subsystem: continuous batching over the decode path.
 
-__all__ = ["scheduler"]
+* :mod:`.scheduler` — host-loop :class:`~repro.serve.scheduler.ContinuousBatcher`
+  (reference semantics; one Python round-trip per token),
+* :mod:`.engine` — device-resident :class:`~repro.serve.engine.ResidentEngine`
+  (donated slot state, compiled decode chunks, O(1) transfers per chunk),
+* :mod:`.stream` / :mod:`.metrics` — seeded synthetic traffic and
+  TTFT/TPOT/tokens-per-second summaries,
+* :mod:`.consensus` — the training->serving bridge: checkpoint -> x̄.
+"""
+
+from . import consensus, engine, metrics, scheduler, stream
+
+__all__ = ["consensus", "engine", "metrics", "scheduler", "stream"]

@@ -1,0 +1,122 @@
+"""Training -> serving bridge: consensus parameters from a trainer checkpoint.
+
+The paper's deliverable is the *consensus* model — Theorem 1 bounds the
+objective at the averaged iterate x̄ = (1/m) Σ_i x_i — but a
+``train_loop(ckpt_dir=...)`` checkpoint stores the full decentralized
+state: per-node parameter replicas stacked on a leading ``(m, ...)`` axis
+(plus snapshot/full-gradient/transport state that serving does not need).
+This module turns that artifact into the thing you serve:
+
+  params, info = consensus_params(ckpt_dir, cfg)
+
+* ``params`` is the node-axis MEAN of the stacked replicas — unstacked,
+  ready for ``transformer.prefill`` / ``decode_step`` / the serving
+  engines,
+* ``info`` reports the checkpoint step/algorithm and the per-node
+  disagreement ‖x_i − x̄‖ (absolute and relative to ‖x̄‖), so the
+  consensus error the training run left behind is *visible* at serve
+  time — a run whose nodes never mixed serves a very different model than
+  its node 0.
+
+``m`` (the node count) is inferred from the checkpoint's stacked embedding
+table, so serving needs no knowledge of the training topology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt_lib
+from repro.core import gossip
+from repro.models import transformer
+from repro.models.api import ModelConfig
+
+__all__ = ["ConsensusInfo", "consensus_params"]
+
+# trainer checkpoints store the TrainState NamedTuple, whose fields flatten
+# as attribute paths: "state/.params/embed" etc.
+_EMBED_KEY = "state/.params/embed"
+
+
+class _ParamsOnly(NamedTuple):
+    """Restore template mirroring TrainState's ``.params`` attribute path
+    while omitting every other field (snapshot/full_grad/step/mix_state),
+    which the template-driven reader then ignores."""
+    params: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusInfo:
+    step: int
+    num_nodes: int
+    algorithm: str | None
+    node_dist: tuple            # per-node ‖x_i − x̄‖ over all leaves
+    consensus_rel: float        # max_i ‖x_i − x̄‖ / ‖x̄‖
+
+    def __str__(self):
+        dists = ", ".join(f"{d:.3e}" for d in self.node_dist)
+        return (f"consensus ckpt step={self.step} m={self.num_nodes} "
+                f"algorithm={self.algorithm}: per-node ‖x_i − x̄‖ = "
+                f"[{dists}] (max rel {self.consensus_rel:.3e})")
+
+
+def _infer_num_nodes(ckpt_dir: str, step: int) -> int:
+    arrays = np.load(os.path.join(ckpt_dir, f"step_{step:08d}",
+                                  "arrays.npz"))
+    if _EMBED_KEY not in arrays:
+        raise ValueError(
+            f"{ckpt_dir} step {step} has no '{_EMBED_KEY}' leaf — not a "
+            f"train_loop checkpoint of a transformer LM")
+    return int(arrays[_EMBED_KEY].shape[0])
+
+
+def consensus_params(ckpt_dir: str, cfg: ModelConfig,
+                     step: int | None = None):
+    """Load a ``train_loop`` checkpoint and average the node replicas.
+
+    Returns ``(params, ConsensusInfo)`` with ``params`` an UNSTACKED
+    pytree in ``cfg``'s parameter dtype.  Raises ``FileNotFoundError``
+    when ``ckpt_dir`` holds no checkpoint and ``ValueError`` when the
+    stored shapes do not match ``cfg``.
+    """
+    step = step if step is not None else ckpt_lib.latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    m = _infer_num_nodes(ckpt_dir, step)
+
+    # restore ONLY the stacked params: extra checkpoint leaves (snapshot,
+    # full_grad, mix_state, device key) are ignored by the template-driven
+    # reader, which is exactly what serving wants
+    shapes = jax.eval_shape(
+        lambda k: gossip.stack_tree(transformer.init_params(cfg, k), m),
+        jax.random.PRNGKey(0))
+    template = {"state": _ParamsOnly(params=jax.tree.map(
+        lambda s: np.zeros(s.shape, s.dtype), shapes))}
+    tree, step, md = ckpt_lib.restore(ckpt_dir, template, step=step)
+    stacked = tree["state"].params
+
+    xbar = jax.tree.map(lambda a: np.mean(np.asarray(a, np.float64), axis=0),
+                        stacked)
+    # per-node disagreement over ALL leaves: d_i^2 = Σ_leaves ‖x_i − x̄‖²
+    sq = np.zeros(m, np.float64)
+    norm_sq = 0.0
+    for leaf, mean in zip(jax.tree.leaves(stacked), jax.tree.leaves(xbar)):
+        diff = np.asarray(leaf, np.float64) - mean[None]
+        sq += diff.reshape(m, -1).__pow__(2).sum(axis=1)
+        norm_sq += float((mean ** 2).sum())
+    dist = np.sqrt(sq)
+    rel = float(dist.max() / max(np.sqrt(norm_sq), 1e-30))
+
+    dtype = jnp.dtype(cfg.param_dtype)
+    params = jax.tree.map(lambda a: jnp.asarray(a, dtype), xbar)
+    info = ConsensusInfo(step=int(step), num_nodes=m,
+                         algorithm=md.get("algorithm"),
+                         node_dist=tuple(float(d) for d in dist),
+                         consensus_rel=rel)
+    return params, info

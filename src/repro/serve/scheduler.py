@@ -23,6 +23,7 @@ temperature/top-k sampling.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 from typing import Any, Callable
 
@@ -54,6 +55,18 @@ def cache_insert(slot_cache, row_cache, slot: int):
     return jax.tree.map(ins, slot_cache, row_cache)
 
 
+@functools.lru_cache(maxsize=None)
+def _decode_fn(cfg: ModelConfig):
+    # module-level cache: a freshly constructed batcher reuses the compiled
+    # decode instead of re-tracing a new per-instance lambda
+    return jax.jit(functools.partial(transformer.decode_step, cfg))
+
+
+# slot index stays TRACED: one compiled splice serves every slot
+# (static_argnums here would recompile once per slot value)
+_insert_fn = jax.jit(cache_insert)
+
+
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, max_slots: int,
                  max_len: int, eos_id: int | None = None,
@@ -70,9 +83,8 @@ class ContinuousBatcher:
         self.slot_generated: list[list[int]] = [[] for _ in range(max_slots)]
         self.next_token = np.zeros(max_slots, np.int32)
         self.outputs: dict[int, np.ndarray] = {}
-        self._decode = jax.jit(
-            lambda p, c, t: transformer.decode_step(cfg, p, c, t))
-        self._insert = jax.jit(cache_insert, static_argnums=(2,))
+        self._decode = _decode_fn(cfg)
+        self._insert = _insert_fn
 
     # -- client API ---------------------------------------------------------
 

@@ -7,6 +7,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import transformer
+from repro.serve import scheduler as scheduler_lib
 from repro.serve.scheduler import ContinuousBatcher, Request
 
 
@@ -91,3 +92,96 @@ def test_eos_retirement():
     sched.submit(Request(uid=0, tokens=p, max_new_tokens=50))
     outs = sched.run_until_done()
     assert len(outs[0]) == first and outs[0][-1] == eos
+
+
+def test_eos_mid_stream_frees_slot_for_queued_request():
+    """An EOS retirement mid-stream must hand the slot to the queue while
+    the other slot keeps decoding undisturbed."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, size=l).astype(np.int32)
+               for l in (8, 6, 5)]
+    ref0 = _standalone_greedy(cfg, params, prompts[0], 6, 64)
+    eos = int(ref0[1])      # uid 0 retires via EOS after ~2 tokens
+    sched = ContinuousBatcher(cfg, params, max_slots=2, max_len=64,
+                              eos_id=eos)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, tokens=p, max_new_tokens=12))
+    outs = sched.run_until_done()
+    assert sorted(outs) == [0, 1, 2]
+    assert outs[0][-1] == eos and len(outs[0]) < 12
+    for i in (1, 2):
+        ref = _standalone_greedy(cfg, params, prompts[i], 12, 64)
+        stop = 12
+        if eos in ref.tolist():
+            stop = ref.tolist().index(eos) + 1
+        np.testing.assert_array_equal(outs[i], ref[:stop])
+
+
+def _second_best_sampler(logits):
+    return jnp.argsort(logits, axis=-1)[..., -2].astype(jnp.int32)
+
+
+def test_slot_reuse_after_retirement_with_custom_sampler():
+    """More requests than slots under a non-greedy sampler: the reused
+    slot's rows must still match standalone decode with the same sampler."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=l).astype(np.int32)
+               for l in (6, 9, 4, 7)]
+    sched = ContinuousBatcher(cfg, params, max_slots=2, max_len=64,
+                              sampler=_second_best_sampler)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, tokens=p, max_new_tokens=5))
+    outs = sched.run_until_done()
+    assert sorted(outs) == [0, 1, 2, 3]
+    for i, p in enumerate(prompts):
+        logits, cache = transformer.prefill(cfg, params,
+                                            jnp.asarray(p)[None],
+                                            max_len=64)
+        ref, cur = [], _second_best_sampler(logits)
+        for _ in range(5):
+            ref.append(int(cur[0]))
+            logits, cache = transformer.decode_step(cfg, params, cache, cur)
+            cur = _second_best_sampler(logits)
+        np.testing.assert_array_equal(outs[i], np.asarray(ref, np.int32))
+
+
+def test_outputs_independent_of_admission_order():
+    """Per-request outputs depend only on the request, not on which slot it
+    lands in or who its batch neighbours are."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(8)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(4, 10)))
+                    .astype(np.int32),
+                    max_new_tokens=int(rng.integers(3, 8)))
+            for i in range(5)]
+    results = []
+    for order in (reqs, reqs[::-1], reqs[2:] + reqs[:2]):
+        sched = ContinuousBatcher(cfg, params, max_slots=2, max_len=64)
+        for r in order:
+            sched.submit(r)
+        results.append(sched.run_until_done())
+    for outs in results[1:]:
+        assert sorted(outs) == sorted(results[0])
+        for uid in results[0]:
+            np.testing.assert_array_equal(outs[uid], results[0][uid])
+
+
+def test_cache_insert_single_executable_across_slots():
+    """Regression: the splice used to be jitted with static_argnums on the
+    slot index, recompiling once per slot.  The slot must stay traced — the
+    executable count cannot grow with the number of distinct slots used."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(9)
+    before = scheduler_lib._insert_fn._cache_size()
+    sched = ContinuousBatcher(cfg, params, max_slots=4, max_len=64)
+    for i in range(8):
+        sched.submit(Request(
+            uid=i, tokens=rng.integers(0, cfg.vocab_size, size=6)
+            .astype(np.int32), max_new_tokens=3))
+    sched.run_until_done()
+    # 4 slots, 8 admissions: ONE new executable (not one per slot value)
+    assert scheduler_lib._insert_fn._cache_size() - before <= 1

@@ -1,0 +1,164 @@
+"""Synthetic workload generator + metrics: counter-based determinism,
+arrival models, percentile math, and the replay driver end-to-end."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer
+from repro.models.api import ModelConfig
+from repro.serve import metrics as metrics_lib
+from repro.serve import stream as stream_lib
+from repro.serve.engine import ResidentEngine
+from repro.serve.scheduler import ContinuousBatcher
+
+TINY = ModelConfig(name="tiny-stream", arch_type="dense", num_layers=1,
+                   d_model=16, num_heads=1, num_kv_heads=1, d_ff=32,
+                   vocab_size=64)
+
+
+# ---------------------------------------------------------------------------
+# generator
+# ---------------------------------------------------------------------------
+
+def test_requests_are_pure_functions_of_seed():
+    sc = stream_lib.StreamConfig(num_requests=16, seed=7)
+    a = stream_lib.make_requests(sc)
+    b = stream_lib.make_requests(sc)
+    for x, y in zip(a, b):
+        assert x.arrival == y.arrival and x.max_new_tokens == y.max_new_tokens
+        np.testing.assert_array_equal(x.tokens, y.tokens)
+
+
+def test_extending_stream_preserves_prefix():
+    """Counter-based rng: request i depends only on (seed, i), so a longer
+    stream shares its prefix with a shorter one."""
+    short = stream_lib.make_requests(
+        stream_lib.StreamConfig(num_requests=8, seed=3))
+    long = stream_lib.make_requests(
+        stream_lib.StreamConfig(num_requests=20, seed=3))
+    for x, y in zip(short, long):
+        assert x.arrival == y.arrival and x.max_new_tokens == y.max_new_tokens
+        np.testing.assert_array_equal(x.tokens, y.tokens)
+
+
+def test_seed_changes_stream():
+    a = stream_lib.make_requests(stream_lib.StreamConfig(num_requests=8,
+                                                         seed=0))
+    b = stream_lib.make_requests(stream_lib.StreamConfig(num_requests=8,
+                                                         seed=1))
+    assert any(not np.array_equal(x.tokens, y.tokens) for x, y in zip(a, b))
+
+
+def test_arrival_models():
+    n = 32
+    batch = stream_lib.make_requests(stream_lib.StreamConfig(
+        num_requests=n, arrival="batch"))
+    assert all(r.arrival == 0.0 for r in batch)
+
+    poisson = stream_lib.make_requests(stream_lib.StreamConfig(
+        num_requests=n, arrival="poisson", rate=10.0))
+    arr = [r.arrival for r in poisson]
+    assert arr == sorted(arr) and arr[-1] > 0
+
+    bursty = stream_lib.make_requests(stream_lib.StreamConfig(
+        num_requests=n, arrival="bursty", burst=4, rate=10.0))
+    for i in range(0, n, 4):
+        group = {r.arrival for r in bursty[i:i + 4]}
+        assert len(group) == 1          # whole burst lands together
+    assert bursty[0].arrival < bursty[4].arrival
+
+
+def test_draw_distributions_respect_config():
+    sc = stream_lib.StreamConfig(num_requests=64, vocab_size=32,
+                                 prompt_lens=(3, 5), new_low=2, new_high=6,
+                                 seed=1)
+    reqs = stream_lib.make_requests(sc)
+    assert {len(r.tokens) for r in reqs} <= {3, 5}
+    assert all(2 <= r.max_new_tokens <= 6 for r in reqs)
+    assert all(r.tokens.max() < 32 and r.tokens.min() >= 0 for r in reqs)
+
+
+def test_stream_config_validation():
+    with pytest.raises(ValueError, match="arrival"):
+        stream_lib.StreamConfig(arrival="uniform")
+    with pytest.raises(ValueError, match="new_low"):
+        stream_lib.StreamConfig(new_low=5, new_high=2)
+    with pytest.raises(ValueError, match="positive"):
+        stream_lib.StreamConfig(rate=0.0)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_summarize_percentile_math():
+    # 3 requests with hand-computable TTFT/TPOT
+    timings = [
+        metrics_lib.RequestTiming(uid=0, arrival=0.0, first_token=0.010,
+                                  done=0.050, n_tokens=5),   # tpot 10 ms
+        metrics_lib.RequestTiming(uid=1, arrival=0.1, first_token=0.120,
+                                  done=0.120, n_tokens=1),   # single token
+        metrics_lib.RequestTiming(uid=2, arrival=0.2, first_token=0.230,
+                                  done=0.290, n_tokens=4),   # tpot 20 ms
+    ]
+    s = metrics_lib.summarize(timings)
+    assert s["requests"] == 3 and s["tokens"] == 10
+    np.testing.assert_allclose(s["ttft_ms"]["p50"], 20.0)
+    np.testing.assert_allclose(s["ttft_ms"]["p99"],
+                               np.percentile([10.0, 20.0, 30.0], 99))
+    np.testing.assert_allclose(s["tpot_ms"]["p50"], 10.0)
+    # span = last done - first arrival = 0.29 s over 10 tokens
+    np.testing.assert_allclose(s["span_s"], 0.29)
+    np.testing.assert_allclose(s["tokens_per_s"], 10 / 0.29)
+    np.testing.assert_allclose(s["ms_per_token"], 29.0)
+
+
+def test_summarize_ignores_unfinished_and_raises_on_none():
+    done = metrics_lib.RequestTiming(uid=0, arrival=0.0, first_token=0.01,
+                                     done=0.02, n_tokens=2)
+    pending = metrics_lib.RequestTiming(uid=1, arrival=0.0)
+    assert metrics_lib.summarize([done, pending])["requests"] == 1
+    with pytest.raises(ValueError):
+        metrics_lib.summarize([pending])
+
+
+# ---------------------------------------------------------------------------
+# replay driver
+# ---------------------------------------------------------------------------
+
+def _replay_backend(backend, sc):
+    reqs = stream_lib.make_requests(sc)
+    timings = stream_lib.replay(backend, reqs)
+    assert len(timings) == sc.num_requests
+    for t in timings:
+        assert t.done is not None and t.first_token is not None
+        assert t.arrival <= t.first_token <= t.done
+        assert t.n_tokens == len(backend.outputs[t.uid])
+    return timings
+
+
+def test_replay_resident_engine_end_to_end():
+    params = transformer.init_params(TINY, jax.random.PRNGKey(0))
+    sc = stream_lib.StreamConfig(num_requests=9, vocab_size=TINY.vocab_size,
+                                 arrival="poisson", rate=5000.0,
+                                 prompt_lens=(4, 8), new_low=2, new_high=8,
+                                 seed=0)
+    eng = ResidentEngine(TINY, params, max_slots=3, max_len=32, chunk=4)
+    timings = _replay_backend(eng, sc)
+    metrics_lib.summarize(timings)          # well-formed summary
+    assert eng.transfers["d2h"] == eng.transfers["chunks"]
+
+
+def test_replay_host_driver_matches_engine_outputs():
+    params = transformer.init_params(TINY, jax.random.PRNGKey(0))
+    sc = stream_lib.StreamConfig(num_requests=7, vocab_size=TINY.vocab_size,
+                                 arrival="batch", prompt_lens=(4, 8),
+                                 new_low=2, new_high=8, seed=2)
+    host = stream_lib.HostBatcherDriver(ContinuousBatcher(
+        TINY, params, max_slots=3, max_len=32))
+    _replay_backend(host, sc)
+    eng = ResidentEngine(TINY, params, max_slots=3, max_len=32, chunk=4)
+    _replay_backend(eng, sc)
+    for uid in host.outputs:
+        np.testing.assert_array_equal(host.outputs[uid], eng.outputs[uid])
