@@ -37,7 +37,9 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import compression, gossip, prox as prox_lib, schedules, svrg
+from . import compression, gossip, prox as prox_lib, schedules, svrg, \
+    transport
+from ..kernels.fused_update import ops as fused_ops
 
 __all__ = [
     "Problem",
@@ -55,6 +57,8 @@ __all__ = [
     "build_dspg_step",
     "build_gt_svrg_inner_step",
     "build_dvr_inner_step",
+    "build_fused_svrg_inner",
+    "build_fused_sgd_step",
     "dpsvrg_algorithm",
     "dspg_algorithm",
     "dpg_algorithm",
@@ -364,6 +368,96 @@ def build_dvr_inner_step(loss_fn: Callable, prox: prox_lib.Prox, rho: float):
 
 
 # ---------------------------------------------------------------------------
+# Fused resident-step twins (kernels.fused_update)
+# ---------------------------------------------------------------------------
+#
+# ``runner.run(kernel="pallas"|"auto")`` swaps these into the compiled chunk
+# body in place of the unfused steps.  They compute the SAME update —
+# prox(W @ (x - alpha*v)) — through one fused kernel pass over the stacked
+# (m, d) buffer instead of a chain of separate XLA ops, and fall back to the
+# unfused step AT TRACE TIME whenever the configuration has no fused
+# lowering:
+#
+# * the phi wire format has no static dense matrix (``transport.mix_matrix``
+#   returns None: ppermute mesh collectives, compressed/scenario wrappers),
+# * a stateful transport threads a mix state (cstate is not None),
+# * the prox has no ``fused_spec`` (only l1 / sql2 / none lower),
+# * mode="auto" at small per-node d, where the unfused XLA body wins
+#   (``fused_ops.FUSED_MIN_D``).
+#
+# All checks are Python-level on static structure, so the fallback costs
+# nothing in the compiled program.
+
+def _fused_fallback(mode: str, prox: prox_lib.Prox, phi, cstate, params):
+    """-> (dense W or None, fused spec or None); (None, None) = use the
+    unfused step."""
+    spec = prox.fused_spec
+    if spec is None or cstate is not None:
+        return None, None
+    if mode == "auto" and not fused_ops.fused_wins(
+            fused_ops.tree_node_dim(params)):
+        return None, None
+    w = transport.mix_matrix(phi)
+    if w is None:
+        return None, None
+    return w, spec
+
+
+def build_fused_svrg_inner(loss_fn: Callable, prox: prox_lib.Prox, mode: str,
+                           rho: float | None = None):
+    """Fused twin of ``build_dpsvrg_inner_step`` (rho=None) /
+    ``build_dvr_inner_step`` (rho set: W_eff = (1-rho) I + rho W folds DVR's
+    damped gossip into the kernel's mix matrix).  Same signature:
+    ``inner(params, est, batch, phi, alpha, cstate) -> (params, cstate)``.
+    """
+    base = (build_dvr_inner_step(loss_fn, prox, rho) if rho is not None
+            else build_dpsvrg_inner_step(loss_fn, prox))
+
+    def make():
+        node_grad = build_node_grad_fn(loss_fn)
+
+        def inner(params, est, batch, phi, alpha, cstate):
+            w, spec = _fused_fallback(mode, prox, phi, cstate, params)
+            if w is None:
+                return base(params, est, batch, phi, alpha, cstate)
+            if rho is not None:
+                w = (1.0 - rho) * jnp.eye(w.shape[0], dtype=w.dtype) + rho * w
+            kind, lam = spec
+            g_now = node_grad(params, batch)
+            g_snap = node_grad(est.snapshot, batch)
+            x = fused_ops.fused_resident_step(
+                w, params, (g_now, g_snap, est.full_grad), alpha, lam,
+                rule="svrg", prox_kind=kind)
+            return x, cstate
+
+        return inner
+
+    return _shared_step(("fused_svrg_inner", loss_fn, prox, mode, rho), make)
+
+
+def build_fused_sgd_step(loss_fn: Callable, prox: prox_lib.Prox, mode: str):
+    """Fused twin of ``build_dspg_step``: one kernel pass for
+    prox(W @ (x - alpha*g))."""
+    base = build_dspg_step(loss_fn, prox)
+
+    def make():
+        node_grad = build_node_grad_fn(loss_fn)
+
+        def step_fn(params, batch, phi, alpha):
+            w, spec = _fused_fallback(mode, prox, phi, None, params)
+            if w is None:
+                return base(params, batch, phi, alpha)
+            kind, lam = spec
+            g = node_grad(params, batch)
+            return fused_ops.fused_resident_step(
+                w, params, (g,), alpha, lam, rule="sgd", prox_kind=kind)
+
+        return step_fn
+
+    return _shared_step(("fused_sgd_step", loss_fn, prox, mode), make)
+
+
+# ---------------------------------------------------------------------------
 # Protocol: declarative metadata + the state/step/outer triple
 # ---------------------------------------------------------------------------
 
@@ -425,6 +519,20 @@ class AlgoMeta:
                         set.  (``Problem.objective_fn`` still overrides on
                         the host paths, and is used by the resident path
                         too when set — but then it must be jax-traceable.)
+
+    Fused-kernel eligibility (``runner.run(kernel="pallas"|"auto")``):
+      fused_step:       ``fused_step(mode) -> step`` returning a step with
+                        the standard ``(state, batch, phi, alpha) -> state``
+                        signature whose inner update runs through the fused
+                        resident-step kernel (``kernels.fused_update``) when
+                        the traced configuration lowers, falling back to the
+                        unfused step otherwise (see the fused-twin builders
+                        above).  ``mode`` is "pallas" (fuse whenever a
+                        lowering exists) or "auto" (additionally require the
+                        shape to be in the kernel's winning regime).  None —
+                        the default — declares the method has no fused
+                        lowering (e.g. gradient tracking's two-payload step)
+                        and the runner silently keeps the unfused body.
     """
     name: str
     stepsize: Callable[[int], float]
@@ -445,6 +553,7 @@ class AlgoMeta:
     final_record: bool = True
     compress_bits: int | None = None
     resident_objective: Callable | None = None
+    fused_step: Callable[[str], Callable] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -636,6 +745,20 @@ def dpsvrg_algorithm(problem: Problem, hp: DPSVRGHyperParams) -> Algorithm:
 
     step = _shared_step(("dpsvrg_proto_step", inner), make_step)
 
+    def fused_step(mode):
+        finner = build_fused_svrg_inner(problem.loss_fn, problem.prox, mode)
+
+        def make_fused():
+            def fstep(state, batch, phi, alpha):
+                params, cstate = finner(state.params, state.est, batch, phi,
+                                        alpha, state.cstate)
+                return state._replace(
+                    params=params, cstate=cstate,
+                    inner_sum=svrg.tree_add(state.inner_sum, params))
+            return fstep
+
+        return _shared_step(("dpsvrg_proto_fused", finner), make_fused)
+
     def end_outer(state, K):
         return state._replace(
             anchor=jax.tree.map(lambda acc: acc / K, state.inner_sum))
@@ -661,6 +784,9 @@ def dpsvrg_algorithm(problem: Problem, hp: DPSVRGHyperParams) -> Algorithm:
         record_key="round",
         final_record=True,
         compress_bits=hp.compress_bits,
+        # hp-level quantization threads error feedback through every mix —
+        # no fused lowering exists for that configuration
+        fused_step=None if hp.compress_bits is not None else fused_step,
     )
     return Algorithm(meta=meta, init=init, step=step, outer=outer,
                      end_outer=end_outer, rule=DPSVRG_RULE,
@@ -682,6 +808,16 @@ def dspg_algorithm(problem: Problem, hp: DSPGHyperParams,
 
     step = _shared_step(("dspg_proto_step", step_fn), make_step)
 
+    def fused_step(mode):
+        fstep_fn = build_fused_sgd_step(problem.loss_fn, problem.prox, mode)
+
+        def make_fused():
+            def fstep(state, batch, phi, alpha):
+                return ParamState(fstep_fn(state.params, batch, phi, alpha))
+            return fstep
+
+        return _shared_step(("dspg_proto_fused", fstep_fn), make_fused)
+
     meta = AlgoMeta(
         name="dspg",
         stepsize=(schedules.constant(hp.alpha0) if hp.constant_step
@@ -691,6 +827,7 @@ def dspg_algorithm(problem: Problem, hp: DSPGHyperParams,
         step_grad_factor=1,
         slot_start=1,
         track_consensus=True,
+        fused_step=fused_step,
     )
     return Algorithm(meta=meta, init=lambda: ParamState(problem.x0),
                      step=step, rule=DSPG_RULE)
@@ -712,6 +849,26 @@ def dpg_algorithm(problem: Problem, alpha: float, num_steps: int) -> Algorithm:
     def step(state, batch, phi, alpha):
         return ParamState(_step(state.params, phi, alpha))
 
+    def fused_step(mode):
+        # keyed on ``_step`` (unique per algorithm instance, so per dataset):
+        # repeated runner.run calls must get the SAME fstep object back or
+        # the resident-exec cache misses and every run retraces+recompiles
+        # the chunk executor — at LM-scale d that recompile dwarfs the run
+        def make_fused():
+            def fstep(state, batch, phi, alpha):
+                w, spec = _fused_fallback(mode, prox, phi, None,
+                                          state.params)
+                if w is None:
+                    return ParamState(_step(state.params, phi, alpha))
+                kind, lam = spec
+                g = full_grad_fn(state.params)
+                return ParamState(fused_ops.fused_resident_step(
+                    w, state.params, (g,), alpha, lam, rule="sgd",
+                    prox_kind=kind))
+            return fstep
+
+        return _shared_step(("dpg_proto_fused", _step, mode), make_fused)
+
     meta = AlgoMeta(
         name="dpg",
         stepsize=schedules.constant(alpha),
@@ -720,6 +877,7 @@ def dpg_algorithm(problem: Problem, alpha: float, num_steps: int) -> Algorithm:
         step_grad_factor=0,
         slot_start=1,
         epoch_metric="steps",
+        fused_step=fused_step,
     )
     return Algorithm(meta=meta, init=lambda: ParamState(problem.x0),
                      step=step)
@@ -815,6 +973,18 @@ def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
 
     step = _shared_step(("loopless_proto_step", inner), make_step)
 
+    def fused_step(mode):
+        finner = build_fused_svrg_inner(problem.loss_fn, problem.prox, mode)
+
+        def make_fused():
+            def fstep(state, batch, phi, alpha):
+                params, cstate = finner(state.params, state.est, batch, phi,
+                                        alpha, state.cstate)
+                return state._replace(params=params, cstate=cstate)
+            return fstep
+
+        return _shared_step(("loopless_proto_fused", finner), make_fused)
+
     meta = AlgoMeta(
         name="loopless_dpsvrg",
         stepsize=schedules.constant(alpha),
@@ -825,6 +995,7 @@ def loopless_dpsvrg_algorithm(problem: Problem, alpha: float, num_steps: int,
         init_full_grad=True,
         gossip_rounds=lambda t: consensus_rounds,
         snapshot_prob=snapshot_prob,
+        fused_step=fused_step,
     )
     return Algorithm(meta=meta, init=init, step=step, outer=outer,
                      rule=DPSVRG_RULE, init_mix_state=init_mix_state,
@@ -863,6 +1034,19 @@ def dvr_algorithm(problem: Problem, alpha: float, num_steps: int,
 
     step = _shared_step(("dvr_proto_step", inner), make_step)
 
+    def fused_step(mode):
+        finner = build_fused_svrg_inner(problem.loss_fn, problem.prox, mode,
+                                        rho=rho)
+
+        def make_fused():
+            def fstep(state, batch, phi, alpha):
+                params, cstate = finner(state.params, state.est, batch, phi,
+                                        alpha, state.cstate)
+                return state._replace(params=params, cstate=cstate)
+            return fstep
+
+        return _shared_step(("dvr_proto_fused", finner), make_fused)
+
     meta = AlgoMeta(
         name="dvr",
         stepsize=schedules.constant(alpha),
@@ -872,6 +1056,7 @@ def dvr_algorithm(problem: Problem, alpha: float, num_steps: int,
         outer_full_grad=True,
         init_full_grad=True,
         snapshot_prob=snapshot_prob,
+        fused_step=fused_step,
     )
     return Algorithm(meta=meta, init=init, step=step, outer=outer,
                      rule=DPSVRG_RULE, init_mix_state=init_mix_state,

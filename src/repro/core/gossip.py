@@ -55,6 +55,7 @@ __all__ = [
     "mix_stacked",
     "multi_consensus_matrix",
     "band_decompose",
+    "banded_to_dense",
     "schedule_band_offsets",
     "bands_for_phi",
     "BandedPhi",
@@ -169,6 +170,23 @@ def band_decompose(w: np.ndarray, tol: float = 1e-12):
             offsets.append(d)
             coeffs.append(c)
     return tuple(offsets), np.stack(coeffs)
+
+
+def banded_to_dense(offsets: tuple, coeffs):
+    """Inverse of :func:`band_decompose`: (offsets, coeffs (n_bands, m)) ->
+    dense (m, m) with W[i, (i + d) % m] = coeffs[b][i].
+
+    Traceable in ``coeffs`` (offsets are static), so a ``lax.scan``-sliced
+    :class:`BandedPhi` lowers to the dense mixing matrix the fused
+    resident-step kernel consumes without leaving the trace.
+    """
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    m = coeffs.shape[-1]
+    rows = jnp.arange(m)
+    w = jnp.zeros((m, m), coeffs.dtype)
+    for b, d in enumerate(offsets):
+        w = w.at[rows, (rows + d) % m].add(coeffs[b])
+    return w
 
 
 def schedule_band_offsets(schedule: graphs.MixingSchedule,

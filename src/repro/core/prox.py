@@ -45,12 +45,22 @@ class Prox:
     for l1), or ``None`` when no closed form is registered.  Consumers that
     need a subgradient — e.g. the executable Theorem 1's Eq. (10b) epsilon —
     must raise loudly on ``None`` rather than silently assume h = 0.
+    ``fused_spec``: ``(kind, lam)`` with ``kind`` one of the fused
+    resident-step kernel's static prox kinds
+    (``kernels.fused_update.ref.FUSED_PROXES``: "l1" | "sql2" | "none"), or
+    ``None`` when this operator has no fused lowering — ``kernel="pallas"``
+    then falls back to the unfused step for algorithms using it.  ``lam``
+    may be a tracer (batched sweeps rebuild proxes in-trace); it rides the
+    kernel's scalar block.
     """
 
     name: str
     apply: Callable
     value: Callable
     subgrad: Callable | None = None
+    # compare=False: lam may be a tracer (sweeps), and Prox objects sit in
+    # hashed step-memoization keys — identity stays (name, fns) as before.
+    fused_spec: tuple | None = dataclasses.field(default=None, compare=False)
 
     def __call__(self, tree, alpha):
         return self.apply(tree, alpha)
@@ -88,7 +98,8 @@ def l1(lam: float) -> Prox:
         return lam * jnp.sign(z)
 
     return Prox(name=f"l1({lam})", apply=_treewise(_apply),
-                value=_treesum(_value), subgrad=_treewise(_subgrad))
+                value=_treesum(_value), subgrad=_treewise(_subgrad),
+                fused_spec=("l1", lam))
 
 
 def squared_l2(lam: float) -> Prox:
@@ -101,7 +112,8 @@ def squared_l2(lam: float) -> Prox:
 
     return Prox(name=f"sql2({lam})", apply=_treewise(_apply),
                 value=_treesum(_value),
-                subgrad=_treewise(lambda z: lam * z))
+                subgrad=_treewise(lambda z: lam * z),
+                fused_spec=("sql2", lam))
 
 
 def elastic_net(lam1: float, lam2: float) -> Prox:
@@ -202,7 +214,8 @@ def none() -> Prox:
         return jnp.zeros(())
 
     return Prox(name="none", apply=_treewise(_apply), value=_treesum(_value),
-                subgrad=_treewise(lambda z: jnp.zeros_like(z)))
+                subgrad=_treewise(lambda z: jnp.zeros_like(z)),
+                fused_spec=("none", 0.0))
 
 
 PROX_REGISTRY = {

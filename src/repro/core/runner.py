@@ -492,7 +492,20 @@ def _chunk_body(data, *, step_fn, meta, device_sampling: bool,
     return body
 
 
-def _make_resident_exec(algo, sampling: str, transitions: bool = False):
+def _resolve_kernel_step(algo, kernel: str):
+    """The chunk body's step for a ``kernel=`` mode: the algorithm's fused
+    twin (``AlgoMeta.fused_step``) for "pallas"/"auto" when the method
+    declares one, else the plain step.  The twin itself falls back to the
+    unfused body at trace time for configurations with no fused lowering,
+    so this resolution only decides WHICH step identity keys the executor
+    cache."""
+    if kernel != "xla" and algo.meta.fused_step is not None:
+        return algo.meta.fused_step(kernel)
+    return algo.step
+
+
+def _make_resident_exec(algo, sampling: str, transitions: bool = False,
+                        kernel: str = "xla"):
     """Compiled chunk executor for the resident path.  The carried state is
     DONATED (XLA updates the stacked iterate in place — no (m, d) copy per
     chunk); with ``sampling="device"`` the carry additionally threads a
@@ -501,8 +514,11 @@ def _make_resident_exec(algo, sampling: str, transitions: bool = False):
     all.  With ``transitions=True`` the xs additionally carry per-step
     outer-transition flags (outer-before, outer-after for coin-flip
     snapshots, end-of-round + its K) and the body applies the algorithm's
-    TRACED transitions under ``lax.cond`` — no host dispatch per round."""
-    step_fn = algo.step
+    TRACED transitions under ``lax.cond`` — no host dispatch per round.
+    ``kernel`` swaps the fused resident-step body in (see
+    :func:`_resolve_kernel_step`); the executor-cache key structure is
+    unchanged — the fused step rides the step-identity slot."""
+    step_fn = _resolve_kernel_step(algo, kernel)
     meta = algo.meta
     has_batch = meta.batch_size > 0
     bsz = meta.batch_size
@@ -860,7 +876,7 @@ def _warn_staging(staged: int, cells: int = 1) -> None:
 def _run_resident(algo, problem, backend, aux, rng, *, m: int,
                   n: int, param_count: int, record_every: int, sampling: str,
                   extra_metrics, transfers,
-                  device_transitions="auto") -> RunResult:
+                  device_transitions="auto", kernel: str = "xla") -> RunResult:
     meta = algo.meta
     if extra_metrics:
         raise ValueError(
@@ -888,7 +904,7 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
         param_count=param_count, record_every=record_every,
         sampling=sampling, host_data=host_data, transitions=transitions)
 
-    exec_chunk = _make_resident_exec(algo, sampling, transitions)
+    exec_chunk = _make_resident_exec(algo, sampling, transitions, kernel)
     record_kernel = _make_record_kernel(problem, meta)
 
     # dataset staging only transfers when the problem holds host arrays
@@ -1029,6 +1045,7 @@ def run(algo: algorithm_lib.Algorithm,
         resident: bool = False,
         sampling: str = "host",
         device_transitions: "bool | str" = "auto",
+        kernel: str = "xla",
         gossip: "str | transport.GossipBackend" = "auto",
         mesh=None,
         extra_metrics: dict | None = None,
@@ -1056,6 +1073,20 @@ def run(algo: algorithm_lib.Algorithm,
                   contract (``Algorithm.outer_traced`` et al.; all six
                   registered algorithms do).  ``False`` keeps the host
                   dispatches; ``True`` requires the contract.
+    kernel:       resident only.  "xla" (default): the chunk body is the
+                  algorithm's plain step.  "pallas": swap in the fused
+                  resident-step body (``AlgoMeta.fused_step`` — one
+                  ``kernels.fused_update`` pass for gossip mix + SVRG
+                  correction + prox) wherever a fused lowering exists,
+                  falling back to the plain step at trace time otherwise
+                  (ppermute/compressed transports, proxes without a
+                  ``fused_spec``, methods with no fused twin).  "auto":
+                  like "pallas" but additionally keeps the XLA body at
+                  small per-node d where the unfused step wins
+                  (``kernels.fused_update.ops.FUSED_MIN_D``).  Histories
+                  agree across kernels to float tolerance; the plan,
+                  staging, donation, record kernel, and executor-cache
+                  keys are identical.
     gossip:       transport backend — a ``transport.GOSSIP_BACKENDS`` name
                   ("dense", "banded", "ppermute", "compressed"), a
                   ``GossipBackend`` instance, or "auto" (select by schedule
@@ -1086,6 +1117,13 @@ def run(algo: algorithm_lib.Algorithm,
         raise ValueError("device_transitions folds outer rounds into the "
                          "compiled resident chunks — it requires "
                          "resident=True")
+    if kernel not in ("xla", "pallas", "auto"):
+        raise ValueError(f"kernel must be 'xla', 'pallas', or 'auto', got "
+                         f"{kernel!r}")
+    if kernel != "xla" and not resident:
+        raise ValueError("kernel='pallas'/'auto' swaps the fused body into "
+                         "the compiled resident chunks — it requires "
+                         "resident=True")
     backend = _resolved_backend(gossip, schedule, meta, mesh)
     aux = backend.prepare(schedule, meta, mesh=mesh)
     rng = np.random.default_rng(seed)
@@ -1103,7 +1141,8 @@ def run(algo: algorithm_lib.Algorithm,
                              record_every=record_every, sampling=sampling,
                              extra_metrics=extra_metrics,
                              transfers=transfers,
-                             device_transitions=device_transitions)
+                             device_transitions=device_transitions,
+                             kernel=kernel)
 
     obj = problem.objective_fn or (
         lambda p: objective_value(problem.loss_fn, problem.prox, p,

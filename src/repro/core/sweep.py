@@ -283,14 +283,13 @@ def _xs_axes(meta, sampling: str, plan) -> tuple:
     return axes
 
 
-def _make_sweep_exec(template, build, sampling: str, plan, cache_key):
+def _make_sweep_exec(template, build, sampling: str, plan, cache_key,
+                     kernel: str = "xla"):
     """One compiled dispatch executing a whole (padded) chunk for EVERY
     cell: ``jax.vmap`` over the cell axis of the donated carry, with the
     algorithm rebuilt per cell inside the trace (cell hyperparameters are
     tracers) and outer transitions applied under ``lax.cond`` from the
     per-step flags in the xs."""
-    from . import runner as runner_lib
-
     from . import runner as runner_lib
 
     meta = template.meta
@@ -307,11 +306,18 @@ def _make_sweep_exec(template, build, sampling: str, plan, cache_key):
         def exec_impl(carry, xs, data, cells):
             def one_cell(carry_c, xs_c, cell):
                 algo_t, _ = _trace_build(build, cell)
+                # the fused resident-step kernel swaps in exactly as on
+                # the single-run path (same _resolve_kernel_step
+                # contract); resolved under ephemeral_steps like the rest
+                # of the in-trace rebuild so the fused inner builders
+                # never memoize tracer-closing closures
+                with algorithm_lib.ephemeral_steps():
+                    step_fn = runner_lib._resolve_kernel_step(algo_t, kernel)
                 # the scan body is the runner's — one implementation for
                 # the single-run and batched paths — specialized here with
                 # this cell's traced step/transition functions
                 body = runner_lib._chunk_body(
-                    data, step_fn=algo_t.step, meta=meta,
+                    data, step_fn=step_fn, meta=meta,
                     device_sampling=device_sampling, transitions=True,
                     outer_fn=algo_t.outer_traced,
                     end_fn=algo_t.end_outer_traced, has_opre=has_opre,
@@ -380,7 +386,8 @@ def run_sweep(build: Callable,
               sampling: str = "host",
               gossip="auto",
               mesh=None,
-              mode: str = "product") -> SweepResult:
+              mode: str = "product",
+              kernel: str = "xla") -> SweepResult:
     """Run ``build(**cell)`` over every cell of ``grid``.
 
     build:      cell factory ``build(**cell) -> (Algorithm, Problem)``;
@@ -410,6 +417,12 @@ def run_sweep(build: Callable,
                 share one backend; with a ``"schedule"`` axis the wire
                 representations must share static structure
                 (``gossip="dense"`` always batches).
+    kernel:     "xla" (default) | "pallas" | "auto", as in ``runner.run``:
+                cells whose algorithm declares ``AlgoMeta.fused_step`` run
+                the fused Pallas resident step (gossip mix + variance-
+                reduced correction + prox in one kernel) inside the same
+                vmapped chunk executors; the plan, staging and record
+                kernels are untouched.  Requires ``resident=True``.
     """
     from . import runner as runner_lib
 
@@ -427,6 +440,13 @@ def run_sweep(build: Callable,
         raise ValueError("batched sweeps are device-resident by "
                          "construction; resident=False implies "
                          "batched=False")
+    if kernel not in ("xla", "pallas", "auto"):
+        raise ValueError(f"kernel must be 'xla', 'pallas' or 'auto', got "
+                         f"{kernel!r}")
+    if kernel != "xla" and not resident:
+        raise ValueError("kernel='pallas'/'auto' swaps the fused resident "
+                         "step into the device-resident executors; it "
+                         "requires resident=True")
 
     def build_cell_concrete(cell):
         out = build(**{k: v for k, v in cell.items()
@@ -446,7 +466,7 @@ def run_sweep(build: Callable,
         return _run_sequential(built, cells, schedules, seeds,
                                record_every=record_every, resident=resident,
                                scan=scan, sampling=sampling, gossip=gossip,
-                               mesh=mesh)
+                               mesh=mesh, kernel=kernel)
 
     _require_traced(template_algo)
     if sampling not in ("host", "device"):
@@ -488,11 +508,15 @@ def run_sweep(build: Callable,
         record_every=record_every, sampling=sampling, host_data=host_data,
         transitions=True, batched=True)
 
+    # the kernel mode is part of the key: cells are rebuilt in-trace, so
+    # no step-function identity distinguishes a fused program from an
+    # unfused one — without it a kernel="pallas" sweep could be served a
+    # cached "xla" executor (or vice versa)
     cache_key = ("sweep_exec", meta0.name, has_batch, sampling,
                  meta0.batch_size, build, tuple(axis_names),
-                 plan.phi_batched, plan.opost_batched)
+                 plan.phi_batched, plan.opost_batched, kernel)
     exec_chunk = _make_sweep_exec(template_algo, build, sampling, plan,
-                                  cache_key)
+                                  cache_key, kernel=kernel)
     record_kernel = _make_sweep_record(
         template_algo, build,
         ("sweep_record", meta0.name, meta0.track_consensus, build,
@@ -558,7 +582,8 @@ def run_sweep(build: Callable,
 
 
 def _run_sequential(built, cells, schedules, seeds, *, record_every,
-                    resident, scan, sampling, gossip, mesh) -> SweepResult:
+                    resident, scan, sampling, gossip, mesh,
+                    kernel="xla") -> SweepResult:
     """Reference path: one ``runner.run`` per cell, stacked to the same
     (records, cells) result shape as the batched program."""
     from . import runner as runner_lib
@@ -568,7 +593,7 @@ def _run_sequential(built, cells, schedules, seeds, *, record_every,
         results.append(runner_lib.run(
             algo, problem, sched, seed=s, record_every=record_every,
             scan=scan, resident=resident, sampling=sampling, gossip=gossip,
-            mesh=mesh))
+            mesh=mesh, kernel=kernel))
     lens = {len(r.history.steps) for r in results}
     if len(lens) > 1:
         raise _ragged(f"cells produced different record counts {lens}")

@@ -70,6 +70,7 @@ import warnings
 from typing import Any, Callable, Iterator, NamedTuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from . import compression, gossip, graphs
@@ -86,6 +87,7 @@ __all__ = [
     "select_backend_name",
     "resolve_backend",
     "node_param_count",
+    "mix_matrix",
     "batch_phis",
 ]
 
@@ -158,6 +160,32 @@ def node_param_count(tree) -> int:
     """Per-node parameter count of a stacked pytree (leaves (m, ...))."""
     return sum(int(np.prod(leaf.shape[1:], dtype=np.int64))
                for leaf in jax.tree.leaves(tree))
+
+
+def mix_matrix(phi):
+    """Lower a wire representation to the dense (m, m) mixing matrix the
+    fused resident-step kernel consumes, or ``None`` when no static
+    single-device lowering exists.
+
+    Trace-safe: called inside compiled chunk bodies on ``lax.scan``-sliced
+    phis, so both branches of the return may be tracers.  ``None`` means
+    the caller must keep the unfused step: ``PermutePhi`` mixes via mesh
+    collectives (the stacked buffer never exists on one device), compressed
+    and scenario wrappers thread mix state, and stateful-only phi types are
+    rejected wholesale.
+    """
+    if isinstance(phi, gossip.BandedPhi):
+        return gossip.banded_to_dense(phi.offsets, phi.coeffs)
+    if isinstance(phi, gossip.PermutePhi):
+        return None
+    if isinstance(phi, compression.CompressedPhi):
+        return None
+    if gossip._STATEFUL_ONLY and isinstance(phi, gossip._STATEFUL_ONLY):
+        return None
+    # dense (m, m) arrays and their in-trace tracer slices
+    if getattr(phi, "ndim", None) == 2:
+        return jnp.asarray(phi, jnp.float32)
+    return None
 
 
 def batch_phis(phis: "list") -> Any:

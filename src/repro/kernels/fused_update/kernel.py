@@ -25,9 +25,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..compat import compiler_params
+from . import ref
 
-__all__ = ["svrg_step_kernel_call", "mix_prox_kernel_call", "BLOCK_ROWS",
-           "BLOCK_COLS"]
+__all__ = ["svrg_step_kernel_call", "mix_prox_kernel_call",
+           "fused_step_kernel_call", "BLOCK_ROWS", "BLOCK_COLS"]
 
 BLOCK_ROWS = 8
 BLOCK_COLS = 1024
@@ -76,3 +77,62 @@ def mix_prox_kernel_call(q_self, q_up, q_down, w_self, w_up, w_down, thresh,
     scalars = jnp.asarray([w_self, w_up, w_down, thresh], jnp.float32)
     return _grid_call(_mix_prox_kernel, scalars, (q_self, q_up, q_down),
                       interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused resident step: gossip mix + SVRG correction + prox, one pass
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _make_fused_kernel(rule: str, prox_kind: str, m: int):
+    """Kernel body for one (m_pad, block_cols) column tile.
+
+    Every node row is in the tile (m_pad <= a few VREG sublane groups), so
+    one grid step sees the full node axis and the whole mix is local; the
+    grid only tiles the parameter axis.  The math is delegated to
+    ``ref.fused_step_math`` so the kernel is bit-identical to the oracle.
+    """
+
+    def body(s_ref, w_ref, *refs):
+        *op_refs, out_ref = refs
+        streams = tuple(r[...] for r in op_refs)
+        out_ref[...] = ref.fused_step_math(
+            w_ref[...], streams, s_ref[0], s_ref[1],
+            m=m, rule=rule, prox_kind=prox_kind)
+
+    body.__name__ = f"fused_{rule}_{prox_kind}_kernel"
+    return body
+
+
+def fused_step_kernel_call(w, streams, alpha, lam, *, m: int, rule: str,
+                           prox_kind: str, interpret: bool):
+    """prox(W @ (x - alpha*v)) over stacked (m_pad, d_pad) fp32 buffers.
+
+    ``w``: (m_pad, w_cols) zero-padded mixing matrix, broadcast to every
+    grid step.  ``streams``: 4 buffers for rule="svrg" (x, g_now, g_snap,
+    mu), 2 for rule="sgd" (x, g).  1-D grid over column tiles of width
+    min(d_pad, BLOCK_COLS); per-block working set at the widest tile is
+    (len(streams)+1) * m_pad * 1024 * 4 B — 160 KiB at m_pad=8 — well
+    inside VMEM with room to double-buffer.
+    """
+    m_pad, d_pad = streams[0].shape
+    assert m_pad % BLOCK_ROWS == 0, m_pad
+    assert 0 < m <= m_pad, (m, m_pad)
+    block_cols = min(BLOCK_COLS, d_pad)
+    assert d_pad % block_cols == 0, (d_pad, block_cols)
+    scalars = jnp.stack([jnp.asarray(alpha, jnp.float32),
+                         jnp.asarray(lam, jnp.float32)])
+    block = pl.BlockSpec((m_pad, block_cols), lambda i: (0, i))
+    w_spec = pl.BlockSpec(w.shape, lambda i: (0, 0))
+    scalar_spec = pl.BlockSpec((2,), lambda i: (0,))
+    return pl.pallas_call(
+        _make_fused_kernel(rule, prox_kind, m),
+        grid=(d_pad // block_cols,),
+        in_specs=[scalar_spec, w_spec] + [block] * len(streams),
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct(streams[0].shape, streams[0].dtype),
+        # column tiles are independent: fully parallel grid
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(scalars, w, *streams)

@@ -1,10 +1,26 @@
-"""Pure-jnp oracle for the fused DPSVRG update kernels."""
+"""Pure-jnp oracle for the fused DPSVRG update kernels.
+
+``fused_step_math`` is the single source of truth for the fused
+resident-step computation: the Pallas kernel body calls it per column tile
+and ``fused_step_ref`` calls it on the whole padded buffer.  The mix is one
+``dot_general`` whose contraction runs over the stacked node rows — every
+output element's accumulation sequence is fixed by its (row, column)
+coordinates alone, so splitting the column axis into grid tiles does not
+change any element and interpret-mode kernel results stay bitwise equal to
+the ref path (pinned by the tests at both paper-scale and LM-scale shapes).
+"""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["svrg_step_ref", "mix_prox_ref", "inner_step_ref"]
+__all__ = ["svrg_step_ref", "mix_prox_ref", "inner_step_ref",
+           "fused_step_math", "fused_step_ref", "FUSED_RULES", "FUSED_PROXES"]
+
+# static configuration space of the fused resident step
+FUSED_RULES = ("svrg", "sgd")
+FUSED_PROXES = ("l1", "sql2", "none")
 
 
 def svrg_step_ref(x, g_now, g_snap, mu, alpha):
@@ -28,3 +44,56 @@ def inner_step_ref(x, g_now, g_snap, mu, x_up, x_down, w_self, w_up, w_down,
     q are supplied post-permute."""
     q = svrg_step_ref(x, g_now, g_snap, mu, alpha)
     return mix_prox_ref(q, x_up, x_down, w_self, w_up, w_down, thresh)
+
+
+# ---------------------------------------------------------------------------
+# The fused resident step: prox(W @ (x - alpha*v)) in one pass
+# ---------------------------------------------------------------------------
+
+def fused_step_math(w, streams, alpha, lam, *, m: int, rule: str,
+                    prox_kind: str):
+    """One resident inner step over stacked (m_pad, cols) fp32 buffers.
+
+        v   = g_now - g_snap + mu        (rule="svrg"; 4 streams)
+              g                          (rule="sgd";  2 streams)
+        q   = x - alpha * v
+        z   = W[:, :m_pad] @ q           (gossip mix, one dot_general)
+        out = prox(z, alpha, lam)        (l1 soft-threshold | sql2 | none)
+
+    ``w`` is the zero-padded (m_pad, w_cols) mixing matrix.  The mix
+    contracts over all m_pad stacked rows; padded columns of ``w`` and
+    padded rows of ``q`` are zero, so padded terms contribute exact zeros
+    and padded rows/cols of the output stay (signed) zero — the prox maps
+    0 -> 0, preserving the invariant across steps.  A single f32 dot beats
+    the unrolled broadcast multiply-add form ~2x on CPU (XLA materialized
+    each broadcast term at LM-scale d) and keeps per-element accumulation
+    order a function of the element's own coordinates, so column tiling in
+    the kernel grid cannot perturb any output bit.
+    """
+    if rule == "svrg":
+        x, g_now, g_snap, mu = streams
+        v = g_now - g_snap + mu
+    elif rule == "sgd":
+        x, g_now = streams
+        v = g_now
+    else:
+        raise ValueError(f"unknown fused rule {rule!r}; have {FUSED_RULES}")
+    q = x - alpha * v
+    z = jax.lax.dot_general(w[:, :q.shape[0]], q, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if prox_kind == "l1":
+        t = alpha * lam
+        return jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
+    if prox_kind == "sql2":
+        return z / (1.0 + alpha * lam)
+    if prox_kind == "none":
+        return z
+    raise ValueError(
+        f"unknown fused prox kind {prox_kind!r}; have {FUSED_PROXES}")
+
+
+def fused_step_ref(w, streams, alpha, lam, *, m: int, rule: str = "svrg",
+                   prox_kind: str = "l1"):
+    """Whole-buffer oracle: identical math to the kernel, no tiling."""
+    return fused_step_math(w, streams, alpha, lam, m=m, rule=rule,
+                           prox_kind=prox_kind)

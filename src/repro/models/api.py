@@ -60,6 +60,9 @@ class ModelConfig:
     # no-cache forward (training + prefill); ineligible variants keep the
     # einsum path (attention._flash_ok)
     use_flash: bool = False
+    # route rmsnorm layers through kernels/rmsnorm (fused single-HBM-pass
+    # Pallas kernel, interpret-mode off TPU); layernorm configs ignore it
+    use_fused_norm: bool = False
     max_position: int = 1 << 20          # learned pos-emb size when use_rope=False
     # (batch_axis, head_axis) with_sharding_constraint on q/k/v activations
     # (see AttnSpec.shard_constraint); set by the launcher, None by default

@@ -42,6 +42,9 @@ def _init_norm(cfg: ModelConfig, dtype):
 
 def _apply_norm(cfg: ModelConfig, p, x):
     if cfg.norm == "rmsnorm":
+        if cfg.use_fused_norm:
+            from ..kernels.rmsnorm import ops as rmsnorm_ops
+            return rmsnorm_ops.rmsnorm(x, p["w"])
         return common.rms_norm(x, p["w"])
     return common.layer_norm(x, p["w"], p["b"])
 

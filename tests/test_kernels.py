@@ -1,5 +1,7 @@
 """Per-kernel shape/dtype sweeps vs. the pure-jnp oracles (interpret=True)."""
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -157,3 +159,109 @@ def test_rmsnorm_matches_model_norm():
     np.testing.assert_allclose(
         np.asarray(rn_ops.rmsnorm(x, w)),
         np.asarray(common.rms_norm(x, w)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused resident step (gossip mix + variance-reduced correction + prox)
+# ---------------------------------------------------------------------------
+
+def _fused_case(m, d, seed, n_streams):
+    rng = np.random.default_rng(seed)
+    m_pad, d_pad, _ = fu_ops.stacked_layout(m, d)
+    streams = []
+    for _ in range(n_streams):
+        buf = np.zeros((m_pad, d_pad), np.float32)
+        buf[:m, :d] = rng.normal(size=(m, d))
+        streams.append(jnp.asarray(buf))
+    w = rng.dirichlet(np.ones(m), size=m).astype(np.float32)  # row-stochastic
+    return fu_ops.pad_mix_matrix(jnp.asarray(w), m_pad), tuple(streams)
+
+
+@pytest.mark.parametrize("rule", fu_ref.FUSED_RULES)
+@pytest.mark.parametrize("prox_kind", fu_ref.FUSED_PROXES)
+@pytest.mark.parametrize("m,d", [(8, 30), (5, 200)])
+def test_fused_step_interpret_bitwise_vs_ref(rule, prox_kind, m, d):
+    """Interpret-mode kernel output is BITWISE identical to the jitted
+    whole-buffer oracle: both sides run ``ref.fused_step_math`` (per tile
+    vs whole buffer) under jit, so XLA makes identical contraction
+    decisions and the fused path can be swapped in with zero numeric
+    drift."""
+    n_streams = 4 if rule == "svrg" else 2
+    w, streams = _fused_case(m, d, seed=d + len(prox_kind), n_streams=n_streams)
+    run = jax.jit(functools.partial(
+        fu_ops.fused_step_buf, m=m, rule=rule, prox_kind=prox_kind),
+        static_argnames=("impl",))
+    out = run(w, streams, 0.07, 0.02, impl="interpret")
+    ref = run(w, streams, 0.07, 0.02, impl="ref")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # padding invariant: prox(0) = 0, so padded rows/cols stay exactly zero
+    np.testing.assert_array_equal(np.asarray(out)[m:], 0.0)
+    np.testing.assert_array_equal(np.asarray(out)[:, streams[0].shape[1]:],
+                                  0.0)
+
+
+def test_fused_step_interpret_bitwise_vs_ref_large_d():
+    """The LM-sized shape (d >= 1e5) walks many (8, 1024) tiles; tile-wise
+    kernel vs whole-buffer oracle must still agree bitwise under jit."""
+    m, d = 8, 131072
+    w, streams = _fused_case(m, d, seed=0, n_streams=4)
+    run = jax.jit(functools.partial(
+        fu_ops.fused_step_buf, m=m, rule="svrg", prox_kind="l1"),
+        static_argnames=("impl",))
+    out = run(w, streams, 0.05, 0.01, impl="interpret")
+    ref = run(w, streams, 0.05, 0.01, impl="ref")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_fused_resident_step_tree_matches_manual():
+    """Tree-level wrapper == dense numpy prox(W @ (x - alpha v)) per leaf,
+    with multi-leaf trees flattened through one stacked buffer."""
+    rng = np.random.default_rng(3)
+    m, alpha, lam = 4, 0.1, 0.02
+    tree = lambda: {"a": jnp.asarray(rng.normal(size=(m, 6)), jnp.float32),
+                    "b": jnp.asarray(rng.normal(size=(m, 2, 3)), jnp.float32)}
+    x, gn, gs, mu = tree(), tree(), tree(), tree()
+    w = jnp.asarray(rng.dirichlet(np.ones(m), size=m), jnp.float32)
+    out = fu_ops.fused_resident_step(w, x, (gn, gs, mu), alpha, lam,
+                                     rule="svrg", prox_kind="l1")
+    for k in ("a", "b"):
+        q = (np.asarray(x[k]) - alpha * (np.asarray(gn[k]) - np.asarray(gs[k])
+                                         + np.asarray(mu[k]))).reshape(m, -1)
+        z = np.asarray(w, np.float64) @ q
+        want = np.sign(z) * np.maximum(np.abs(z) - alpha * lam, 0.0)
+        np.testing.assert_allclose(np.asarray(out[k]).reshape(m, -1), want,
+                                   atol=1e-6)
+    assert jax.tree.structure(out) == jax.tree.structure(x)
+
+
+def test_stacked_layout_narrow_tiles_and_auto_fallback():
+    """Paper-scale d=30 buffers get a narrow (8, 128) tile — not the legacy
+    flatten_tree (8, 1024) tile that is >99% padding — and kernel='auto'
+    falls back to the unfused XLA body below FUSED_MIN_D where the fused
+    path cannot win."""
+    m_pad, d_pad, block_cols = fu_ops.stacked_layout(8, 30)
+    assert (m_pad, d_pad, block_cols) == (8, 128, 128)
+    # the legacy single-shape layout pads the SAME buffer to 1024 columns
+    legacy, _ = fu_ops.flatten_tree({"x": jnp.zeros((8, 30))})
+    assert legacy.shape[1] == fu_kernel.BLOCK_COLS == 1024
+    assert 1 - 30 / legacy.shape[1] > 0.97           # >97% padding (legacy)
+    assert 1 - 30 / d_pad < 0.80                     # bounded overhead (new)
+    # large-d keeps full-width tiles; odd m rounds up to the sublane tile
+    assert fu_ops.stacked_layout(8, 131072) == (8, 131072, 1024)
+    assert fu_ops.stacked_layout(5, 200) == (8, 256, 256)
+    # the auto-mode fallback pin: small d never routes to the fused step
+    assert not fu_ops.fused_wins(30)
+    assert fu_ops.fused_wins(fu_ops.FUSED_MIN_D)
+    assert fu_ops.tree_node_dim({"a": jnp.zeros((8, 30)),
+                                 "b": jnp.zeros((8, 2, 5))}) == 40
+
+
+def test_pad_mix_matrix_keeps_padded_rows_inert():
+    """Padded W rows/cols are zero, so phantom nodes mix to exactly zero
+    and never leak into live rows."""
+    w = jnp.full((5, 5), 0.2, jnp.float32)
+    wp = fu_ops.pad_mix_matrix(w, 8)
+    assert wp.shape == (8, 128)
+    np.testing.assert_array_equal(np.asarray(wp[:5, :5]), np.asarray(w))
+    assert float(jnp.abs(wp[5:]).sum()) == 0.0
+    assert float(jnp.abs(wp[:, 5:]).sum()) == 0.0

@@ -286,3 +286,57 @@ def test_flash_ineligible_variants_fall_back():
         dataclasses.replace(spec, causal=False), None, None)
     assert not attention._flash_ok(spec, jnp.zeros((1, 4, 16)), None)
     assert not attention._flash_ok(spec, None, jnp.arange(4))
+
+
+# ---------------------------------------------------------------------------
+# fused-rmsnorm routing in the model forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "gemma2-9b",
+                                  "jamba-1.5-large-398b", "xlstm-350m"])
+def test_use_fused_norm_forward_and_decode_equivalence(arch):
+    """use_fused_norm routes every rmsnorm layer through kernels/rmsnorm
+    (interpret-mode off TPU); forward, prefill, and decode-from-a-
+    prefilled-cache must match the jnp norm across dense, pre+post-norm,
+    hybrid-SSM/MoE, and xLSTM stacks."""
+    from repro import configs
+    from repro.models import transformer
+
+    cfg = configs.smoke_variant(configs.get_config(arch))
+    assert cfg.norm == "rmsnorm"
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 32)), jnp.int32)
+    cfg_f = dataclasses.replace(cfg, use_fused_norm=True)
+    ref = transformer.forward(cfg, params, toks)[0]
+    fused = transformer.forward(cfg_f, params, toks)[0]
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+    lr, cache_r = transformer.prefill(cfg, params, toks, max_len=64)
+    lf, cache_f = transformer.prefill(cfg_f, params, toks, max_len=64)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lr),
+                               rtol=1e-4, atol=1e-5)
+    # decode from the FUSED-prefilled cache: single-token (batch, 1, d)
+    # activations walk the same kernel path as the full sequence
+    cur = jnp.argmax(lr, -1).astype(jnp.int32)
+    dr, _ = transformer.decode_step(cfg, params, cache_r, cur)
+    df, _ = transformer.decode_step(cfg_f, params, cache_f, cur)
+    np.testing.assert_allclose(np.asarray(df), np.asarray(dr),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_use_fused_norm_ignored_for_layernorm():
+    """layernorm configs keep the jnp path bit-for-bit — the flag only
+    reroutes rmsnorm layers."""
+    from repro import configs
+    from repro.models import transformer
+
+    cfg = configs.smoke_variant(configs.get_config("stablelm-12b"))
+    assert cfg.norm == "layernorm"
+    params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (1, 16)), jnp.int32)
+    ref = transformer.forward(cfg, params, toks)[0]
+    fused = transformer.forward(
+        dataclasses.replace(cfg, use_fused_norm=True), params, toks)[0]
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))

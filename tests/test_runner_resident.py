@@ -338,3 +338,114 @@ def test_resident_executor_cache_persists_across_instances():
     e1 = runner._make_resident_exec(_build("dspg", problem), "host")
     e2 = runner._make_resident_exec(_build("dspg", problem), "host")
     assert e1 is e2
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel resident path (kernel="pallas"/"auto")
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["pallas", "auto"])
+@pytest.mark.parametrize(
+    "name", ["dpsvrg", "dspg", "dpg", "gt_svrg", "loopless_dpsvrg"])
+def test_resident_kernel_matches_host(name, kernel):
+    """Swapping the fused resident step in (kernel='pallas') — or letting
+    'auto' choose per shape — reproduces the host loop's history to the
+    same tolerance the plain resident path is held to, for EVERY
+    registered algorithm (the ones without a fused twin or with a fused
+    fallback keep their base step and must be unaffected)."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    host = runner.run(_build(name, problem), problem, sched, seed=3,
+                      record_every=5, gossip="dense").history
+    res = runner.run(_build(name, problem), problem, sched, seed=3,
+                     record_every=5, resident=True, gossip="dense",
+                     kernel=kernel).history
+    _assert_agrees(host, res)
+
+
+def test_resident_kernel_matches_on_banded_transport():
+    """The fused step lowers BandedPhi wire payloads to a dense mix matrix
+    in-trace (gossip.banded_to_dense) — histories must agree with the host
+    loop's roll-based banded mixing."""
+    data, h, x0 = _setup()
+    mats = graphs.edge_matching_matrices(4)
+    sched = graphs.MixingSchedule(tuple(mats), b=len(mats), eta=0.5,
+                                  name="matching4")
+    problem = _problem(data, h, x0)
+    host = runner.run(_build("dspg", problem), problem, sched, seed=2,
+                      record_every=8, gossip="dense").history
+    res = runner.run(_build("dspg", problem), problem, sched, seed=2,
+                     record_every=8, resident=True, gossip="banded",
+                     kernel="pallas").history
+    _assert_agrees(host, res)
+
+
+def test_resident_kernel_auto_small_d_is_bitwise_unfused():
+    """Below FUSED_MIN_D per-node parameters, kernel='auto' resolves to the
+    base step at trace time — histories are bit-identical to kernel='xla',
+    not merely close."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    xla = runner.run(_build("dpsvrg", problem), problem, sched, seed=1,
+                     record_every=5, resident=True, gossip="dense",
+                     kernel="xla").history
+    auto = runner.run(_build("dpsvrg", problem), problem, sched, seed=1,
+                      record_every=5, resident=True, gossip="dense",
+                      kernel="auto").history
+    np.testing.assert_array_equal(xla.objective, auto.objective)
+    np.testing.assert_array_equal(xla.consensus, auto.consensus)
+
+
+def test_resident_kernel_exec_donates_state():
+    """The fused-step executor keeps the donation contract: the compiled
+    chunk aliases the donated carry into its output (input_output_alias in
+    the HLO) and invalidates the input buffers."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    algo = _build("dspg", problem)
+    exec_chunk = runner._make_resident_exec(algo, "host", kernel="pallas")
+
+    L, m, d = 4, 4, 12
+    state = jax.tree.map(lambda a: jnp.array(a, copy=True), algo.init())
+    batch = {"features": jnp.zeros((L, m, 1, d)),
+             "labels": jnp.zeros((L, m, 1))}
+    xs = (batch, jnp.stack([jnp.eye(m)] * L), jnp.ones(L, jnp.float32),
+          jnp.ones(L, bool))
+    compiled = exec_chunk.lower(state, xs, data).compile()
+    assert "input_output_alias" in compiled.as_text()
+
+    out = exec_chunk(state, xs, data)
+    assert state.params.is_deleted()          # donated, not copied
+    assert not out.params.is_deleted()
+
+
+def test_resident_kernel_transfer_ledger_is_o1():
+    """The fused path changes the chunk body only — staging, dispatch and
+    history pull are untouched, so the O(1) transfer ledger must hold
+    under the XLA transfer guard exactly as for the unfused executor."""
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    old = runner._RESIDENT_DISPATCH_GUARD
+    runner._RESIDENT_DISPATCH_GUARD = lambda: jax.transfer_guard("disallow")
+    try:
+        res = runner.run(_build("dspg", problem), problem, sched, seed=0,
+                         record_every=5, resident=True, gossip="dense",
+                         kernel="pallas")
+    finally:
+        runner._RESIDENT_DISPATCH_GUARD = old
+    assert res.extras["transfers_h2d"] == 1
+    assert res.extras["transfers_d2h"] <= 2
+    assert res.history.objective[-1] < res.history.objective[0]
+
+
+def test_resident_kernel_knob_validation():
+    data, h, x0 = _setup()
+    problem = _problem(data, h, x0)
+    sched = _sched()
+    with pytest.raises(ValueError, match="kernel"):
+        runner.run(_build("dspg", problem), problem, sched, kernel="bogus")
+    with pytest.raises(ValueError, match="resident"):
+        runner.run(_build("dspg", problem), problem, sched, kernel="pallas")

@@ -390,3 +390,51 @@ def test_reset_executable_caches_clears_sweep_executors():
     res = sweep.run_sweep(build, grid, _sched(), record_every=10,
                           gossip="dense")
     assert res.history.objective.shape[1] == 2
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel batched sweeps (kernel="pallas"/"auto")
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["pallas", "auto"])
+def test_sweep_kernel_matches_sequential(kernel):
+    """The fused resident step swaps into the vmapped sweep executors
+    (resolved per cell inside the trace) without changing the plan or the
+    staging; batched histories must match the sequential resident runs
+    driven through the same kernel knob."""
+    build = _build("dpsvrg")
+    grid = {"lam": [0.001, 0.1], "seed": [3, 7]}
+    batched = sweep.run_sweep(build, grid, _sched(), record_every=4,
+                              gossip="dense", kernel=kernel)
+    sequential = sweep.run_sweep(build, grid, _sched(), record_every=4,
+                                 gossip="dense", batched=False, kernel=kernel)
+    _assert_sweeps_agree(batched, sequential)
+    assert batched.extras["transfers_h2d"] == 1
+
+
+def test_sweep_kernel_mode_is_part_of_executor_cache_key():
+    """Cells are rebuilt in-trace, so no step identity distinguishes fused
+    from unfused sweep executors — the kernel mode itself must key the
+    cache, and 'auto' at small d must serve histories bit-identical to
+    'xla' (the fallback picks the base step at trace time)."""
+    build = _build("dspg")
+    grid = {"lam": [0.01, 0.1], "seed": [0, 1]}
+    xla = sweep.run_sweep(build, grid, _sched(), record_every=5,
+                          gossip="dense", kernel="xla")
+    pallas = sweep.run_sweep(build, grid, _sched(), record_every=5,
+                             gossip="dense", kernel="pallas")
+    auto = sweep.run_sweep(build, grid, _sched(), record_every=5,
+                           gossip="dense", kernel="auto")
+    modes = {k[-1] for k in sweep._SWEEP_EXEC_CACHE if k[0] == "sweep_exec"}
+    assert {"xla", "pallas", "auto"} <= modes
+    np.testing.assert_array_equal(auto.history.objective,
+                                  xla.history.objective)
+    np.testing.assert_allclose(pallas.history.objective,
+                               xla.history.objective, rtol=1e-4, atol=1e-6)
+
+
+def test_sweep_kernel_requires_resident():
+    build = _build("dspg")
+    with pytest.raises(ValueError, match="resident"):
+        sweep.run_sweep(build, {"seed": [0]}, _sched(), resident=False,
+                        batched=False, kernel="pallas")
