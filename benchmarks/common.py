@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner, sweep
+from repro.core.exec_spec import ExecSpec
 from repro.data import synthetic
 
 
@@ -61,10 +62,10 @@ def run_algorithm(name: str, problem, sched, *factory_args, seed=0,
     agree with the host path to float tolerance with host sampling), which
     is what ``benchmarks.run --resident`` passes to every sweep."""
     algo = algorithm.ALGORITHMS[name](problem, *factory_args, **factory_kw)
-    return runner.run(algo, problem, sched, seed=seed,
-                      record_every=record_every, scan=scan,
-                      resident=resident, sampling=sampling,
-                      gossip=gossip)
+    return runner.run(algo, problem, sched,
+                      ExecSpec(scan=scan, resident=resident,
+                               sampling=sampling, gossip=gossip),
+                      seed=seed, record_every=record_every)
 
 
 def run_sweep(build, grid, sched=None, *, seed=0, record_every=1,
@@ -80,9 +81,10 @@ def run_sweep(build, grid, sched=None, *, seed=0, record_every=1,
     ``gossip`` pins dense like :func:`run_algorithm`, keeping figure
     numbers comparable across transport-selection changes."""
     return sweep.run_sweep(
-        build, grid, sched, seed=seed, record_every=record_every,
-        resident=resident or sweep_batched, batched=sweep_batched,
-        mode=mode, gossip=gossip)
+        build, grid, sched,
+        ExecSpec(resident=resident or sweep_batched, gossip=gossip),
+        seed=seed, record_every=record_every, batched=sweep_batched,
+        mode=mode)
 
 
 def f_star(flat, h, d, alpha=0.4, steps=4000):

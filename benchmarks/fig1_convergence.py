@@ -38,8 +38,8 @@ def run(scale: float = 0.02, num_outer: int = 10, alpha: float = 0.2,
             return algorithm.ALGORITHMS["dpsvrg"](problem, hp), problem
 
         t0 = time.time()
-        sv = common.run_sweep(build_dpsvrg, seed_grid, sched,
-                              record_every=4, resident=resident,
+        sv = common.run_sweep(build_dpsvrg, seed_grid, sched, resident=resident,
+                              record_every=4,
                               sweep_batched=sweep_batched)
         num_steps = int(sv.history.steps[-1, 0])
         t_vr = (time.time() - t0) * 1e6 / max(num_steps * seeds, 1)
@@ -51,8 +51,7 @@ def run(scale: float = 0.02, num_outer: int = 10, alpha: float = 0.2,
                 num_steps), problem
 
         t0 = time.time()
-        sd = common.run_sweep(build_dspg, seed_grid, sched, record_every=8,
-                              resident=resident,
+        sd = common.run_sweep(build_dspg, seed_grid, sched, resident=resident, record_every=8,
                               sweep_batched=sweep_batched)
         t_ds = (time.time() - t0) * 1e6 / max(num_steps * seeds, 1)
 

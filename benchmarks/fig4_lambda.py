@@ -29,8 +29,8 @@ def run(scale: float = 0.02, alpha: float = 0.2,
                                     data)
         return algorithm.ALGORITHMS["dpsvrg"](problem, hp), problem
 
-    sv = common.run_sweep(build_dpsvrg, {"lam": LAMBDAS}, sched,
-                          record_every=4, resident=resident,
+    sv = common.run_sweep(build_dpsvrg, {"lam": LAMBDAS}, sched, resident=resident,
+                          record_every=4,
                           sweep_batched=sweep_batched)
     num_steps = int(sv.history.steps[-1, 0])
 
@@ -42,8 +42,8 @@ def run(scale: float = 0.02, alpha: float = 0.2,
                                             constant_step=True),
             num_steps), problem
 
-    sd = common.run_sweep(build_dspg, {"lam": LAMBDAS}, sched,
-                          record_every=8, resident=resident,
+    sd = common.run_sweep(build_dspg, {"lam": LAMBDAS}, sched, resident=resident,
+                          record_every=8,
                           sweep_batched=sweep_batched)
 
     osc = lambda obj: float(np.std(obj[-len(obj) // 3:]))

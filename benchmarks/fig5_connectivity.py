@@ -30,8 +30,7 @@ def run(scale: float = 0.02, alpha: float = 0.2,
         problem = algorithm.Problem(common.logreg_loss, h, x0, data)
         return algorithm.ALGORITHMS["dpsvrg"](problem, hp), problem
 
-    sv = common.run_sweep(build_dpsvrg, grid, record_every=0, mode="zip",
-                          resident=resident, sweep_batched=sweep_batched)
+    sv = common.run_sweep(build_dpsvrg, grid, resident=resident, record_every=0, mode="zip", sweep_batched=sweep_batched)
     num_steps = int(sv.history.steps[-1, 0])
 
     def build_dspg():
@@ -40,8 +39,7 @@ def run(scale: float = 0.02, alpha: float = 0.2,
             problem, dpsvrg.DSPGHyperParams(alpha0=alpha),
             num_steps), problem
 
-    sd = common.run_sweep(build_dspg, grid, record_every=10, mode="zip",
-                          resident=resident, sweep_batched=sweep_batched)
+    sd = common.run_sweep(build_dspg, grid, resident=resident, record_every=10, mode="zip", sweep_batched=sweep_batched)
 
     for i, b in enumerate(BS):
         gv = sv.history.objective[-1, i] - fs

@@ -10,7 +10,7 @@ roofline-predicted v5e time from the kernels' HBM traffic model:
   flash fwd : (q + k + v + o) streams, no S^2 materialization
 
 ``python -m benchmarks.kernel_bench --json [PATH]`` times the fused
-resident step end to end through ``runner.run(kernel=...)`` — paper scale
+resident step end to end through ``runner.run(exec=ExecSpec(kernel=...))`` — paper scale
 (m=8, d=30) where ``kernel="auto"`` must fall back to the unfused body
 without regressing, and an LM-sized d=131072 stack where the fused path
 must win — and MERGES the results as a ``"kernels"`` section into PATH
@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner
 from repro.kernels.fused_update import ops as fu_ops, ref as fu_ref
+from repro.core.exec_spec import ExecSpec
 from . import common
 
 HBM_BW = 819e9
@@ -93,7 +94,7 @@ def run(scale: float = 0.02):
         f"flash_bytes={io_bytes + kv_bytes} naive_extra={naive_extra} "
         f"saving={naive_extra / (io_bytes + kv_bytes):.1f}x"))
 
-    # fused resident step through runner.run(kernel=...): the end-to-end
+    # fused resident step through runner.run(exec=ExecSpec(kernel=...)): the end-to-end
     # rows check_bench gates (paper scale must not regress under "auto",
     # the LM-sized stack must win under the fused path)
     ks = kernel_stats(scale)
@@ -201,10 +202,15 @@ def kernel_stats(scale: float = 0.02) -> dict:
     t_xla = _time_run(make(), problem, sched, **kw)
     t_auto = _time_run(make(), problem, sched, kernel="auto", **kw)
     t_pallas = _time_run(make(), problem, sched, kernel="pallas", **kw)
-    r_xla = runner.run(make(), problem, sched, seed=0, **kw)
-    r_auto = runner.run(make(), problem, sched, seed=0, kernel="auto", **kw)
-    r_pallas = runner.run(make(), problem, sched, seed=0, kernel="pallas",
-                          **kw)
+    spec = ExecSpec(resident=True, gossip="dense")
+    r_xla = runner.run(make(), problem, sched, spec, seed=0,
+                       record_every=100)
+    r_auto = runner.run(make(), problem, sched,
+                        spec.replace(kernel="auto"), seed=0,
+                        record_every=100)
+    r_pallas = runner.run(make(), problem, sched,
+                          spec.replace(kernel="pallas"), seed=0,
+                          record_every=100)
     bitwise = bool(np.array_equal(r_xla.history.objective,
                                   r_auto.history.objective))
     pallas_diff = float(np.max(np.abs(r_xla.history.objective
@@ -248,9 +254,12 @@ def kernel_stats(scale: float = 0.02) -> dict:
     kwL = dict(record_every=20, resident=True, gossip="banded")
     tL_xla = _time_run(makeL(), problemL, schedL, **kwL)
     tL_pallas = _time_run(makeL(), problemL, schedL, kernel="pallas", **kwL)
-    rL_xla = runner.run(makeL(), problemL, schedL, seed=0, **kwL)
-    rL_pallas = runner.run(makeL(), problemL, schedL, seed=0,
-                           kernel="pallas", **kwL)
+    specL = ExecSpec(resident=True, gossip="banded")
+    rL_xla = runner.run(makeL(), problemL, schedL, specL, seed=0,
+                        record_every=20)
+    rL_pallas = runner.run(makeL(), problemL, schedL,
+                           specL.replace(kernel="pallas"), seed=0,
+                           record_every=20)
     diffL = float(np.max(np.abs(rL_xla.history.objective
                                 - rL_pallas.history.objective)))
     np.testing.assert_allclose(rL_pallas.history.objective,

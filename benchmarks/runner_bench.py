@@ -30,6 +30,15 @@ Times the SAME algorithm/problem/schedule through ``runner.run``:
   (``runner.scan_executable_count``); the cold row includes compile time,
   and a warm-INSTANCE row shows the persistent executable cache serving a
   freshly rebuilt Algorithm (the sweep shape) with zero new compiles.
+* GSPMD sharding (``shard_stats``, ``--only shard`` on a multi-device
+  process): the 8-cell sweep with its CELL axis partitioned over the
+  device mesh (``ExecSpec(shard="cells")``), a 32-node resident run with
+  the NODE axis partitioned (``shard="nodes"``), and the
+  ``compressed(ppermute)`` quantize-before-collective wire accounting —
+  sharded histories must equal unsharded to float tolerance and per-link
+  byte maps must sum exactly to ``bytes_per_step``.  The CI bench leg
+  forces host devices that SPLIT one CPU, so check_bench gates the
+  equivalence and ledger fields, not a speedup floor.
 * the LM trainer (``train_stats``): host loop vs device-resident chunked
   execution of ``trainer.train_loop`` at small-LM shape, asserting the
   trainer's own O(1)-transfers-per-log-window ledger and host/resident
@@ -53,6 +62,7 @@ import numpy as np
 
 from repro.core import (algorithm, dpsvrg, gossip, graphs, prox, runner,
                         schedules, sweep, transport)
+from repro.core.exec_spec import ExecSpec
 from . import common
 
 
@@ -61,12 +71,14 @@ def _time_run(algo, problem, sched, *, record_every, iters=3, **kw):
     # runs are short enough that scheduler noise dominates a mean — the
     # minimum is the reproducible figure (and what the committed baseline
     # should record, so the regression gate isn't calibrated off outliers)
-    runner.run(algo, problem, sched, seed=0, record_every=record_every, **kw)
+    spec = ExecSpec(**kw)
+    runner.run(algo, problem, sched, spec, seed=0,
+               record_every=record_every)
     best = float("inf")
     for i in range(iters):
         t0 = time.time()
-        runner.run(algo, problem, sched, seed=0, record_every=record_every,
-                   **kw)
+        runner.run(algo, problem, sched, spec, seed=0,
+                   record_every=record_every)
         best = min(best, time.time() - t0)
     return best * 1e6
 
@@ -107,8 +119,7 @@ def backend_stats(scale: float = 0.02) -> dict:
         if timable:
             t_us = _time_run(algo, problem, sched, record_every=0, scan=True,
                              gossip=name)
-            res = runner.run(algo, problem, sched, seed=0, record_every=0,
-                             scan=True, gossip=name)
+            res = runner.run(algo, problem, sched, exec=ExecSpec(scan=True, gossip=name), seed=0, record_every=0)
             steps = int(res.history.steps[-1])
             entry["ms_per_step"] = t_us / 1e3 / steps
             entry["wire_bytes_per_step"] = (
@@ -126,8 +137,8 @@ def backend_stats(scale: float = 0.02) -> dict:
             algo4 = algorithm.ALGORITHMS["dpsvrg"](problem4, hp)
             t_us = _time_run(algo4, problem4, sched4, record_every=0,
                              scan=True, gossip=name)
-            res4 = runner.run(algo4, problem4, sched4, seed=0,
-                              record_every=0, scan=True, gossip=name)
+            res4 = runner.run(algo4, problem4, sched4, exec=ExecSpec(scan=True, gossip=name), seed=0,
+                              record_every=0)
             steps4 = int(res4.history.steps[-1])
             entry["timed"] = True
             entry["timed_on"] = "ring4"
@@ -166,10 +177,8 @@ def resident_stats(scale: float = 0.02) -> dict:
                       resident=True, sampling="device")
 
     r_host = runner.run(make(), problem, sched, seed=0, record_every=100)
-    r_scan = runner.run(make(), problem, sched, seed=0, record_every=100,
-                        scan=True)
-    r_res = runner.run(make(), problem, sched, seed=0, record_every=100,
-                       resident=True)
+    r_scan = runner.run(make(), problem, sched, exec=ExecSpec(scan=True), seed=0, record_every=100)
+    r_res = runner.run(make(), problem, sched, exec=ExecSpec(resident=True), seed=0, record_every=100)
 
     # --- the transfer-count assertion: host<->device transfers per resident
     # run are O(1), vs O(#chunks + #records) on the scan path ---------------
@@ -224,10 +233,8 @@ def resident_stats(scale: float = 0.02) -> dict:
 
         t_pp = _time_run(make4(), problem4, sched4, record_every=50,
                          resident=True, gossip="ppermute")
-        r_pp = runner.run(make4(), problem4, sched4, seed=0, record_every=50,
-                          resident=True, gossip="ppermute")
-        r_dn = runner.run(make4(), problem4, sched4, seed=0, record_every=50,
-                          gossip="dense")
+        r_pp = runner.run(make4(), problem4, sched4, exec=ExecSpec(resident=True, gossip="ppermute"), seed=0, record_every=50)
+        r_dn = runner.run(make4(), problem4, sched4, exec=ExecSpec(gossip="dense"), seed=0, record_every=50)
         np.testing.assert_allclose(r_dn.history.objective,
                                    r_pp.history.objective,
                                    rtol=1e-4, atol=1e-6)
@@ -274,23 +281,26 @@ def sweep_stats(scale: float = 0.02) -> dict:
         return algorithm.dpsvrg_algorithm(problem, hp), problem
 
     grid = {"lam": [0.001, 0.003, 0.01, 0.1], "seed": [0, 1]}
-    kw = dict(record_every=0, gossip="dense")
+    spec = ExecSpec(resident=True, gossip="dense")
 
     def timed_sweep(batched, iters=5):
         # best-of-N: one-shot sweeps are short enough that scheduler noise
         # dominates a mean; the minimum is the reproducible figure
-        sweep.run_sweep(build, grid, sched, batched=batched, **kw)  # warm
+        sweep.run_sweep(build, grid, sched, spec, record_every=0,
+                        batched=batched)  # warm
         best = float("inf")
         for _ in range(iters):
             t0 = time.time()
-            sweep.run_sweep(build, grid, sched, batched=batched, **kw)
+            sweep.run_sweep(build, grid, sched, spec, record_every=0,
+                            batched=batched)
             best = min(best, time.time() - t0)
         return best * 1e6
 
     t_batched = timed_sweep(True)
     t_seq = timed_sweep(False)
-    r_batched = sweep.run_sweep(build, grid, sched, **kw)
-    r_seq = sweep.run_sweep(build, grid, sched, batched=False, **kw)
+    r_batched = sweep.run_sweep(build, grid, sched, spec, record_every=0)
+    r_seq = sweep.run_sweep(build, grid, sched, spec, record_every=0,
+                            batched=False)
     cells = len(r_batched.grid)
     steps = int(r_batched.history.steps[-1, 0])
 
@@ -328,6 +338,147 @@ def sweep_stats(scale: float = 0.02) -> dict:
     }
 
 
+def shard_stats(scale: float = 0.02) -> dict:
+    """GSPMD-sharded execution rows (``ExecSpec(shard=...)``): the 8-cell
+    λ×seed sweep with its CELL axis split over the visible devices, a
+    32-node resident run with its NODE axis split, and the
+    ``compressed(ppermute)`` wire-exactness figures (quantize-before-
+    collective: per-link maps must sum to ``bytes_per_step``).
+
+    Requires a multi-device process (CI forces
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``), so the section
+    only runs under an explicit ``--only shard``.  Forced host devices
+    SPLIT one CPU — the figures track dispatch/partitioning overhead, not
+    a speedup (check_bench gates equivalence and ledgers, not a floor)."""
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        raise SystemExit(
+            "shard_stats needs a multi-device process; run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    data, flat, h, x0, d = common.setup_problem("adult_like", scale)
+    sched = graphs.b_connected_ring_schedule(8, b=1, seed=0)
+    hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4, num_outer=8,
+                                  k_max=2)
+
+    def build(lam=0.01):
+        problem = algorithm.Problem(common.logreg_loss, prox.l1(lam), x0,
+                                    data)
+        return algorithm.dpsvrg_algorithm(problem, hp), problem
+
+    grid = {"lam": [0.001, 0.003, 0.01, 0.1], "seed": [0, 1]}
+    base = ExecSpec(resident=True, gossip="dense")
+    sharded = base.replace(shard="cells")
+
+    def timed_sweep(spec, iters=3):
+        sweep.run_sweep(build, grid, sched, spec, record_every=0)  # warm
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.time()
+            sweep.run_sweep(build, grid, sched, spec, record_every=0)
+            best = min(best, time.time() - t0)
+        return best * 1e6
+
+    t_plain = timed_sweep(base)
+    t_shard = timed_sweep(sharded)
+    r_plain = sweep.run_sweep(build, grid, sched, base, record_every=0)
+    r_shard = sweep.run_sweep(build, grid, sched, sharded, record_every=0)
+    cells = len(r_shard.grid)
+    steps = int(r_shard.history.steps[-1, 0])
+    assert r_shard.extras["transfers_h2d"] <= 2, r_shard.extras
+    assert r_shard.extras["transfers_d2h"] <= 2, r_shard.extras
+    sweep_diff = float(np.max(np.abs(r_plain.history.objective
+                                     - r_shard.history.objective)))
+    np.testing.assert_allclose(r_plain.history.objective,
+                               r_shard.history.objective,
+                               rtol=1e-4, atol=1e-6)
+    out = {
+        "devices": n_dev,
+        "cells_sweep8": {
+            "cells": cells, "steps_per_cell": steps,
+            "batched_ms_per_step_per_cell":
+                t_plain / 1e3 / (steps * cells),
+            "sharded_ms_per_step_per_cell":
+                t_shard / 1e3 / (steps * cells),
+            "transfers": [int(r_shard.extras["transfers_h2d"]),
+                          int(r_shard.extras["transfers_d2h"])],
+            "history_max_abs_diff": sweep_diff,
+        },
+    }
+
+    # shard="nodes": a 32-node resident DSPG run, stacked (m, d) split over
+    # the devices (m >> core-count networks in one launch)
+    m = 8 * n_dev
+    data_m, _, h_m, x0_m, _ = common.setup_problem("adult_like", scale, m=m)
+    sched_m = graphs.b_connected_ring_schedule(m, b=1, seed=0)
+    problem_m = algorithm.Problem(common.logreg_loss, h_m, x0_m, data_m)
+
+    def make_m():
+        return algorithm.dspg_algorithm(
+            problem_m, algorithm.DSPGHyperParams(alpha0=0.2), num_steps=200)
+
+    t_m = _time_run(make_m(), problem_m, sched_m, record_every=50,
+                    resident=True, gossip="dense", shard="nodes")
+    r_m = runner.run(make_m(), problem_m, sched_m,
+                     ExecSpec(resident=True, gossip="dense", shard="nodes"),
+                     seed=0, record_every=50)
+    r_m0 = runner.run(make_m(), problem_m, sched_m,
+                      ExecSpec(resident=True, gossip="dense"),
+                      seed=0, record_every=50)
+    assert r_m.extras["transfers_h2d"] <= 2, r_m.extras
+    node_diff = float(np.max(np.abs(r_m.history.objective
+                                    - r_m0.history.objective)))
+    np.testing.assert_allclose(r_m0.history.objective,
+                               r_m.history.objective, rtol=1e-4, atol=1e-6)
+    out["nodes_dspg"] = {
+        "m": m, "steps": 200,
+        "sharded_ms_per_step": t_m / 1e3 / 200,
+        "transfers": [int(r_m.extras["transfers_h2d"]),
+                      int(r_m.extras["transfers_d2h"])],
+        "history_max_abs_diff": node_diff,
+    }
+
+    # compressed(ppermute) wire exactness: quantize-before-collective means
+    # the per-link maps sum EXACTLY to bytes_per_step at bits that don't
+    # divide 32
+    m4 = min(n_dev, 4)
+    data4, _, h4, x04, _ = common.setup_problem("adult_like", scale, m=m4)
+    sched4 = graphs.b_connected_ring_schedule(m4, b=1, seed=0)
+    problem4 = algorithm.Problem(common.logreg_loss, h4, x04, data4)
+    algo4 = algorithm.ALGORITHMS["loopless_dpsvrg"](problem4, 0.2, 100,
+                                                    snapshot_prob=0.1)
+    pc = transport.node_param_count(x04)
+    wire = {}
+    for bits in (4, 3):
+        be = transport.CompressedBackend(inner="ppermute", bits=bits)
+        aux = be.prepare(sched4, algo4.meta, mesh=None)
+        phi = be.phi_for(aux, algo4.meta.slot_start, 2)
+        total = be.bytes_per_step(aux, phi, pc)
+        links = be.bytes_per_link(aux, phi, pc)
+        assert sum(links.values()) == total, (bits, links, total)
+        wire[f"bits{bits}"] = {"bytes_per_step": int(total),
+                               "links": len(links),
+                               "link_sum_exact": True}
+    cb = transport.CompressedBackend(inner="ppermute", bits=4)
+    r_c = runner.run(algo4, problem4, sched4,
+                     ExecSpec(resident=True, gossip=cb, shard="nodes"),
+                     seed=0, record_every=25)
+    r_c0 = runner.run(
+        algorithm.ALGORITHMS["loopless_dpsvrg"](problem4, 0.2, 100,
+                                                snapshot_prob=0.1),
+        problem4, sched4,
+        ExecSpec(resident=True,
+                 gossip=transport.CompressedBackend(inner="dense", bits=4)),
+        seed=0, record_every=25)
+    wire["sharded_vs_dense_max_abs_diff"] = float(
+        np.max(np.abs(r_c.history.objective - r_c0.history.objective)))
+    wire["wire_bytes_equal"] = bool(
+        (np.asarray(r_c.extras["wire_bytes"])
+         == np.asarray(r_c0.extras["wire_bytes"])).all())
+    assert wire["wire_bytes_equal"], (r_c.extras, r_c0.extras)
+    out["compressed_ppermute"] = wire
+    return out
+
+
 def train_stats() -> dict:
     """Host loop vs device-resident LM training at small-LM shape (the
     trainer's analogue of ``resident_stats``): same ``build_train_step``
@@ -360,8 +511,7 @@ def train_stats() -> dict:
     def run_once(resident, sampling="host"):
         ld = LMLoader(toks, num_nodes=m, per_node_batch=1, seq_len=8,
                       seed=1)
-        return lm_trainer.train_loop(cfg, pr, sched, ld, tc,
-                                     resident=resident, sampling=sampling)
+        return lm_trainer.train_loop(cfg, pr, sched, ld, tc, exec=ExecSpec(resident=resident, sampling=sampling))
 
     def timed(resident, sampling="host", iters=5):
         # best-of-N with a high N: at this dispatch-dominated shape single
@@ -481,13 +631,13 @@ def run(scale: float = 0.02):
     runner.reset_executable_caches()   # measure a TRUE cold start
     algo_cold = algorithm.dpsvrg_algorithm(problem, hp)
     t0 = time.time()
-    runner.run(algo_cold, problem, sched, seed=0, record_every=0, scan=True)
+    runner.run(algo_cold, problem, sched, exec=ExecSpec(scan=True), seed=0, record_every=0)
     t_cold = (time.time() - t0) * 1e6
     # a fresh instance (the sweep shape): compiled chunks persist across
     # run() calls and instances, so this run compiles nothing
     algo_warm = algorithm.dpsvrg_algorithm(problem, hp)
     t0 = time.time()
-    runner.run(algo_warm, problem, sched, seed=0, record_every=0, scan=True)
+    runner.run(algo_warm, problem, sched, exec=ExecSpec(scan=True), seed=0, record_every=0)
     t_warm_inst = (time.time() - t0) * 1e6
     t_scan = _time_run(algo_warm, problem, sched, record_every=0, scan=True)
     execs = runner.scan_executable_count(algo_warm)
@@ -548,9 +698,10 @@ def main() -> None:
                          "tracking")
     ap.add_argument("--only", default="",
                     help="restrict --json to a comma-separated subset of "
-                         "{backends,resident,sweep,train} (default: all "
-                         "four); check_bench gates whichever sections are "
-                         "present")
+                         "{backends,resident,sweep,train,shard} (default: "
+                         "the first four; 'shard' needs a multi-device "
+                         "process and only runs when named); check_bench "
+                         "gates whichever sections are present")
     args = ap.parse_args()
     if args.json:
         only = {s for s in args.only.split(",") if s}
@@ -563,6 +714,8 @@ def main() -> None:
             out["sweep"] = sweep_stats(args.scale)
         if not only or "train" in only:
             out["train"] = train_stats()
+        if "shard" in only:       # explicit opt-in: needs a device mesh
+            out["shard"] = shard_stats(args.scale)
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {args.json}")
@@ -595,6 +748,18 @@ def main() -> None:
                   f"({ts['speedup_resident_vs_host']:.1f}x vs host, "
                   f"transfers {ts['transfers']['resident']} vs "
                   f"{ts['transfers']['host']})")
+        if "shard" in out:
+            sh = out["shard"]
+            cs = sh["cells_sweep8"]
+            nd = sh["nodes_dspg"]
+            print(f"  shard       cells8 sharded="
+                  f"{cs['sharded_ms_per_step_per_cell']:.4f} batched="
+                  f"{cs['batched_ms_per_step_per_cell']:.4f} ms/step/cell "
+                  f"diff={cs['history_max_abs_diff']:.2e} | "
+                  f"nodes m={nd['m']} "
+                  f"{nd['sharded_ms_per_step']:.3f} ms/step "
+                  f"diff={nd['history_max_abs_diff']:.2e} "
+                  f"({sh['devices']} devices)")
     else:
         print("name,us_per_call,derived")
         for r in run(args.scale):

@@ -13,6 +13,7 @@ import numpy as np
 from repro import scenarios
 from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner
 from repro.data import synthetic
+from repro.core.exec_spec import ExecSpec
 try:
     from examples.quickstart import loss_fn
 except ImportError:  # run as a script from examples/
@@ -56,8 +57,7 @@ def main():
         sched, backend = scenarios.apply(base, models, seed=7)
         hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4, num_outer=8)
         algo = algorithm.ALGORITHMS["dpsvrg"](problem, hp)
-        hist = runner.run(algo, problem, sched, record_every=0,
-                          gossip=backend if models else "auto").history
+        hist = runner.run(algo, problem, sched, exec=ExecSpec(gossip=backend if models else "auto"), record_every=0).history
         # the UNDEGRADED period-average gap; degraded realizations mix slower
         wbar = base.phi(0, base.period - 1)
         print(f"{sched.name:36s}    {graphs.spectral_gap(wbar):8.4f}      "
@@ -74,8 +74,7 @@ def main():
         ring, [scenarios.StaleGossip(2), scenarios.Stragglers(2.0)], seed=7)
     algo = algorithm.ALGORITHMS["loopless_dpsvrg"](
         problem, 0.2, 200, snapshot_prob=0.05)
-    res = runner.run(algo, problem, sched, record_every=50, resident=True,
-                     gossip=backend)
+    res = runner.run(algo, problem, sched, exec=ExecSpec(resident=True, gossip=backend), record_every=50)
     hist = res.history
     print(f"stale+straggler gossip (resident): F={hist.objective[-1]:.5f} "
           f"consensus={hist.consensus[-1]:.2e} "
@@ -88,8 +87,7 @@ def main():
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4, num_outer=8,
                                   k_max=2)
     algo = algorithm.ALGORITHMS["dpsvrg"](problem, hp)
-    res = runner.run(algo, problem, tdma, record_every=0, scan=True,
-                     gossip="auto")
+    res = runner.run(algo, problem, tdma, exec=ExecSpec(scan=True, gossip="auto"), record_every=0)
     hist = res.history
     print(f"banded-gossip scan on tdma-matchings: F={hist.objective[-1]:.5f} "
           f"consensus={hist.consensus[-1]:.2e} "

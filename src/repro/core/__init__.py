@@ -9,6 +9,9 @@ Submodules:
   transport  — the pluggable `GossipBackend` wire formats (dense / banded /
                ppermute / compressed), "auto" selection, wire-byte accounting
   algorithm  — the unified `DecentralizedAlgorithm` protocol + all methods
+  exec_spec  — `ExecSpec`: the one immutable execution specification
+               (path / sampling / kernel / transport / mesh / shard)
+               consumed by runner.run, run_sweep, and train_loop
   runner     — the single generic driver (host loop, lax.scan fast path,
                and the device-resident path: one staged transfer per run,
                donated carries, on-device metric recording; pluggable
@@ -41,8 +44,10 @@ its jitted step from the same ``UPDATE_RULES`` + ``prox_gossip_update``, so
 paper-scale repro and LM-scale training share one update implementation.
 """
 
-from . import (algorithm, dpsvrg, gossip, graphs, inexact, prox, runner,
-               schedules, svrg, sweep, transport)
+from . import (algorithm, dpsvrg, exec_spec, gossip, graphs, inexact, prox,
+               runner, schedules, svrg, sweep, transport)
+from .exec_spec import ExecSpec
 
-__all__ = ["algorithm", "dpsvrg", "gossip", "graphs", "inexact", "prox",
-           "runner", "schedules", "svrg", "sweep", "transport"]
+__all__ = ["algorithm", "dpsvrg", "exec_spec", "ExecSpec", "gossip",
+           "graphs", "inexact", "prox", "runner", "schedules", "svrg",
+           "sweep", "transport"]

@@ -21,7 +21,8 @@ The historical ``dpsvrg_run`` / ``dspg_run`` wrappers are GONE: build an
 
     problem = algorithm.Problem(loss_fn, prox, x0_stacked, full_data)
     algo = algorithm.ALGORITHMS["dpsvrg"](problem, DPSVRGHyperParams(...))
-    res = runner.run(algo, problem, schedule, record_every=..., scan=True)
+    res = runner.run(algo, problem, schedule, ExecSpec(scan=True),
+                     record_every=...)
     res.params, res.history
 
 — and hyperparameter GRIDS (λ, seeds, topologies) batch into one staged

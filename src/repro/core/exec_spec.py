@@ -1,0 +1,163 @@
+"""One execution specification for every driver entry point.
+
+The execution surface grew one keyword at a time — ``runner.run(scan=,
+resident=, sampling=, device_transitions=, kernel=, gossip=, mesh=)``,
+mirrored (inconsistently) by ``runner.run_sweep`` and
+``train/trainer.train_loop`` — and the mesh scale-out work adds ``shard=``
+on top.  :class:`ExecSpec` packages that whole axis as ONE immutable value
+consumed by all three drivers::
+
+    from repro.core.exec_spec import ExecSpec
+    runner.run(algo, problem, sched, ExecSpec(resident=True,
+                                              sampling="device"))
+    runner.run_sweep(build, grid, sched, ExecSpec(resident=True,
+                                                  shard="cells"))
+    trainer.train_loop(cfg, prox, sched, data, tc,
+                       exec=ExecSpec(resident=True))
+
+Field-for-field it matches the legacy keywords, plus ``shard``:
+
+* ``scan`` / ``resident`` — execution path (host loop, ``lax.scan``
+  chunks, or fully device-resident).
+* ``sampling`` — "host" | "device" minibatch index stream (resident only
+  for "device").
+* ``device_transitions`` — fold outer-round transitions into the compiled
+  resident chunks ("auto" | True | False).
+* ``kernel`` — "xla" | "pallas" | "auto" resident chunk body.
+* ``gossip`` — transport backend name / instance / "auto".
+* ``mesh`` — device mesh for mesh-collective transports AND for sharded
+  execution.
+* ``shard`` — ``None`` | ``"cells"`` (partition a batched sweep's cell
+  axis over the mesh; ``run_sweep`` only) | ``"nodes"`` (partition the
+  stacked ``(m, d)`` node axis of a resident run over the mesh;
+  ``runner.run`` only).
+
+Cross-field constraints are validated at construction, so an invalid
+combination fails where the spec is BUILT, not steps later inside a driver.
+
+The legacy keywords keep working for one release through
+:func:`resolve_exec`: passing any of them emits a ``DeprecationWarning``
+(the suite's deprecation-as-error CI leg keeps the repo itself clean), and
+passing BOTH a spec and a legacy keyword raises — a conflicting split
+specification has no right answer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+__all__ = ["ExecSpec", "UNSET", "resolve_exec"]
+
+
+class _Unset:
+    """Sentinel distinguishing 'keyword not passed' from any real value."""
+
+    __slots__ = ()
+
+    def __repr__(self):
+        return "<unset>"
+
+
+UNSET = _Unset()
+
+_SAMPLING = ("host", "device")
+_KERNELS = ("xla", "pallas", "auto")
+_SHARDS = (None, "cells", "nodes")
+_TRANSITIONS = ("auto", True, False)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """How a run executes — every path/transport/mesh choice in one value.
+
+    Defaults reproduce ``runner.run``'s host loop.  ``run_sweep`` defaults
+    to ``ExecSpec(resident=True)`` when no spec is passed (batched sweeps
+    are resident by construction); ``train_loop`` defaults to its
+    ``TrainerConfig`` fields.
+    """
+
+    scan: bool = False
+    resident: bool = False
+    sampling: str = "host"
+    device_transitions: Any = "auto"
+    kernel: str = "xla"
+    gossip: Any = "auto"
+    mesh: Any = None
+    shard: "str | None" = None
+
+    def __post_init__(self):
+        if self.sampling not in _SAMPLING:
+            raise ValueError(f"sampling must be 'host' or 'device', got "
+                             f"{self.sampling!r}")
+        if self.kernel not in _KERNELS:
+            raise ValueError(f"kernel must be 'xla', 'pallas', or 'auto', "
+                             f"got {self.kernel!r}")
+        if self.shard not in _SHARDS:
+            raise ValueError(f"shard must be None, 'cells', or 'nodes', "
+                             f"got {self.shard!r}")
+        if not any(self.device_transitions is t for t in _TRANSITIONS):
+            raise ValueError(f"device_transitions must be 'auto', True, or "
+                             f"False, got {self.device_transitions!r}")
+        if self.sampling == "device" and not self.resident:
+            raise ValueError("sampling='device' gathers minibatches inside "
+                             "the compiled chunk body — it requires "
+                             "resident=True")
+        if self.device_transitions is True and not self.resident:
+            raise ValueError("device_transitions folds outer rounds into "
+                             "the compiled resident chunks — it requires "
+                             "resident=True")
+        if self.kernel != "xla" and not self.resident:
+            raise ValueError("kernel='pallas'/'auto' swaps the fused body "
+                             "into the compiled resident chunks — it "
+                             "requires resident=True")
+        if self.shard is not None and not self.resident:
+            raise ValueError(f"shard={self.shard!r} partitions the "
+                             f"device-resident program over a mesh — it "
+                             f"requires resident=True")
+
+    def replace(self, **kw) -> "ExecSpec":
+        """A copy with the given fields changed (re-validated)."""
+        return dataclasses.replace(self, **kw)
+
+
+def resolve_exec(spec: "ExecSpec | None", caller: str,
+                 defaults: "dict | None" = None, **legacy) -> ExecSpec:
+    """Merge a driver call's ``exec=`` spec with its legacy keywords.
+
+    ``legacy`` maps ExecSpec field names to the driver's received keyword
+    values, with :data:`UNSET` meaning "not passed".  Exactly one source
+    wins:
+
+    * spec given, no legacy keyword passed  -> the spec, as is;
+    * spec given AND a legacy keyword passed -> ``ValueError`` (conflict);
+    * legacy keywords only -> ``DeprecationWarning`` naming them, then an
+      ``ExecSpec`` built from ``defaults`` overlaid with the passed values
+      (one-release shim, like the retired ``gossip_mode=`` keyword);
+    * neither -> ``ExecSpec(**defaults)``.
+
+    ``defaults`` carries the driver's historical defaults where they differ
+    from ExecSpec's (``run_sweep`` was resident by default; ``train_loop``
+    defaults to its TrainerConfig fields).
+    """
+    given = {k: v for k, v in legacy.items() if v is not UNSET}
+    if spec is not None:
+        if not isinstance(spec, ExecSpec):
+            raise TypeError(f"{caller}: exec must be an ExecSpec, got "
+                            f"{type(spec).__name__}")
+        if given:
+            raise ValueError(
+                f"{caller}: conflicting execution settings — both exec= and "
+                f"the legacy keyword(s) {sorted(given)} were passed; fold "
+                f"everything into the ExecSpec")
+        return spec
+    fields = dict(defaults or {})
+    if given:
+        kwargs = ", ".join(f"{k}=..." for k in sorted(given))
+        warnings.warn(
+            f"{caller}({kwargs}) is deprecated; pass "
+            f"exec=ExecSpec({kwargs}) instead (repro.core.exec_spec)",
+            DeprecationWarning, stacklevel=3)
+        fields.update(given)
+    return ExecSpec(**fields)

@@ -91,7 +91,8 @@ def inexact_prox_svrg_algorithm(problem: Problem, hp: InexactHyperParams,
     ``graphs.static_schedule(np.eye(1))``.  ``grad_error_fn(t, params) ->
     pytree`` injects the Eq. (10a) gradient error e^(k,s) at global step t
     (0-based) given the UNSTACKED iterate; None means exact.  Host-side
-    (non-traceable) error models require ``runner.run(scan=False)``; the
+    (non-traceable) error models require the host loop (the default
+    ``ExecSpec()``); the
     proximal error eps^(k,s) is not injected here (our prox operators are
     exact closed forms; Algorithm 2's eps models the *decentralized* prox
     gap, which ``verify_theorem1`` measures on the real DPSVRG run instead).

@@ -58,8 +58,25 @@ backend name or instance; default ``"auto"``):
 * stateful transports (``compressed``) additionally require the algorithm
   to thread a mix state (``Algorithm.init_mix_state``).
 
-The legacy ``gossip_mode=`` keyword still maps onto ``gossip=`` for one
-release and emits a ``DeprecationWarning``.
+Every execution choice above is carried by ONE immutable value — an
+:class:`~repro.core.exec_spec.ExecSpec` passed as ``run``'s fourth argument
+(``runner.run(algo, problem, sched, ExecSpec(resident=True, ...))``).  The
+historical per-keyword spellings (``scan=``, ``resident=``, ``sampling=``,
+``device_transitions=``, ``kernel=``, ``gossip=``, ``mesh=``) still work
+for one release through a ``DeprecationWarning`` shim (like the retired
+``gossip_mode=`` keyword, which still maps onto the spec's ``gossip``
+field); passing both a spec and a legacy keyword raises.
+
+``ExecSpec(shard="nodes")`` additionally partitions the resident path's
+stacked ``(m, d)`` node axis over a device mesh via GSPMD: the staged
+inputs, dataset, and donated state carry are placed with a
+``NamedSharding`` splitting axis ``m`` (the caller's ``mesh``, else the
+mesh the ``ppermute`` transport already built, else a fresh 1-D mesh over
+every visible device — the axis size must divide ``m``), and the SAME
+compiled chunk executors then run SPMD with each device owning a block of
+simulated nodes — m >> core-count networks in one launch, histories equal
+to the unsharded run to float tolerance, transfer ledger still O(1), and
+error-feedback compression state shard-local.
 
 Scan chunks of distinct lengths are padded to a small set of bucket lengths
 (next power of two; the steady-state ``record_every`` chunk stays exact) with
@@ -98,11 +115,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import algorithm as algorithm_lib, gossip, graphs, transport
+from . import (algorithm as algorithm_lib, exec_spec as exec_spec_lib,
+               gossip, graphs, transport)
+from .exec_spec import UNSET, ExecSpec
 
 __all__ = ["RunHistory", "RunResult", "Recorder", "run", "run_sweep",
-           "SweepResult", "sample_batch", "scan_executable_count",
-           "reset_executable_caches", "traceable_consensus"]
+           "SweepResult", "ExecSpec", "sample_batch",
+           "scan_executable_count", "reset_executable_caches",
+           "traceable_consensus"]
 
 
 class RunHistory(NamedTuple):
@@ -873,10 +893,40 @@ def _warn_staging(staged: int, cells: int = 1) -> None:
             stacklevel=4)
 
 
+def _node_shard_mesh(mesh, aux, m: int):
+    """Resolve the mesh + axis name ``shard="nodes"`` partitions the stacked
+    ``(m, d)`` node axis over.  Preference order: the caller's ``mesh`` ->
+    the mesh the resolved transport already built (the ``ppermute``
+    backend's aux carries one; ``compressed`` wraps it) -> a fresh 1-D mesh
+    over every visible device.  The chosen axis size must divide ``m``
+    (each device owns a contiguous block of simulated nodes)."""
+    if mesh is None:
+        mesh = getattr(aux, "mesh", None)
+    if mesh is None:
+        # compressed transports carry the inner transport's aux
+        inner = getattr(aux, "inner_aux", None)
+        mesh = getattr(inner, "mesh", None)
+    if mesh is None:
+        ndev = len(jax.devices())
+        if m % ndev != 0:
+            raise ValueError(
+                f"shard='nodes' partitions the stacked (m, d) state across "
+                f"the {ndev} visible device(s), but m={m} is not divisible "
+                f"by the device count; pass mesh= with an axis whose size "
+                f"divides m")
+        return jax.make_mesh((ndev,), ("nodes",)), "nodes"
+    for axis, size in mesh.shape.items():
+        if size and m % size == 0:
+            return mesh, axis
+    raise ValueError(f"shard='nodes': mesh {dict(mesh.shape)} has no axis "
+                     f"whose size divides m={m}")
+
+
 def _run_resident(algo, problem, backend, aux, rng, *, m: int,
                   n: int, param_count: int, record_every: int, sampling: str,
                   extra_metrics, transfers,
-                  device_transitions="auto", kernel: str = "xla") -> RunResult:
+                  device_transitions="auto", kernel: str = "xla",
+                  mesh=None, shard=None) -> RunResult:
     meta = algo.meta
     if extra_metrics:
         raise ValueError(
@@ -907,12 +957,45 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
     exec_chunk = _make_resident_exec(algo, sampling, transitions, kernel)
     record_kernel = _make_record_kernel(problem, meta)
 
+    # shard="nodes": every placement below becomes an explicit NamedSharding
+    # on the resolved mesh — the (m, ...) leaves split on the node axis,
+    # everything else replicated — and the SAME compiled executors then run
+    # SPMD under GSPMD (donated carries keep their sharding)
+    if shard == "nodes":
+        smesh, saxis = _node_shard_mesh(mesh, aux, m)
+        NS, P = jax.sharding.NamedSharding, jax.sharding.PartitionSpec
+        rep = NS(smesh, P())
+        node0 = NS(smesh, P(saxis))
+
+        def _node_leaf(l):
+            return node0 if (getattr(l, "ndim", 0) >= 1
+                             and l.shape[0] == m) else rep
+
+        def _xs_shardings(xs):
+            # components follow _plan_resident's xs layout: a host-sampled
+            # batch tree leads with leaves (bucket, m, bsz, ...) — node axis
+            # at 1; phis / alphas / keep / transition flags are tiny and
+            # stay replicated
+            out = []
+            for i, comp in enumerate(xs):
+                if has_batch and sampling == "host" and i == 0:
+                    out.append(jax.tree.map(
+                        lambda l: NS(smesh, P(None, saxis)), comp))
+                else:
+                    out.append(jax.tree.map(lambda l: rep, comp))
+            return tuple(out)
+
     # dataset staging only transfers when the problem holds host arrays
     # (jnp.asarray on a committed device array is a no-op)
     if any(not isinstance(leaf, jax.Array)
            for leaf in jax.tree.leaves(problem.full_data)):
         transfers["h2d"] += 1
-    data_dev = jax.tree.map(jnp.asarray, problem.full_data)
+    if shard == "nodes":
+        data_dev = jax.device_put(problem.full_data,
+                                  jax.tree.map(_node_leaf,
+                                               problem.full_data))
+    else:
+        data_dev = jax.tree.map(jnp.asarray, problem.full_data)
     # ONE staging transfer ships every chunk's xs (and nothing per-step
     # thereafter); the shielded state copy protects caller-owned buffers
     # (problem.x0) from the donated carries.  NOTE the memory trade:
@@ -920,7 +1003,11 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
     # O(num_steps * m * batch * feature) bytes; warn when that gets big
     # (sampling="device" stages no batches at all)
     _warn_staging(_staged_bytes(plan.chunks))
-    staged = jax.device_put([c.xs for c in plan.chunks])
+    if shard == "nodes":
+        staged = jax.device_put([c.xs for c in plan.chunks],
+                                [_xs_shardings(c.xs) for c in plan.chunks])
+    else:
+        staged = jax.device_put([c.xs for c in plan.chunks])
     transfers["h2d"] += 1
 
     state = algo.init()
@@ -928,10 +1015,17 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
     if transitions and algo.device_state is not None:
         state = algo.device_state(state)
     state = _shield_for_donation(state)
+    if shard == "nodes":
+        # splits the (m, ...) state leaves — including any error-feedback
+        # mix state, which thereby stays shard-local — over the node axis
+        state = jax.device_put(state, jax.tree.map(_node_leaf, state))
 
     def pack(state):
         if device_sampling:
-            return (state, jax.random.PRNGKey(key_seed))
+            key = jax.random.PRNGKey(key_seed)
+            if shard == "nodes":
+                key = jax.device_put(key, rep)
+            return (state, key)
         return state
 
     def unpack(carry):
@@ -944,6 +1038,10 @@ def _run_resident(algo, problem, backend, aux, rng, *, m: int,
     bufs = (jnp.zeros(plan.num_records, jnp.float32),
             jnp.zeros(plan.num_records, jnp.float32),
             jnp.zeros((), jnp.int32))
+    if shard == "nodes":
+        # the record kernel mixes bufs with sharded params — colocate them
+        # on the mesh (replicated) so the jit sees one device set
+        bufs = jax.device_put(bufs, rep)
 
     guard = _RESIDENT_DISPATCH_GUARD
     for op in plan.ops:
@@ -1038,92 +1136,99 @@ def _resolved_backend(gossip, schedule, meta, mesh):
 def run(algo: algorithm_lib.Algorithm,
         problem: algorithm_lib.Problem,
         schedule: graphs.MixingSchedule,
+        exec: "ExecSpec | None" = None,
         *,
         seed: int = 0,
         record_every: int = 1,
-        scan: bool = False,
-        resident: bool = False,
-        sampling: str = "host",
-        device_transitions: "bool | str" = "auto",
-        kernel: str = "xla",
-        gossip: "str | transport.GossipBackend" = "auto",
-        mesh=None,
         extra_metrics: dict | None = None,
+        scan=UNSET,
+        resident=UNSET,
+        sampling=UNSET,
+        device_transitions=UNSET,
+        kernel=UNSET,
+        gossip=UNSET,
+        mesh=UNSET,
         gossip_mode: str | None = None) -> RunResult:
     """Drive ``algo`` on ``problem`` over the time-varying ``schedule``.
 
+    exec:         an :class:`~repro.core.exec_spec.ExecSpec` — the ONE
+                  execution specification (path, sampling, transitions,
+                  kernel, transport, mesh, shard).  ``None`` (default) is
+                  the host loop.  Field semantics:
+
+                  * ``scan``: the ``lax.scan`` chunked fast path.
+                  * ``resident``: keep the entire run device-resident —
+                    plan on host, stage in one transfer, execute donated
+                    compiled chunks, record metrics on device, pull the
+                    history once at run end.
+                  * ``sampling``: "host" (default) draws minibatch indices
+                    from the same ``np.random`` stream as the host/scan
+                    paths (histories agree to float tolerance); "device"
+                    (resident only) threads a ``jax.random`` key through
+                    the scan carry and gathers minibatches inside the
+                    compiled chunk — a different sample stream, zero batch
+                    staging.
+                  * ``device_transitions`` (resident only): "auto" folds
+                    ``outer``/``end_outer`` into the compiled chunks
+                    whenever the algorithm declares the traceable contract
+                    (all registered algorithms do); ``False`` keeps host
+                    dispatches; ``True`` requires the contract.
+                  * ``kernel`` (resident only): "xla" plain step;
+                    "pallas" fused resident-step body where a fused
+                    lowering exists; "auto" additionally keeps XLA at
+                    small d.  Histories agree across kernels.
+                  * ``gossip``: transport backend — a
+                    ``transport.GOSSIP_BACKENDS`` name, an instance, or
+                    "auto" (select by schedule bandwidth and mesh).
+                  * ``mesh``: device mesh — enables the ``ppermute``
+                    transport (node axis of size m) and carries the
+                    sharding mesh for ``shard``.
+                  * ``shard``: ``"nodes"`` (resident only) partitions the
+                    stacked ``(m, d)`` node axis over the mesh via GSPMD —
+                    staged inputs/dataset/state placed shard-wise, the
+                    same donated chunk executors run SPMD, histories equal
+                    to the unsharded run to float tolerance with the O(1)
+                    transfer ledger intact.  ``"cells"`` is the sweep-axis
+                    counterpart and only valid on ``run_sweep``.
     record_every: history cadence in inner steps; 0 = once per outer round
                   (outer/inner methods only).
-    scan:         use the ``lax.scan`` chunked fast path.
-    resident:     keep the entire run device-resident: plan on host, stage
-                  in one transfer, execute donated compiled chunks, record
-                  metrics on device, pull the history once at run end
-                  (implies the chunked execution shape; ``scan`` is
-                  redundant alongside it).
-    sampling:     "host" (default): minibatch indices from the same
-                  ``np.random`` stream as the host/scan paths — resident
-                  histories agree with them to float tolerance.  "device"
-                  (resident only): a ``jax.random`` key rides the scan carry
-                  and minibatches are gathered inside the compiled chunk —
-                  a different sample stream, zero per-chunk batch staging.
-    device_transitions: resident only.  "auto" (default) folds ``outer`` /
-                  ``end_outer`` into the compiled chunks (``lax.cond`` on
-                  the precomputed round schedule — zero per-round host
-                  dispatches) whenever the algorithm declares the traceable
-                  contract (``Algorithm.outer_traced`` et al.; all six
-                  registered algorithms do).  ``False`` keeps the host
-                  dispatches; ``True`` requires the contract.
-    kernel:       resident only.  "xla" (default): the chunk body is the
-                  algorithm's plain step.  "pallas": swap in the fused
-                  resident-step body (``AlgoMeta.fused_step`` — one
-                  ``kernels.fused_update`` pass for gossip mix + SVRG
-                  correction + prox) wherever a fused lowering exists,
-                  falling back to the plain step at trace time otherwise
-                  (ppermute/compressed transports, proxes without a
-                  ``fused_spec``, methods with no fused twin).  "auto":
-                  like "pallas" but additionally keeps the XLA body at
-                  small per-node d where the unfused step wins
-                  (``kernels.fused_update.ops.FUSED_MIN_D``).  Histories
-                  agree across kernels to float tolerance; the plan,
-                  staging, donation, record kernel, and executor-cache
-                  keys are identical.
-    gossip:       transport backend — a ``transport.GOSSIP_BACKENDS`` name
-                  ("dense", "banded", "ppermute", "compressed"), a
-                  ``GossipBackend`` instance, or "auto" (select by schedule
-                  bandwidth and mesh availability).
-    mesh:         optional device mesh with a node axis of size m; enables
-                  the ``ppermute`` backend (and lets "auto" pick it).
     extra_metrics: ``{name: fn(stacked_params) -> float}`` recorded alongside
                   the standard history columns (returned in ``extras``, next
                   to the always-present ``wire_bytes`` column).  Host-side
                   callables — unavailable under ``resident=True``.
-    gossip_mode:  DEPRECATED alias for ``gossip`` (one-release shim).
+    scan, resident, sampling, device_transitions, kernel, gossip, mesh:
+                  DEPRECATED keyword spellings of the ExecSpec fields
+                  (one-release shim; combining them with ``exec=`` raises).
+    gossip_mode:  DEPRECATED alias for the spec's ``gossip`` field.
     """
     meta = algo.meta
     if gossip_mode is not None:
         warnings.warn(
-            "runner.run(gossip_mode=...) is deprecated; use gossip=... "
-            "(same names, plus 'ppermute', 'compressed', and 'auto')",
+            "runner.run(gossip_mode=...) is deprecated; use "
+            "exec=ExecSpec(gossip=...) (same names, plus 'ppermute', "
+            "'compressed', and 'auto')",
             DeprecationWarning, stacklevel=2)
         gossip = gossip_mode
-    if sampling not in ("host", "device"):
-        raise ValueError(f"sampling must be 'host' or 'device', got "
-                         f"{sampling!r}")
-    if sampling == "device" and not resident:
-        raise ValueError("sampling='device' gathers minibatches inside the "
-                         "compiled chunk body — it requires resident=True")
-    if device_transitions is not False and device_transitions != "auto" \
-            and not resident:
-        raise ValueError("device_transitions folds outer rounds into the "
-                         "compiled resident chunks — it requires "
-                         "resident=True")
-    if kernel not in ("xla", "pallas", "auto"):
-        raise ValueError(f"kernel must be 'xla', 'pallas', or 'auto', got "
-                         f"{kernel!r}")
-    if kernel != "xla" and not resident:
-        raise ValueError("kernel='pallas'/'auto' swaps the fused body into "
-                         "the compiled resident chunks — it requires "
-                         "resident=True")
+        # one warning per call: the mapped kwarg would trip resolve_exec's
+        # own shim warning on top of the gossip_mode one above
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            spec = exec_spec_lib.resolve_exec(
+                exec, "runner.run", scan=scan, resident=resident,
+                sampling=sampling, device_transitions=device_transitions,
+                kernel=kernel, gossip=gossip, mesh=mesh)
+    else:
+        spec = exec_spec_lib.resolve_exec(
+            exec, "runner.run", scan=scan, resident=resident,
+            sampling=sampling, device_transitions=device_transitions,
+            kernel=kernel, gossip=gossip, mesh=mesh)
+    if spec.shard == "cells":
+        raise ValueError("shard='cells' partitions a batched sweep's CELL "
+                         "axis — use runner.run_sweep; a single run shards "
+                         "its node axis with shard='nodes'")
+    scan, resident, sampling = spec.scan, spec.resident, spec.sampling
+    device_transitions, kernel = spec.device_transitions, spec.kernel
+    gossip, mesh, shard = spec.gossip, spec.mesh, spec.shard
     backend = _resolved_backend(gossip, schedule, meta, mesh)
     aux = backend.prepare(schedule, meta, mesh=mesh)
     rng = np.random.default_rng(seed)
@@ -1142,7 +1247,7 @@ def run(algo: algorithm_lib.Algorithm,
                              extra_metrics=extra_metrics,
                              transfers=transfers,
                              device_transitions=device_transitions,
-                             kernel=kernel)
+                             kernel=kernel, mesh=mesh, shard=shard)
 
     obj = problem.objective_fn or (
         lambda p: objective_value(problem.loss_fn, problem.prox, p,

@@ -45,12 +45,15 @@ batched program (vmapped over the cell axis), where the factory's closures
 with a "ragged sweep grid" error — batch what shares a trace shape, loop
 over the rest.
 
-``run_sweep(..., resident=True)`` (default) builds the batched program;
-``resident=True, batched=False`` runs the cells as sequential resident runs
-(the baseline the batched path is benchmarked against);
-``resident=False`` drives the host/scan paths sequentially.  All modes
-return the same :class:`SweepResult` with (records, cells) history columns,
-so equivalence is one ``np.testing.assert_allclose`` away.
+Execution is selected by an :class:`~repro.core.exec_spec.ExecSpec` (the
+same spec ``runner.run`` consumes): the default ``ExecSpec(resident=True)``
+builds the batched program; ``batched=False`` runs the cells as sequential
+resident runs (the baseline the batched path is benchmarked against);
+``ExecSpec(resident=False)`` drives the host/scan paths sequentially; and
+``ExecSpec(shard="cells")`` partitions the batched program's cell axis over
+a device mesh via GSPMD (each device executes a contiguous grid slice).
+All modes return the same :class:`SweepResult` with (records, cells)
+history columns, so equivalence is one ``np.testing.assert_allclose`` away.
 """
 
 from __future__ import annotations
@@ -64,7 +67,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import algorithm as algorithm_lib, transport
+from . import (algorithm as algorithm_lib, exec_spec as exec_spec_lib,
+               transport)
+from .exec_spec import UNSET, ExecSpec
 
 __all__ = ["SweepResult", "expand_grid", "run_sweep"]
 
@@ -369,6 +374,45 @@ def _stack_states(states):
     return jax.tree.map(lambda *ls: jnp.stack(ls), *states)
 
 
+def _cells_mesh(mesh, B: int):
+    """Resolve the mesh + axis name ``shard="cells"`` splits the cell axis
+    over: the caller's ``mesh`` (which must carry an axis named
+    ``"cells"``), else a fresh 1-D ``("cells",)`` mesh over every visible
+    device.  The grid size must split evenly over the axis (each device
+    executes a contiguous grid slice)."""
+    if mesh is None:
+        ndev = len(jax.devices())
+        mesh = jax.make_mesh((ndev,), ("cells",))
+        axis, size = "cells", ndev
+    else:
+        size = dict(mesh.shape).get("cells")
+        if size is None:
+            raise ValueError(f"shard='cells' needs a mesh axis named "
+                             f"'cells'; got {dict(mesh.shape)}")
+        axis = "cells"
+    if B % size != 0:
+        raise ValueError(
+            f"shard='cells': the {B}-cell grid must split evenly over the "
+            f"'{axis}' mesh axis of size {size}; pad the grid (e.g. repeat "
+            f"a seed) or pass a mesh whose cells axis divides it")
+    return mesh, axis
+
+
+def _mesh_collective(backend) -> bool:
+    """Whether a transport mixes through mesh collectives of its own (the
+    ``ppermute`` family, possibly wrapped) — those collectives claim the
+    node axis and cannot nest inside a program whose mesh partitions the
+    CELL axis."""
+    if getattr(backend, "name", "") == "ppermute":
+        return True
+    inner = getattr(backend, "inner", None)
+    if inner is None:
+        return False
+    if isinstance(inner, str):
+        return inner == "ppermute"
+    return _mesh_collective(inner)
+
+
 def _cell_arrays(cells, axis_names) -> dict:
     return {name: np.stack([np.asarray(c[name]) for c in cells])
             for name in axis_names}
@@ -377,17 +421,18 @@ def _cell_arrays(cells, axis_names) -> dict:
 def run_sweep(build: Callable,
               grid: dict,
               schedule=None,
+              exec: "ExecSpec | None" = None,
               *,
               seed: int = 0,
               record_every: int = 1,
-              resident: bool = True,
               batched: "bool | None" = None,
-              scan: bool = False,
-              sampling: str = "host",
-              gossip="auto",
-              mesh=None,
               mode: str = "product",
-              kernel: str = "xla") -> SweepResult:
+              resident=UNSET,
+              scan=UNSET,
+              sampling=UNSET,
+              gossip=UNSET,
+              mesh=UNSET,
+              kernel=UNSET) -> SweepResult:
     """Run ``build(**cell)`` over every cell of ``grid``.
 
     build:      cell factory ``build(**cell) -> (Algorithm, Problem)``;
@@ -401,30 +446,53 @@ def run_sweep(build: Callable,
                 the cartesian product, ``"zip"`` pairs the axes up.
     schedule:   the shared mixing schedule (or put a ``"schedule"`` axis in
                 the grid for topology sweeps).
-    resident:   True (default): the sweep is ONE batched device-resident
-                program — a single staged transfer, vmapped donated chunk
-                executors, in-chunk outer transitions, one stacked history
-                pull (O(1) transfers for the whole sweep).  False: cells
-                run sequentially through the host/scan paths (``scan=``).
-    batched:    override the batching choice: ``resident=True,
+    exec:       an :class:`~repro.core.exec_spec.ExecSpec`; ``None``
+                defaults to ``ExecSpec(resident=True)`` — the sweep is ONE
+                batched device-resident program (single staged transfer,
+                vmapped donated chunk executors, in-chunk outer
+                transitions, one stacked history pull — O(1) transfers for
+                the whole sweep).  ``resident=False`` drives the cells
+                sequentially through the host/scan paths.  ``sampling``,
+                ``gossip``, ``mesh``, ``kernel`` behave as on
+                ``runner.run`` (all cells share one transport; with a
+                ``"schedule"`` axis the wire representations must share
+                static structure — ``gossip="dense"`` always batches;
+                ``kernel`` swaps the fused Pallas resident step into the
+                same vmapped executors).  ``shard="cells"`` partitions the
+                batched program's CELL axis over a device mesh via GSPMD:
+                staging, cell hyperparameters, donated state, and history
+                buffers are placed with the cell axis split over the
+                mesh's ``"cells"`` axis (the caller's ``mesh``, else a
+                fresh 1-D mesh over all visible devices; the grid size
+                must split evenly), so each device executes a contiguous
+                grid slice — 100+-cell grids in one launch, histories
+                equal to the unsharded batched program to float tolerance,
+                with the O(1) transfer ledger intact.  Mesh-collective
+                transports (``ppermute``) cannot combine with
+                ``shard="cells"`` — their collectives claim the node axis.
+    batched:    override the batching choice: ``exec.resident=True,
                 batched=False`` runs the cells as SEQUENTIAL resident runs
                 (the baseline the batched program is benchmarked against).
-    sampling:   "host" (default): per-cell ``np.random`` streams, batched
-                histories match sequential runs to float tolerance;
-                "device" (resident only): per-cell ``jax.random`` keys in
-                the scan carry, zero batch staging.
-    gossip/mesh: transport selection, as in ``runner.run``.  All cells
-                share one backend; with a ``"schedule"`` axis the wire
-                representations must share static structure
-                (``gossip="dense"`` always batches).
-    kernel:     "xla" (default) | "pallas" | "auto", as in ``runner.run``:
-                cells whose algorithm declares ``AlgoMeta.fused_step`` run
-                the fused Pallas resident step (gossip mix + variance-
-                reduced correction + prox in one kernel) inside the same
-                vmapped chunk executors; the plan, staging and record
-                kernels are untouched.  Requires ``resident=True``.
+    resident, scan, sampling, gossip, mesh, kernel:
+                DEPRECATED keyword spellings of the ExecSpec fields
+                (one-release shim; combining them with ``exec=`` raises).
     """
     from . import runner as runner_lib
+
+    # topology grids put the schedule in the grid, so the spec is the next
+    # positional slot: run_sweep(build, grid, ExecSpec(...)) must not
+    # silently swallow the spec as a schedule
+    if isinstance(schedule, ExecSpec):
+        if exec is not None:
+            raise TypeError("run_sweep got two ExecSpecs — one in the "
+                            "schedule slot and one as exec=")
+        schedule, exec = None, schedule
+    spec = exec_spec_lib.resolve_exec(
+        exec, "runner.run_sweep", defaults={"resident": True},
+        resident=resident, scan=scan, sampling=sampling, gossip=gossip,
+        mesh=mesh, kernel=kernel)
+    resident, sampling, kernel = spec.resident, spec.sampling, spec.kernel
+    gossip, mesh, shard = spec.gossip, spec.mesh, spec.shard
 
     cells = expand_grid(grid, mode)
     B = len(cells)
@@ -440,13 +508,14 @@ def run_sweep(build: Callable,
         raise ValueError("batched sweeps are device-resident by "
                          "construction; resident=False implies "
                          "batched=False")
-    if kernel not in ("xla", "pallas", "auto"):
-        raise ValueError(f"kernel must be 'xla', 'pallas' or 'auto', got "
-                         f"{kernel!r}")
-    if kernel != "xla" and not resident:
-        raise ValueError("kernel='pallas'/'auto' swaps the fused resident "
-                         "step into the device-resident executors; it "
-                         "requires resident=True")
+    if shard == "nodes":
+        raise ValueError("shard='nodes' partitions a single resident run's "
+                         "node axis — use runner.run; batched sweeps "
+                         "partition the CELL axis (shard='cells')")
+    if shard == "cells" and not batched:
+        raise ValueError("shard='cells' partitions the batched cell axis "
+                         "over the mesh; it requires batched=True (the "
+                         "default)")
 
     def build_cell_concrete(cell):
         out = build(**{k: v for k, v in cell.items()
@@ -464,22 +533,31 @@ def run_sweep(build: Callable,
 
     if not batched:
         return _run_sequential(built, cells, schedules, seeds,
-                               record_every=record_every, resident=resident,
-                               scan=scan, sampling=sampling, gossip=gossip,
-                               mesh=mesh, kernel=kernel)
+                               record_every=record_every, spec=spec)
 
     _require_traced(template_algo)
-    if sampling not in ("host", "device"):
-        raise ValueError(f"sampling must be 'host' or 'device', got "
-                         f"{sampling!r}")
 
-    backend = runner_lib._resolved_backend(gossip, schedules[0], meta0, mesh)
+    # Under shard="cells" the mesh belongs to the CELL axis: the transport
+    # must neither auto-select ppermute off it nor build node collectives
+    # over it, so backends are resolved mesh-blind and mesh-collective
+    # transports are rejected outright.
+    gossip_mesh = None if shard == "cells" else mesh
+    backend = runner_lib._resolved_backend(gossip, schedules[0], meta0,
+                                           gossip_mesh)
+    if shard == "cells" and _mesh_collective(backend):
+        raise ValueError(
+            f"shard='cells' partitions the CELL axis over the mesh, but the "
+            f"{backend.name!r} transport mixes through node-axis mesh "
+            f"collectives — the two claim the same devices.  Use "
+            f"gossip='dense' or 'banded' (the mix stays within each "
+            f"device's grid slice), or shard='nodes' on a single run")
     aux_by_sched: dict = {}
     auxes = []
     for s in schedules:
         aux = aux_by_sched.get(id(s))
         if aux is None:
-            aux = aux_by_sched[id(s)] = backend.prepare(s, meta0, mesh=mesh)
+            aux = aux_by_sched[id(s)] = backend.prepare(s, meta0,
+                                                        mesh=gossip_mesh)
         auxes.append(aux)
 
     m = jax.tree.leaves(template_problem.x0)[0].shape[0]
@@ -522,15 +600,49 @@ def run_sweep(build: Callable,
         ("sweep_record", meta0.name, meta0.track_consensus, build,
          tuple(axis_names)))
 
+    # Under shard="cells" every batched array is PLACED at staging time:
+    # per-cell leaves with the cell axis split over the mesh's "cells" axis
+    # (each device holds — and executes — a contiguous grid slice), shared
+    # leaves replicated.  The vmapped executors are elementwise along the
+    # cell axis, so GSPMD partitions them with zero cross-device traffic
+    # and the single-device program is recovered exactly per slice.
+    if shard == "cells":
+        smesh, caxis = _cells_mesh(mesh, B)
+        NS, PS = jax.sharding.NamedSharding, jax.sharding.PartitionSpec
+        rep = NS(smesh, PS())
+        cell0 = NS(smesh, PS(caxis))
+        cell1 = NS(smesh, PS(None, caxis))
+        comp_shard = [cell1 if a == 1 else rep
+                      for a in _xs_axes(meta0, sampling, plan)]
+
+        def _xs_shardings(xs):
+            return tuple(jax.tree.map(lambda _, s=s: s, x)
+                         for x, s in zip(xs, comp_shard))
+
+        def _put_cells(tree, sharding):
+            return jax.device_put(tree,
+                                  jax.tree.map(lambda _: sharding, tree))
+    else:
+        _xs_shardings = None
+        _put_cells = lambda tree, sharding: tree
+
     # one dataset staging (shared across cells) + ONE staging transfer for
     # every chunk's xs and the cell-axis hyperparameter arrays
     if any(not isinstance(leaf, jax.Array)
            for leaf in jax.tree.leaves(template_problem.full_data)):
         transfers["h2d"] += 1
     data_dev = jax.tree.map(jnp.asarray, template_problem.full_data)
+    if shard == "cells":
+        data_dev = _put_cells(data_dev, rep)
     runner_lib._warn_staging(runner_lib._staged_bytes(plan.chunks), cells=B)
-    staged, cells_dev = jax.device_put(
-        ([c.xs for c in plan.chunks], _cell_arrays(cells, axis_names)))
+    if shard == "cells":
+        staged, cells_dev = jax.device_put(
+            ([c.xs for c in plan.chunks], _cell_arrays(cells, axis_names)),
+            ([_xs_shardings(c.xs) for c in plan.chunks],
+             {name: cell0 for name in axis_names}))
+    else:
+        staged, cells_dev = jax.device_put(
+            ([c.xs for c in plan.chunks], _cell_arrays(cells, axis_names)))
     transfers["h2d"] += 1
 
     states = []
@@ -541,10 +653,14 @@ def run_sweep(build: Callable,
             state = algo.device_state(state)
         states.append(state)
     state_b = runner_lib._shield_for_donation(_stack_states(states))
+    if shard == "cells":
+        state_b = _put_cells(state_b, cell0)
 
     if device_sampling:
-        carry = (state_b,
-                 jnp.stack([jax.random.PRNGKey(s) for s in key_seeds]))
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in key_seeds])
+        if shard == "cells":
+            keys = jax.device_put(keys, cell0)
+        carry = (state_b, keys)
         unpack = lambda c: c[0]
     else:
         carry = state_b
@@ -553,6 +669,12 @@ def run_sweep(build: Callable,
     bufs = (jnp.zeros((plan.num_records, B), jnp.float32),
             jnp.zeros((plan.num_records, B), jnp.float32),
             jnp.zeros((), jnp.int32))
+    if shard == "cells":
+        # history buffers split along the cell column; the slot counter is
+        # replicated so every shard advances it in lockstep
+        bufs = (jax.device_put(bufs[0], cell1),
+                jax.device_put(bufs[1], cell1),
+                jax.device_put(bufs[2], rep))
 
     guard = runner_lib._RESIDENT_DISPATCH_GUARD
     get_params = template_algo.get_params
@@ -582,8 +704,7 @@ def run_sweep(build: Callable,
 
 
 def _run_sequential(built, cells, schedules, seeds, *, record_every,
-                    resident, scan, sampling, gossip, mesh,
-                    kernel="xla") -> SweepResult:
+                    spec: ExecSpec) -> SweepResult:
     """Reference path: one ``runner.run`` per cell, stacked to the same
     (records, cells) result shape as the batched program."""
     from . import runner as runner_lib
@@ -591,9 +712,7 @@ def _run_sequential(built, cells, schedules, seeds, *, record_every,
     results = []
     for (algo, problem), sched, s in zip(built, schedules, seeds):
         results.append(runner_lib.run(
-            algo, problem, sched, seed=s, record_every=record_every,
-            scan=scan, resident=resident, sampling=sampling, gossip=gossip,
-            mesh=mesh, kernel=kernel))
+            algo, problem, sched, spec, seed=s, record_every=record_every))
     lens = {len(r.history.steps) for r in results}
     if len(lens) > 1:
         raise _ragged(f"cells produced different record counts {lens}")

@@ -48,14 +48,17 @@ Registered backends (:data:`GOSSIP_BACKENDS`):
     (``core.compression``), cutting bytes by ``32 / bits``.  Stateful — the
     driven algorithm must thread a mix state (``Algorithm.init_mix_state``).
 
-``"auto"`` (the ``runner.run`` default) picks by schedule bandwidth and mesh
-availability: banded structure present (offset union strictly smaller than
-m) -> ``ppermute`` when a node-axis mesh is available, else ``banded``;
-saturated union (e.g. faithful unbounded multi-consensus, whose k-round
-products acquire bandwidth k) -> ``dense``.  On the auto path the old
-band-saturation ``RuntimeWarning`` is thus replaced by a silent correct
-choice; EXPLICITLY requesting ``banded`` on a saturated schedule still
-warns (correct, but strictly slower than dense).
+``"auto"`` (the ``runner.run`` default) picks by mesh availability first,
+then schedule bandwidth: a node-axis mesh (axis of size m) -> ``ppermute``
+— even for a dense-saturated offset union, since on a mesh every band is
+one collective-permute of the local shard (all-gathering m stacked copies
+would be strictly worse); no mesh + banded structure (offset union
+strictly smaller than m) -> ``banded``; no mesh + saturated union (e.g.
+faithful unbounded multi-consensus, whose k-round products acquire
+bandwidth k) -> ``dense``.  On the auto path the old band-saturation
+``RuntimeWarning`` is thus replaced by a silent correct choice; EXPLICITLY
+requesting ``banded`` on a saturated schedule still warns (correct, but
+strictly slower than dense).
 
 Methods that quantize their own gossip payload declare it via
 ``AlgoMeta.compress_bits``; the runner wraps whatever transport resolves in
@@ -525,17 +528,22 @@ def select_backend_name(schedule: graphs.MixingSchedule, meta,
                         mesh=None) -> str:
     """The ``"auto"`` rule.
 
-    Banded structure present (static offset union strictly smaller than m)
-    -> ``"ppermute"`` when a node-axis mesh is available, else ``"banded"``.
-    Saturated union (e.g. faithful DPSVRG multi-consensus, whose unbounded
-    k-round products acquire bandwidth k) -> ``"dense"``: m cyclic passes
-    per step would be strictly slower than one (m, m) contraction, so the
-    old band-saturation ``RuntimeWarning`` is now just the dense choice.
+    A node-axis mesh (an axis of size m) wins outright -> ``"ppermute"``:
+    on a real mesh every band is one collective-permute of the LOCAL shard
+    regardless of how many bands the union holds, so even a dense-saturated
+    union (which historically forced ``"dense"`` and silently ignored the
+    mesh) moves O(m) local payloads per step instead of all-gathering m
+    stacked copies to every node.  Otherwise: banded structure present
+    (static offset union strictly smaller than m) -> ``"banded"``; saturated
+    union (e.g. faithful DPSVRG multi-consensus, whose unbounded k-round
+    products acquire bandwidth k) -> ``"dense"``: m cyclic passes per step
+    on ONE device would be strictly slower than one (m, m) contraction, so
+    the old band-saturation ``RuntimeWarning`` is now just the dense choice.
     """
-    if len(band_offset_union(schedule, meta)) >= schedule.m:
-        return "dense"
     if mesh is not None and _node_axis(mesh, schedule.m) is not None:
         return "ppermute"
+    if len(band_offset_union(schedule, meta)) >= schedule.m:
+        return "dense"
     return "banded"
 
 

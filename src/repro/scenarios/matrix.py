@@ -31,7 +31,8 @@ from typing import Any, Callable, Mapping, NamedTuple, Sequence
 
 import numpy as np
 
-from repro.core import graphs, sweep as sweep_lib
+from repro.core import exec_spec as exec_spec_lib, graphs, \
+    sweep as sweep_lib
 
 from . import models as models_lib
 from .transports import ScenarioBackend
@@ -87,7 +88,8 @@ def run_matrix(problem,
                scenario_seed: int = 0,
                batched: bool = True,
                sampling: str = "host",
-               mesh=None) -> MatrixResult:
+               mesh=None,
+               shard: "str | None" = None) -> MatrixResult:
     """Expand and run the scenario matrix.
 
     problem:      the shared :class:`~repro.core.algorithm.Problem` (one
@@ -105,6 +107,11 @@ def run_matrix(problem,
     batched:      False falls back to sequential resident runs per cell
                   (same rows, no shared program — the equivalence
                   baseline).
+    shard:        ``"cells"`` partitions each batched program's cell axis
+                  over ``mesh`` (or a fresh all-device mesh) via GSPMD —
+                  see ``ExecSpec.shard``; every (topology x failure x
+                  seed) plane must then split evenly over the device
+                  count.
     """
     failures = {name: models_lib._check_models(mdls)
                 for name, mdls in failures.items()}
@@ -138,9 +145,10 @@ def run_matrix(problem,
                     seed=scenario_seed, compress_bits=bits)
                 res = sweep_lib.run_sweep(
                     build, {"schedule": schedules, "seed": seeds},
-                    record_every=record_every, resident=True,
-                    batched=batched, sampling=sampling, gossip=backend,
-                    mesh=mesh)
+                    exec=exec_spec_lib.ExecSpec(
+                        resident=True, sampling=sampling, gossip=backend,
+                        mesh=mesh, shard=shard),
+                    record_every=record_every, batched=batched)
                 groups.append({
                     "algorithm": algo_name,
                     "compression": _bits_label(bits),

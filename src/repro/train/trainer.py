@@ -56,14 +56,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt_lib
-from repro.core import algorithm as algo_lib, graphs, \
-    prox as prox_lib, runner as runner_lib, schedules, transport
+from repro.core import algorithm as algo_lib, \
+    exec_spec as exec_spec_lib, graphs, prox as prox_lib, \
+    runner as runner_lib, schedules, sweep as sweep_lib, transport
+from repro.core.exec_spec import UNSET, ExecSpec
 from repro.data import loader as loader_lib
 from repro.models.api import ModelConfig
 from . import steps as steps_lib
 from .tracker import CompositeTracker, HistoryTracker, resolve_tracker
 
-__all__ = ["TrainerConfig", "train_loop"]
+__all__ = ["TrainerConfig", "train_loop", "train_sweep"]
 
 
 @dataclasses.dataclass
@@ -215,15 +217,34 @@ def _make_lm_exec(bundle, *, vr: bool, sampling: str, seq_len: int,
          batch, snap_batch), make)
 
 
+def _check_lm_spec(spec: ExecSpec, caller: str) -> None:
+    """The LM trainer consumes the SAME ExecSpec as ``runner.run`` but only
+    implements the host-loop / resident halves of it; fields that select
+    repro-scale-only machinery fail loudly instead of being ignored."""
+    if spec.scan:
+        raise ValueError(f"{caller}: the LM trainer has no scan path — "
+                         f"ExecSpec(scan=True) selects runner.run's "
+                         f"lax.scan fast path; use resident=True here")
+    if spec.kernel != "xla":
+        raise ValueError(f"{caller}: ExecSpec(kernel={spec.kernel!r}) "
+                         f"selects the repro-scale fused resident step; the "
+                         f"LM trainer's kernels come from the model config")
+    if spec.device_transitions is False:
+        raise ValueError(f"{caller}: the resident LM path always folds "
+                         f"snapshot refreshes into the compiled chunks; "
+                         f"device_transitions=False applies to runner.run")
+
+
 def train_loop(cfg: ModelConfig,
                prox: prox_lib.Prox,
                schedule: graphs.MixingSchedule,
                data,
                tc: TrainerConfig,
                snapshot_batch_iter=None,
-               mesh=None, plan=None, *,
-               resident: bool | None = None,
-               sampling: str | None = None,
+               mesh=None, plan=None,
+               exec: "ExecSpec | None" = None, *,
+               resident=UNSET,
+               sampling=UNSET,
                tracker=None,
                resume: bool = False) -> dict:
     """Returns the history dict (``step``/``loss``/``v_norm``/``alpha``/
@@ -235,23 +256,40 @@ def train_loop(cfg: ModelConfig,
     ``per_node_batch * snapshot_batch_mult`` windows) or a legacy iterator
     of stacked per-node batch dicts (host path only;
     ``snapshot_batch_iter`` then supplies the outer-loop refresh batches,
-    defaulting to ``data``).  Keyword overrides (``resident``/``sampling``/
-    ``tracker``) fall back to the corresponding ``TrainerConfig`` fields."""
+    defaulting to ``data``).
+
+    ``exec`` is the same :class:`~repro.core.exec_spec.ExecSpec`
+    ``runner.run`` consumes; its ``resident``/``sampling`` fields default
+    to the corresponding ``TrainerConfig`` fields, its ``gossip``/``mesh``
+    override ``tc.gossip`` and the positional ``mesh=`` when set
+    (``gossip="auto"`` defers to ``tc.gossip``).  The bare ``resident=``/
+    ``sampling=`` keywords are a deprecated one-release shim.  ``tracker``
+    falls back to ``tc.tracker``."""
+    spec = exec_spec_lib.resolve_exec(
+        exec, "train_loop",
+        defaults={"resident": tc.resident, "sampling": tc.sampling},
+        resident=resident, sampling=sampling)
+    _check_lm_spec(spec, "train_loop")
+    if spec.shard == "cells":
+        raise ValueError("shard='cells' partitions a hyperparameter grid's "
+                         "cell axis — use train_sweep for batched λ/lr "
+                         "grids; train_loop drives a single configuration")
+    if spec.shard == "nodes":
+        raise ValueError("the resident LM path does not support sharded "
+                         "state (shard='nodes') yet — use the host loop "
+                         "with mesh/plan")
+    resident, sampling = spec.resident, spec.sampling
+    if mesh is None:
+        mesh = spec.mesh
+    gossip = tc.gossip if spec.gossip == "auto" else spec.gossip
+
     m = schedule.m
     rule = algo_lib.UPDATE_RULES[tc.algorithm] \
         if isinstance(tc.algorithm, str) else tc.algorithm
     vr = rule.needs_snapshot
     alpha_fn = _realized_alpha_fn(tc, rule)
 
-    resident = tc.resident if resident is None else resident
-    sampling = tc.sampling if sampling is None else sampling
     is_loader = isinstance(data, loader_lib.LMLoader)
-    if sampling not in ("host", "device"):
-        raise ValueError(f"sampling must be 'host' or 'device', got "
-                         f"{sampling!r}")
-    if sampling == "device" and not resident:
-        raise ValueError("sampling='device' draws window starts inside the "
-                         "compiled chunk body — it requires resident=True")
     if resident and not is_loader:
         raise ValueError(
             "resident=True plans the whole run up front, which needs the "
@@ -275,7 +313,7 @@ def train_loop(cfg: ModelConfig,
     # flows into the jitted train step, which dispatches the mix on its
     # type; stateful transports thread their state via TrainState.mix_state
     tmeta = transport.TransportMeta.constant(tc.consensus_rounds)
-    backend = transport.resolve_backend(tc.gossip, schedule, tmeta, mesh)
+    backend = transport.resolve_backend(gossip, schedule, tmeta, mesh)
     gaux = backend.prepare(schedule, tmeta, mesh=mesh)
     bundle = steps_lib.build_train_step(cfg, prox, m, plan=plan, mesh=mesh,
                                         algorithm=rule, donate=False)
@@ -498,3 +536,234 @@ def train_loop(cfg: ModelConfig,
     hist["final_state"] = state
     hist["transfers"] = dict(transfers)
     return hist
+
+
+# ---------------------------------------------------------------------------
+# Batched λ/lr-grid sweeps (one device program for the whole grid)
+# ---------------------------------------------------------------------------
+
+def train_sweep(cfg: ModelConfig,
+                build,
+                schedule: graphs.MixingSchedule,
+                data,
+                tc: TrainerConfig,
+                grid: dict,
+                exec: "ExecSpec | None" = None,
+                mode: str = "product") -> dict:
+    """Train the whole hyperparameter grid as ONE resident device program.
+
+    ``build(**cell) -> Prox`` is the cell factory (``prox.l1(lam)``,
+    elastic-net pairs, ...): called once per cell with concrete values for
+    validation and once INSIDE the batched trace with traced values
+    (``run_sweep``'s tracer-rebuild trick), so each vmapped cell computes
+    its own regularizer from its own scalars.  ``grid`` maps axis names to
+    numeric value lists; the reserved axis ``"alpha"`` is driver-level —
+    it overrides ``tc.alpha`` in the cell's realized step-size schedule
+    (step sizes are host-planned into a staged ``(steps, cells)`` column)
+    and is NOT passed to ``build``.
+
+    Every cell sees the SAME loader stream ``data`` (drawn once, host-side,
+    in ``train_loop``'s planning order), so cell i's history equals a
+    sequential ``train_loop(exec=ExecSpec(resident=True))`` over a fresh
+    same-seed loader to float tolerance.  The grid ships in one staging
+    transfer, runs through one donated vmapped ``lax.scan`` executor, and
+    pulls one stacked metrics tree — O(1) transfers for the whole sweep.
+    ``exec`` defaults to ``ExecSpec(resident=True)``;
+    ``ExecSpec(shard="cells")`` partitions the cell axis over a device
+    mesh exactly as in ``runner.run_sweep``.
+
+    Returns ``{"grid", "step", "loss", "v_norm", "alpha", "wire_bytes",
+    "final_state", "transfers"}`` with ``(records, cells)`` metric columns.
+    """
+    spec = exec_spec_lib.resolve_exec(exec, "train_sweep",
+                                      defaults={"resident": True})
+    _check_lm_spec(spec, "train_sweep")
+    if not spec.resident:
+        raise ValueError("train_sweep is a batched device-resident program "
+                         "(the grid rides one vmapped executor); for "
+                         "sequential cells loop train_loop")
+    if spec.sampling != "host":
+        raise ValueError("train_sweep stages ONE shared host-drawn loader "
+                         "stream so every cell sees the draws a sequential "
+                         "train_loop would; sampling='device' is not "
+                         "supported")
+    if spec.shard == "nodes":
+        raise ValueError("shard='nodes' partitions a single run's node "
+                         "axis — train_sweep partitions the CELL axis "
+                         "(shard='cells')")
+    if tc.ckpt_dir or tc.tracker:
+        raise ValueError("train_sweep neither checkpoints nor streams "
+                         "trackers — run cells through train_loop for "
+                         "those")
+    if not isinstance(data, loader_lib.LMLoader):
+        raise ValueError("train_sweep plans the whole run up front, which "
+                         "needs the LMLoader's index-based sampling")
+    shard, mesh = spec.shard, spec.mesh
+    gossip = tc.gossip if spec.gossip == "auto" else spec.gossip
+
+    cells = sweep_lib.expand_grid(grid, mode)
+    n_cells = len(cells)
+    axis_names = [n for n in grid if n != "alpha"]
+    m = schedule.m
+    rule = algo_lib.UPDATE_RULES[tc.algorithm] \
+        if isinstance(tc.algorithm, str) else tc.algorithm
+    vr = rule.needs_snapshot
+    alpha_fns = [_realized_alpha_fn(
+        dataclasses.replace(tc, alpha=float(c.get("alpha", tc.alpha))), rule)
+        for c in cells]
+
+    def cell_prox(cell):
+        out = build(**{k: v for k, v in cell.items() if k != "alpha"})
+        if not isinstance(out, prox_lib.Prox):
+            raise TypeError(f"build(**cell) must return a Prox, got "
+                            f"{type(out).__name__}")
+        return out
+
+    proxes = [cell_prox(c) for c in cells]   # concrete validation pass
+
+    tmeta = transport.TransportMeta.constant(tc.consensus_rounds)
+    gossip_mesh = None if shard == "cells" else mesh
+    backend = transport.resolve_backend(gossip, schedule, tmeta, gossip_mesh)
+    if shard == "cells" and sweep_lib._mesh_collective(backend):
+        raise ValueError(
+            f"shard='cells' partitions the CELL axis over the mesh, but "
+            f"the {backend.name!r} transport mixes through node-axis mesh "
+            f"collectives — use gossip='dense' or 'banded'")
+    gaux = backend.prepare(schedule, tmeta, mesh=gossip_mesh)
+
+    bundle0 = steps_lib.build_train_step(cfg, proxes[0], m, algorithm=rule,
+                                         donate=False)
+    state0 = bundle0.init_state(jax.random.PRNGKey(tc.seed))
+    if backend.needs_mix_state:
+        state0 = state0._replace(
+            mix_state=backend.init_mix_state(gaux, state0.params))
+    param_count = transport.node_param_count(state0.params)
+
+    # host planning: ONE shared draw stream + phi schedule, per-cell alpha
+    # columns realized into a staged (steps, cells) array
+    Bn = data.per_node_batch
+    snap_B = Bn * tc.snapshot_batch_mult
+    starts_l, sstarts_l, snaps_l, phis_l, wire_l = [], [], [], [], []
+    alphas = np.empty((tc.num_steps, n_cells), np.float32)
+    slot, wire = 0, 0
+    for step in range(tc.num_steps):
+        snap = vr and step % tc.snapshot_every == 0
+        if vr:
+            # draw order matches train_loop exactly: snapshot windows first
+            sstarts_l.append(data.sample_starts(snap_B) if snap
+                             else np.zeros((m, snap_B), np.int64))
+            snaps_l.append(snap)
+        starts_l.append(data.sample_starts(Bn))
+        phi = backend.phi_for(gaux, slot, tc.consensus_rounds)
+        wire += backend.bytes_per_step(gaux, phi, param_count)
+        slot += tc.consensus_rounds
+        phis_l.append(phi)
+        wire_l.append(wire)
+        for j, fn in enumerate(alpha_fns):
+            alphas[step, j] = fn(step)
+
+    phis = jax.tree.map(lambda *l: runner_lib._stack_wire(l), *phis_l)
+    starts = np.stack(starts_l).astype(np.int32)
+    if vr:
+        xs = (starts, np.stack(sstarts_l).astype(np.int32),
+              np.asarray(snaps_l, np.bool_), phis, alphas)
+        xs_axes = (None, None, None, None, 1)
+    else:
+        xs = (starts, phis, alphas)
+        xs_axes = (None, None, 1)
+
+    cache_key = ("train_sweep", cfg, build, rule.name, vr, data.seq_len,
+                 Bn, snap_B, tuple(axis_names))
+
+    def make():
+        L = data.seq_len
+
+        def gather(shards, st):
+            win = jax.vmap(
+                lambda row, s: row[s[:, None]
+                                   + jnp.arange(L + 1)[None, :]])(shards, st)
+            return {"tokens": win[..., :L], "labels": win[..., 1:]}
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def exec_sweep(carry, xs, shards, cells_d):
+            def one_cell(state_c, xs_c, cell):
+                # tracer rebuild: the cell's prox from its traced scalars;
+                # _build_train_step bypasses the bundle cache (a traced
+                # prox hashes by closure identity — caching it would pin
+                # tracers past the trace)
+                with algo_lib.ephemeral_steps():
+                    prox_t = cell_prox(cell)
+                    bundle_t = steps_lib._build_train_step(
+                        cfg, prox_t, m, None, None, rule, False)
+
+                def body(state, xs_step):
+                    if vr:
+                        st, sst, snap, phi, alpha = xs_step
+                        state = jax.lax.cond(
+                            snap,
+                            lambda s: bundle_t.snapshot_step(
+                                s, gather(shards, sst)),
+                            lambda s: s, state)
+                    else:
+                        st, phi, alpha = xs_step
+                    state, mets = bundle_t.train_step(
+                        state, gather(shards, st), phi, alpha)
+                    return state, (mets["loss"], mets["v_norm"])
+
+                return jax.lax.scan(body, state_c, xs_c)
+
+            return jax.vmap(one_cell, in_axes=(0, xs_axes, 0))(
+                carry, xs, cells_d)
+
+        return exec_sweep
+
+    exec_sweep = sweep_lib._shared_sweep_exec(cache_key, make)
+
+    transfers = {"h2d": 0, "d2h": 0}
+    state_b = runner_lib._shield_for_donation(
+        jax.tree.map(lambda l: jnp.stack([l] * n_cells), state0))
+    cells_arr = sweep_lib._cell_arrays(cells, axis_names)
+    shards = data.stacked_shards()
+    staged_bytes = sum(np.asarray(leaf).nbytes
+                       for leaf in jax.tree.leaves(xs))
+    runner_lib._warn_staging(staged_bytes, cells=n_cells)
+
+    if shard == "cells":
+        smesh, caxis = sweep_lib._cells_mesh(mesh, n_cells)
+        NS, PS = jax.sharding.NamedSharding, jax.sharding.PartitionSpec
+        rep = NS(smesh, PS())
+        cell0 = NS(smesh, PS(caxis))
+        cell1 = NS(smesh, PS(None, caxis))
+        xs_sh = tuple(jax.tree.map(lambda _, s=s: s, x)
+                      for x, s in zip(xs, [cell1 if a == 1 else rep
+                                           for a in xs_axes]))
+        xs_dev, shards_dev, cells_dev = jax.device_put(
+            (xs, shards, cells_arr),
+            (xs_sh, jax.tree.map(lambda _: rep, shards),
+             {n: cell0 for n in cells_arr}))
+        state_b = jax.device_put(state_b,
+                                 jax.tree.map(lambda _: cell0, state_b))
+    else:
+        xs_dev, shards_dev, cells_dev = jax.device_put(
+            (xs, shards, cells_arr))
+    transfers["h2d"] += 1
+
+    t0 = time.time()
+    with runner_lib._RESIDENT_DISPATCH_GUARD():
+        state_b, ys = exec_sweep(state_b, xs_dev, shards_dev, cells_dev)
+    losses, vnorms = jax.device_get(ys)        # the ONE metrics pull, (B, T)
+    transfers["d2h"] += 1
+
+    rec = [s for s in range(tc.num_steps)
+           if s % tc.log_every == 0 or s == tc.num_steps - 1]
+    return {
+        "grid": cells,
+        "step": rec,
+        "loss": np.asarray(losses, np.float64)[:, rec].T,
+        "v_norm": np.asarray(vnorms, np.float64)[:, rec].T,
+        "alpha": alphas[rec],
+        "wire_bytes": [wire_l[s] for s in rec],
+        "time": time.time() - t0,
+        "final_state": state_b,
+        "transfers": dict(transfers),
+    }

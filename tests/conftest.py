@@ -28,11 +28,12 @@ def run_named_algorithm(loss_fn, name, data, h, x0, sched, *factory_args,
     agree to float tolerance, not bitwise.  Transport selection has its own
     coverage in tests/test_transport.py."""
     from repro.core import algorithm, runner
+    from repro.core.exec_spec import ExecSpec
     problem = algorithm.Problem(loss_fn, h, x0, data)
     algo = algorithm.ALGORITHMS[name](problem, *factory_args, **factory_kw)
-    return runner.run(algo, problem, sched, seed=seed,
-                      record_every=record_every, scan=scan,
-                      gossip=gossip)
+    return runner.run(algo, problem, sched,
+                      ExecSpec(scan=scan, gossip=gossip),
+                      seed=seed, record_every=record_every)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,280 @@
+"""ExecSpec surface: construction-time validation, the one-release legacy
+keyword shim (DeprecationWarning + value equality with the spec spelling,
+conflict raises), the retired ``gossip_mode`` mapping, the mesh-first
+``"auto"`` transport rule, and host-side quantized wire accounting (the
+per-link map sums EXACTLY to ``bytes_per_step`` at bit widths that do and
+don't divide 32)."""
+
+import functools
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithm, graphs, prox, runner, sweep, transport
+from repro.core.exec_spec import UNSET, ExecSpec, resolve_exec
+from repro.data import synthetic
+
+
+def logreg_loss(w, batch):
+    logits = batch["features"] @ w
+    y = batch["labels"]
+    return jnp.mean(-y * logits + jnp.log1p(jnp.exp(logits)))
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(m=4, n=96, d=10, seed=0):
+    ds = synthetic.make_classification(n=n, d=d, seed=seed)
+    data = {k: jnp.asarray(v)
+            for k, v in synthetic.partition_per_node(ds, m).items()}
+    from repro.core import gossip
+    h = prox.l1(0.01)
+    x0 = gossip.stack_tree(jnp.zeros(d), m)
+    return data, h, x0
+
+
+def _problem():
+    data, h, x0 = _setup()
+    return algorithm.Problem(logreg_loss, h, x0, data)
+
+
+def _ring(m=4):
+    return graphs.b_connected_ring_schedule(m, b=1, seed=0)
+
+
+def _algo(problem):
+    return algorithm.loopless_dpsvrg_algorithm(problem, 0.3, 24,
+                                               snapshot_prob=0.1)
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_defaults_reproduce_host_loop_spelling():
+    spec = ExecSpec()
+    assert (spec.scan, spec.resident, spec.sampling) == (False, False, "host")
+    assert (spec.device_transitions, spec.kernel) == ("auto", "xla")
+    assert (spec.gossip, spec.mesh, spec.shard) == ("auto", None, None)
+
+
+@pytest.mark.parametrize("kw, match", [
+    (dict(sampling="gpu"), "sampling"),
+    (dict(kernel="cuda", resident=True), "kernel"),
+    (dict(shard="rows", resident=True), "shard"),
+    (dict(device_transitions="yes"), "device_transitions"),
+    (dict(sampling="device"), "resident=True"),
+    (dict(device_transitions=True), "resident=True"),
+    (dict(kernel="pallas"), "resident=True"),
+    (dict(shard="cells"), "resident=True"),
+    (dict(shard="nodes"), "resident=True"),
+])
+def test_invalid_specs_fail_at_construction(kw, match):
+    with pytest.raises(ValueError, match=match):
+        ExecSpec(**kw)
+
+
+def test_replace_revalidates():
+    spec = ExecSpec(resident=True, shard="nodes")
+    assert spec.replace(shard="cells").shard == "cells"
+    with pytest.raises(ValueError, match="resident=True"):
+        spec.replace(resident=False)
+
+
+def test_spec_is_immutable():
+    with pytest.raises(Exception):
+        ExecSpec().resident = True
+
+
+# ---------------------------------------------------------------------------
+# resolve_exec: the one-release shim contract
+# ---------------------------------------------------------------------------
+
+def test_resolve_spec_passes_through_untouched():
+    spec = ExecSpec(resident=True, gossip="banded")
+    out = resolve_exec(spec, "runner.run", resident=UNSET, gossip=UNSET)
+    assert out is spec
+
+
+def test_resolve_conflict_raises():
+    with pytest.raises(ValueError, match="conflicting execution settings"):
+        resolve_exec(ExecSpec(), "runner.run", resident=True, gossip=UNSET)
+
+
+def test_resolve_legacy_warns_and_builds_spec():
+    with pytest.warns(DeprecationWarning,
+                      match=r"runner\.run\(resident=\.\.\.\) is deprecated"):
+        out = resolve_exec(None, "runner.run", resident=True, scan=UNSET)
+    assert out == ExecSpec(resident=True)
+
+
+def test_resolve_defaults_overlay():
+    # run_sweep's historical default was resident=True; an explicit legacy
+    # keyword overrides the overlay
+    assert resolve_exec(None, "runner.run_sweep",
+                        defaults={"resident": True}) == \
+        ExecSpec(resident=True)
+    with pytest.warns(DeprecationWarning):
+        out = resolve_exec(None, "runner.run_sweep",
+                           defaults={"resident": True}, resident=False)
+    assert out == ExecSpec(resident=False)
+
+
+def test_resolve_rejects_non_spec():
+    with pytest.raises(TypeError, match="exec must be an ExecSpec"):
+        resolve_exec({"resident": True}, "runner.run")
+
+
+# ---------------------------------------------------------------------------
+# driver shims: legacy keywords == spec spelling, one warning each
+# ---------------------------------------------------------------------------
+
+def test_run_legacy_kwargs_equal_spec(recwarn):
+    problem = _problem()
+    sched = _ring()
+    spec_res = runner.run(_algo(problem), problem, sched,
+                          ExecSpec(resident=True, gossip="dense"),
+                          seed=3, record_every=4)
+    with pytest.warns(DeprecationWarning, match="exec=ExecSpec"):
+        legacy = runner.run(_algo(problem), problem, sched, resident=True,
+                            gossip="dense", seed=3, record_every=4)
+    np.testing.assert_array_equal(spec_res.history.objective,
+                                  legacy.history.objective)
+    np.testing.assert_array_equal(np.asarray(spec_res.params),
+                                  np.asarray(legacy.params))
+
+
+def test_run_spec_plus_legacy_kwarg_raises():
+    problem = _problem()
+    with pytest.raises(ValueError, match="conflicting execution settings"):
+        runner.run(_algo(problem), problem, _ring(),
+                   ExecSpec(resident=True), scan=True)
+
+
+def test_run_gossip_mode_still_maps():
+    problem = _problem()
+    sched = _ring()
+    with pytest.warns(DeprecationWarning, match="gossip_mode"):
+        legacy = runner.run(_algo(problem), problem, sched,
+                            gossip_mode="dense", seed=1, record_every=6)
+    ref = runner.run(_algo(problem), problem, sched, ExecSpec(gossip="dense"),
+                     seed=1, record_every=6)
+    np.testing.assert_array_equal(ref.history.objective,
+                                  legacy.history.objective)
+
+
+def test_run_sweep_legacy_kwargs_equal_spec():
+    problem = _problem()
+    sched = _ring()
+
+    def build():
+        return _algo(problem), problem
+
+    spec_res = sweep.run_sweep(build, {"seed": [0, 1]}, sched,
+                               ExecSpec(resident=True, gossip="dense"),
+                               record_every=6)
+    with pytest.warns(DeprecationWarning, match="exec=ExecSpec"):
+        legacy = sweep.run_sweep(build, {"seed": [0, 1]}, sched,
+                                 gossip="dense", record_every=6)
+    np.testing.assert_array_equal(spec_res.history.objective,
+                                  legacy.history.objective)
+
+
+def test_run_sweep_spec_in_schedule_slot_is_lifted():
+    """Topology grids carry the schedule IN the grid, putting the spec in
+    the third positional slot — it must reach exec=, not be swallowed as a
+    schedule (regression: a ScenarioBackend spec silently degraded to the
+    'auto' transport)."""
+    problem = _problem()
+
+    def build():
+        return _algo(problem), problem
+
+    grid = {"schedule": [_ring()], "seed": [0]}
+    quantized = transport.CompressedBackend(inner="dense", bits=8)
+    positional = sweep.run_sweep(build, grid,
+                                 ExecSpec(resident=True, gossip=quantized),
+                                 record_every=6)
+    keyword = sweep.run_sweep(build, grid,
+                              exec=ExecSpec(resident=True, gossip=quantized),
+                              record_every=6)
+    np.testing.assert_array_equal(positional.history.objective,
+                                  keyword.history.objective)
+    # a swallowed spec degrades to the uncompressed 'auto' transport —
+    # the int8 wire charge is the tell
+    f32 = sweep.run_sweep(build, grid,
+                          exec=ExecSpec(resident=True, gossip="dense"),
+                          record_every=6)
+    assert (np.asarray(positional.extras["wire_bytes"])[-1]
+            == np.asarray(keyword.extras["wire_bytes"])[-1]).all()
+    assert (np.asarray(positional.extras["wire_bytes"])[-1] * 4
+            == np.asarray(f32.extras["wire_bytes"])[-1]).all()
+    with pytest.raises(TypeError, match="two ExecSpecs"):
+        sweep.run_sweep(build, grid, ExecSpec(resident=True),
+                        exec=ExecSpec(resident=True))
+
+
+def test_suite_is_clean_under_deprecation_as_error():
+    """The repo's own drivers never take the shim path: a spec-spelled call
+    raises nothing with DeprecationWarning escalated."""
+    problem = _problem()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        runner.run(_algo(problem), problem, _ring(),
+                   ExecSpec(resident=True, gossip="dense"),
+                   seed=0, record_every=8)
+
+
+# ---------------------------------------------------------------------------
+# "auto" transport: mesh-first selection
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    """select_backend_name only reads mesh.shape.items()."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+def test_auto_prefers_ppermute_on_node_axis_mesh_even_when_saturated():
+    from repro.core import dpsvrg
+    problem = _problem()
+    sched = _ring()
+    faithful = algorithm.dpsvrg_algorithm(
+        problem, dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=4,
+                                          num_outer=6)).meta
+    # unbounded multi-consensus saturates the union: dense without a mesh
+    assert transport.select_backend_name(sched, faithful) == "dense"
+    # ... but a node-axis mesh wins outright — every band is one
+    # collective-permute of the local shard
+    mesh = _FakeMesh(nodes=4)
+    assert transport.select_backend_name(sched, faithful, mesh) == "ppermute"
+    # a mesh with no axis of size m falls back to the bandwidth rule
+    assert transport.select_backend_name(sched, faithful,
+                                         _FakeMesh(nodes=3)) == "dense"
+
+
+# ---------------------------------------------------------------------------
+# quantized wire accounting (host-side)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.filterwarnings("ignore:.*banded gossip.*:RuntimeWarning")
+@pytest.mark.parametrize("bits", [4, 3])
+@pytest.mark.parametrize("inner", ["dense", "banded"])
+def test_compressed_per_link_map_sums_exactly_to_bytes_per_step(bits, inner):
+    problem = _problem()
+    sched = _ring()
+    meta = _algo(problem).meta
+    backend = transport.CompressedBackend(inner=inner, bits=bits)
+    aux = backend.prepare(sched, meta, mesh=None)
+    pc = transport.node_param_count(problem.x0)
+    for slot in range(3):
+        phi = backend.phi_for(aux, slot, 1)
+        total = backend.bytes_per_step(aux, phi, pc)
+        links = backend.bytes_per_link(aux, phi, pc)
+        assert sum(links.values()) == total, (bits, inner, slot)
+        # quantization charges bits/32 of the f32 wire
+        inner_total = aux.inner_backend.bytes_per_step(aux.inner_aux,
+                                                       phi.inner, pc)
+        assert total == inner_total * bits // 32

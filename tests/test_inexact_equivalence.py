@@ -5,6 +5,7 @@ import numpy as np
 
 from repro.core import dpsvrg, gossip, graphs, inexact, prox
 from repro.data import synthetic
+from repro.core.exec_spec import ExecSpec
 from tests.test_dpsvrg_convergence import logreg_loss
 
 
@@ -86,8 +87,7 @@ def test_inexact_runs_through_unified_runner():
     algo = algorithm.ALGORITHMS["inexact_prox_svrg"](problem, hp)
     sched = graphs_lib.static_schedule(np.eye(1), "centralized")
     host = runner.run(algo, problem, sched, seed=0, record_every=1).history
-    scan = runner.run(algo, problem, sched, seed=0, record_every=1,
-                      scan=True).history
+    scan = runner.run(algo, problem, sched, exec=ExecSpec(scan=True), seed=0, record_every=1).history
     np.testing.assert_allclose(host.objective, scan.objective,
                                rtol=1e-5, atol=1e-7)
     assert host.objective[-1] < host.objective[0] - 0.05

@@ -16,6 +16,7 @@ import pytest
 from repro.core import (algorithm, compression, dpsvrg, gossip, graphs,
                         inexact, prox, runner)
 from repro.data import synthetic
+from repro.core.exec_spec import ExecSpec
 
 
 def logreg_loss(w, batch):
@@ -82,9 +83,7 @@ def test_resident_matches_host_and_scan(name):
     for mode in ("host", "scan", "resident"):
         algo = _build(name, problem)
         runs[mode] = runner.run(
-            algo, problem, sched, seed=3, record_every=5,
-            scan=(mode == "scan"), resident=(mode == "resident"),
-            gossip="dense").history
+            algo, problem, sched, exec=ExecSpec(scan=(mode == "scan"), resident=(mode == "resident"), gossip="dense"), seed=3, record_every=5).history
     _assert_agrees(runs["host"], runs["scan"])
     _assert_agrees(runs["host"], runs["resident"])
 
@@ -99,11 +98,9 @@ def test_resident_matches_host_inexact_prox_svrg():
     sched = graphs.static_schedule(np.eye(1), name="centralized")
     hp = inexact.InexactHyperParams(alpha=0.3, beta=1.2, n0=3, num_outer=3)
     host = runner.run(algorithm.ALGORITHMS["inexact_prox_svrg"](problem, hp),
-                      problem, sched, seed=0, record_every=2,
-                      gossip="dense").history
+                      problem, sched, exec=ExecSpec(gossip="dense"), seed=0, record_every=2).history
     res = runner.run(algorithm.ALGORITHMS["inexact_prox_svrg"](problem, hp),
-                     problem, sched, seed=0, record_every=2, resident=True,
-                     gossip="dense").history
+                     problem, sched, exec=ExecSpec(resident=True, gossip="dense"), seed=0, record_every=2).history
     _assert_agrees(host, res)
 
 
@@ -114,10 +111,10 @@ def test_resident_matches_host_on_banded_transport():
     sched = graphs.MixingSchedule(tuple(mats), b=len(mats), eta=0.5,
                                   name="matching4")
     problem = _problem(data, h, x0)
-    host = runner.run(_build("dspg", problem), problem, sched, seed=2,
-                      record_every=8, gossip="dense").history
-    res = runner.run(_build("dspg", problem), problem, sched, seed=2,
-                     record_every=8, resident=True, gossip="banded").history
+    host = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(gossip="dense"), seed=2,
+                      record_every=8).history
+    res = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(resident=True, gossip="banded"), seed=2,
+                     record_every=8).history
     _assert_agrees(host, res)
 
 
@@ -130,11 +127,9 @@ def test_resident_matches_host_compressed_transport():
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.2, beta=1.2, n0=3, num_outer=3,
                                   k_max=2)
     host = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
-                      sched, seed=1, record_every=4,
-                      gossip="compressed").history
+                      sched, exec=ExecSpec(gossip="compressed"), seed=1, record_every=4).history
     res = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
-                     sched, seed=1, record_every=4, resident=True,
-                     gossip="compressed").history
+                     sched, exec=ExecSpec(resident=True, gossip="compressed"), seed=1, record_every=4).history
     _assert_agrees(host, res)
 
 
@@ -144,10 +139,9 @@ def test_resident_record_every_zero_outer_rounds():
     sched = _sched()
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=3, num_outer=4)
     host = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
-                      sched, seed=0, record_every=0, gossip="dense").history
+                      sched, exec=ExecSpec(gossip="dense"), seed=0, record_every=0).history
     res = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
-                     sched, seed=0, record_every=0, resident=True,
-                     gossip="dense").history
+                     sched, exec=ExecSpec(resident=True, gossip="dense"), seed=0, record_every=0).history
     _assert_agrees(host, res)
 
 
@@ -185,10 +179,10 @@ def test_resident_run_shields_caller_buffers():
     data, h, x0 = _setup()
     problem = _problem(data, h, x0)
     sched = _sched()
-    r1 = runner.run(_build("dspg", problem), problem, sched, seed=2,
-                    record_every=8, resident=True).history
-    r2 = runner.run(_build("dspg", problem), problem, sched, seed=2,
-                    record_every=8, resident=True).history
+    r1 = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(resident=True), seed=2,
+                    record_every=8).history
+    r2 = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(resident=True), seed=2,
+                    record_every=8).history
     np.testing.assert_array_equal(r1.objective, r2.objective)
     assert not x0.is_deleted()
 
@@ -201,10 +195,10 @@ def test_resident_transfer_ledger_is_o1():
     data, h, x0 = _setup()
     problem = _problem(data, h, x0)
     sched = _sched()
-    res = runner.run(_build("dspg", problem), problem, sched, seed=0,
-                     record_every=5, resident=True)
-    scan = runner.run(_build("dspg", problem), problem, sched, seed=0,
-                      record_every=5, scan=True)
+    res = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(resident=True), seed=0,
+                     record_every=5)
+    scan = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(scan=True), seed=0,
+                      record_every=5)
     # resident: one staging put + one host dataset copy + one history pull
     assert res.extras["transfers_h2d"] == 1
     assert res.extras["transfers_d2h"] <= 2
@@ -225,8 +219,8 @@ def test_resident_dispatch_is_transfer_free_under_xla_guard():
     old = runner._RESIDENT_DISPATCH_GUARD
     runner._RESIDENT_DISPATCH_GUARD = lambda: jax.transfer_guard("disallow")
     try:
-        res = runner.run(_build("dspg", problem), problem, sched, seed=0,
-                         record_every=5, resident=True)
+        res = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(resident=True), seed=0,
+                         record_every=5)
     finally:
         runner._RESIDENT_DISPATCH_GUARD = old
     assert res.history.objective[-1] < res.history.objective[0]
@@ -243,12 +237,10 @@ def test_device_sampling_same_envelope_different_stream():
     data, h, x0 = _setup()
     problem = _problem(data, h, x0)
     sched = _sched()
-    host = runner.run(_build("dspg", problem), problem, sched, seed=0,
-                      record_every=10, resident=True,
-                      sampling="host").history
-    dev = runner.run(_build("dspg", problem), problem, sched, seed=0,
-                     record_every=10, resident=True,
-                     sampling="device").history
+    host = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(resident=True, sampling="host"), seed=0,
+                      record_every=10).history
+    dev = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(resident=True, sampling="device"), seed=0,
+                     record_every=10).history
     # different stream: trajectories are not identical
     assert not np.allclose(host.objective[1:], dev.objective[1:])
     # same envelope: both descend, final gaps within a third of the total
@@ -258,9 +250,8 @@ def test_device_sampling_same_envelope_different_stream():
     assert dev.objective[-1] < dev.objective[0]
     assert abs(dev.objective[-1] - host.objective[-1]) < descent / 3
     # reproducible from the seed
-    dev2 = runner.run(_build("dspg", problem), problem, sched, seed=0,
-                      record_every=10, resident=True,
-                      sampling="device").history
+    dev2 = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(resident=True, sampling="device"), seed=0,
+                      record_every=10).history
     np.testing.assert_array_equal(dev.objective, dev2.objective)
 
 
@@ -268,11 +259,9 @@ def test_device_sampling_requires_resident():
     data, h, x0 = _setup()
     problem = _problem(data, h, x0)
     with pytest.raises(ValueError):
-        runner.run(_build("dspg", problem), problem, _sched(),
-                   sampling="device")
+        runner.run(_build("dspg", problem), problem, _sched(), exec=ExecSpec(sampling="device"))
     with pytest.raises(ValueError):
-        runner.run(_build("dspg", problem), problem, _sched(),
-                   sampling="banana")
+        runner.run(_build("dspg", problem), problem, _sched(), exec=ExecSpec(sampling="banana"))
 
 
 # ---------------------------------------------------------------------------
@@ -289,8 +278,7 @@ def test_resident_objective_contract_overrides_default():
         algo.meta,
         resident_objective=lambda params, full_data: jnp.float32(42.0))
     algo = dataclasses.replace(algo, meta=meta)
-    res = runner.run(algo, problem, _sched(), seed=0, record_every=10,
-                     resident=True)
+    res = runner.run(algo, problem, _sched(), exec=ExecSpec(resident=True), seed=0, record_every=10)
     np.testing.assert_allclose(res.history.objective, 42.0)
 
 
@@ -298,8 +286,7 @@ def test_resident_rejects_host_extra_metrics():
     data, h, x0 = _setup()
     problem = _problem(data, h, x0)
     with pytest.raises(ValueError):
-        runner.run(_build("dspg", problem), problem, _sched(),
-                   resident=True,
+        runner.run(_build("dspg", problem), problem, _sched(), exec=ExecSpec(resident=True),
                    extra_metrics={"max": lambda p: float(jnp.max(p))})
 
 
@@ -356,11 +343,10 @@ def test_resident_kernel_matches_host(name, kernel):
     data, h, x0 = _setup()
     problem = _problem(data, h, x0)
     sched = _sched()
-    host = runner.run(_build(name, problem), problem, sched, seed=3,
-                      record_every=5, gossip="dense").history
-    res = runner.run(_build(name, problem), problem, sched, seed=3,
-                     record_every=5, resident=True, gossip="dense",
-                     kernel=kernel).history
+    host = runner.run(_build(name, problem), problem, sched, exec=ExecSpec(gossip="dense"), seed=3,
+                      record_every=5).history
+    res = runner.run(_build(name, problem), problem, sched, exec=ExecSpec(resident=True, kernel=kernel, gossip="dense"), seed=3,
+                     record_every=5).history
     _assert_agrees(host, res)
 
 
@@ -373,11 +359,10 @@ def test_resident_kernel_matches_on_banded_transport():
     sched = graphs.MixingSchedule(tuple(mats), b=len(mats), eta=0.5,
                                   name="matching4")
     problem = _problem(data, h, x0)
-    host = runner.run(_build("dspg", problem), problem, sched, seed=2,
-                      record_every=8, gossip="dense").history
-    res = runner.run(_build("dspg", problem), problem, sched, seed=2,
-                     record_every=8, resident=True, gossip="banded",
-                     kernel="pallas").history
+    host = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(gossip="dense"), seed=2,
+                      record_every=8).history
+    res = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(resident=True, kernel="pallas", gossip="banded"), seed=2,
+                     record_every=8).history
     _assert_agrees(host, res)
 
 
@@ -388,12 +373,10 @@ def test_resident_kernel_auto_small_d_is_bitwise_unfused():
     data, h, x0 = _setup()
     problem = _problem(data, h, x0)
     sched = _sched()
-    xla = runner.run(_build("dpsvrg", problem), problem, sched, seed=1,
-                     record_every=5, resident=True, gossip="dense",
-                     kernel="xla").history
-    auto = runner.run(_build("dpsvrg", problem), problem, sched, seed=1,
-                      record_every=5, resident=True, gossip="dense",
-                      kernel="auto").history
+    xla = runner.run(_build("dpsvrg", problem), problem, sched, exec=ExecSpec(resident=True, kernel="xla", gossip="dense"), seed=1,
+                     record_every=5).history
+    auto = runner.run(_build("dpsvrg", problem), problem, sched, exec=ExecSpec(resident=True, kernel="auto", gossip="dense"), seed=1,
+                      record_every=5).history
     np.testing.assert_array_equal(xla.objective, auto.objective)
     np.testing.assert_array_equal(xla.consensus, auto.consensus)
 
@@ -431,9 +414,8 @@ def test_resident_kernel_transfer_ledger_is_o1():
     old = runner._RESIDENT_DISPATCH_GUARD
     runner._RESIDENT_DISPATCH_GUARD = lambda: jax.transfer_guard("disallow")
     try:
-        res = runner.run(_build("dspg", problem), problem, sched, seed=0,
-                         record_every=5, resident=True, gossip="dense",
-                         kernel="pallas")
+        res = runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(resident=True, kernel="pallas", gossip="dense"), seed=0,
+                         record_every=5)
     finally:
         runner._RESIDENT_DISPATCH_GUARD = old
     assert res.extras["transfers_h2d"] == 1
@@ -446,6 +428,6 @@ def test_resident_kernel_knob_validation():
     problem = _problem(data, h, x0)
     sched = _sched()
     with pytest.raises(ValueError, match="kernel"):
-        runner.run(_build("dspg", problem), problem, sched, kernel="bogus")
+        runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(kernel="bogus"))
     with pytest.raises(ValueError, match="resident"):
-        runner.run(_build("dspg", problem), problem, sched, kernel="pallas")
+        runner.run(_build("dspg", problem), problem, sched, exec=ExecSpec(kernel="pallas"))

@@ -1,6 +1,6 @@
 """Scan-path coverage PR 1 left open: uneven record cadences (terminal-record
 dedup), coin-flip chunk cuts, banded-vs-dense gossip equivalence inside
-``runner.run(scan=True)``, and bucketed chunk compilation."""
+``runner.run(exec=ExecSpec(scan=True))``, and bucketed chunk compilation."""
 
 import functools
 
@@ -10,6 +10,7 @@ import pytest
 
 from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner
 from repro.data import synthetic
+from repro.core.exec_spec import ExecSpec
 
 
 def logreg_loss(w, batch):
@@ -60,8 +61,8 @@ def test_flat_scan_record_every_not_dividing_num_steps():
     runs = {}
     for scan in (False, True):
         algo = algorithm.dspg_algorithm(problem, hp, num_steps=37)
-        runs[scan] = runner.run(algo, problem, sched, seed=2,
-                                record_every=7, scan=scan).history
+        runs[scan] = runner.run(algo, problem, sched, exec=ExecSpec(scan=scan), seed=2,
+                                record_every=7).history
     _assert_agrees(runs[False], runs[True])
     # records at 0, 7, ..., 35 and the off-cadence terminal step 37 — once
     np.testing.assert_array_equal(runs[True].steps,
@@ -79,8 +80,8 @@ def test_outer_scan_record_every_not_dividing_K_s():
     runs = {}
     for scan in (False, True):
         algo = algorithm.dpsvrg_algorithm(problem, hp)
-        runs[scan] = runner.run(algo, problem, sched, seed=3,
-                                record_every=5, scan=scan).history
+        runs[scan] = runner.run(algo, problem, sched, exec=ExecSpec(scan=scan), seed=3,
+                                record_every=5).history
     _assert_agrees(runs[False], runs[True])
     # terminal point recorded exactly once
     assert runs[True].steps[-1] != runs[True].steps[-2]
@@ -96,8 +97,8 @@ def test_flat_scan_coin_flip_cuts_with_uneven_tail():
     for scan in (False, True):
         algo = algorithm.loopless_dpsvrg_algorithm(
             problem, alpha=0.3, num_steps=33, snapshot_prob=0.25)
-        runs[scan] = runner.run(algo, problem, sched, seed=11,
-                                record_every=8, scan=scan).history
+        runs[scan] = runner.run(algo, problem, sched, exec=ExecSpec(scan=scan), seed=11,
+                                record_every=8).history
     _assert_agrees(runs[False], runs[True])
     assert runs[True].steps[-1] == 33
 
@@ -115,8 +116,7 @@ def test_banded_matches_dense_dspg_matching_schedule(scan):
     runs = {}
     for mode in ("dense", "banded"):
         algo = algorithm.dspg_algorithm(problem, hp, num_steps=40)
-        runs[mode] = runner.run(algo, problem, sched, seed=2, record_every=8,
-                                scan=scan, gossip=mode).history
+        runs[mode] = runner.run(algo, problem, sched, exec=ExecSpec(scan=scan, gossip=mode), seed=2, record_every=8).history
     _assert_agrees(runs["dense"], runs["banded"])
 
 
@@ -132,10 +132,8 @@ def test_banded_scan_matches_host_dpsvrg_multi_consensus():
                                   k_max=2)
     assert len(gossip.schedule_band_offsets(sched, 2)) < 6
     algo = algorithm.dpsvrg_algorithm(problem, hp)
-    host = runner.run(algo, problem, sched, seed=1, record_every=3,
-                      gossip="dense").history
-    band = runner.run(algo, problem, sched, seed=1, record_every=3,
-                      scan=True, gossip="banded").history
+    host = runner.run(algo, problem, sched, exec=ExecSpec(gossip="dense"), seed=1, record_every=3).history
+    band = runner.run(algo, problem, sched, exec=ExecSpec(scan=True, gossip="banded"), seed=1, record_every=3).history
     _assert_agrees(host, band)
 
 
@@ -163,7 +161,7 @@ def test_runner_rejects_unknown_gossip_backend():
     algo = algorithm.dspg_algorithm(
         problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=4)
     with pytest.raises(ValueError):
-        runner.run(algo, problem, sched, gossip="sparse")
+        runner.run(algo, problem, sched, exec=ExecSpec(gossip="sparse"))
 
 
 # ---------------------------------------------------------------------------
@@ -190,8 +188,7 @@ def test_dpsvrg_scan_compiles_few_buckets():
     if before < 0:
         pytest.skip("jit cache-size introspection unavailable on this jax")
     host = runner.run(algo, problem, sched, seed=0, record_every=0).history
-    scan = runner.run(algo, problem, sched, seed=0, record_every=0,
-                      scan=True).history
+    scan = runner.run(algo, problem, sched, exec=ExecSpec(scan=True), seed=0, record_every=0).history
     _assert_agrees(host, scan)
     assert runner.scan_executable_count(algo) - before <= buckets
 
@@ -208,7 +205,7 @@ def test_steady_state_chunk_is_not_padded():
     before = runner.scan_executable_count(algo)
     if before < 0:
         pytest.skip("jit cache-size introspection unavailable on this jax")
-    runner.run(algo, problem, sched, seed=0, record_every=10, scan=True)
+    runner.run(algo, problem, sched, exec=ExecSpec(scan=True), seed=0, record_every=10)
     delta = runner.scan_executable_count(algo) - before
     assert delta <= 1
     # a REBUILT algorithm on the same problem reuses the compiled chunk
@@ -216,5 +213,5 @@ def test_steady_state_chunk_is_not_padded():
     algo2 = algorithm.dspg_algorithm(
         problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=40)
     before2 = runner.scan_executable_count(algo2)
-    runner.run(algo2, problem, sched, seed=0, record_every=10, scan=True)
+    runner.run(algo2, problem, sched, exec=ExecSpec(scan=True), seed=0, record_every=10)
     assert runner.scan_executable_count(algo2) - before2 == 0

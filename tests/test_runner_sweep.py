@@ -17,6 +17,7 @@ import pytest
 from repro.core import (algorithm, dpsvrg, gossip, graphs, inexact, prox,
                         runner, sweep)
 from repro.data import synthetic
+from repro.core.exec_spec import ExecSpec
 
 
 def logreg_loss(w, batch):
@@ -87,10 +88,8 @@ def _assert_sweeps_agree(a, b):
 def test_batched_matches_sequential(name):
     build = _build(name)
     grid = {"lam": [0.001, 0.1], "seed": [3, 7]}
-    batched = sweep.run_sweep(build, grid, _sched(), record_every=4,
-                              gossip="dense")
-    sequential = sweep.run_sweep(build, grid, _sched(), record_every=4,
-                                 gossip="dense", batched=False)
+    batched = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, gossip="dense"), record_every=4)
+    sequential = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, gossip="dense"), record_every=4, batched=False)
     assert batched.history.objective.shape[1] == 4
     _assert_sweeps_agree(batched, sequential)
     np.testing.assert_allclose(np.asarray(batched.params),
@@ -113,10 +112,8 @@ def test_batched_matches_sequential_inexact_prox_svrg():
             problem
 
     grid = {"lam": [0.001, 0.1], "seed": [0, 2]}
-    batched = sweep.run_sweep(build, grid, sched, record_every=2,
-                              gossip="dense")
-    sequential = sweep.run_sweep(build, grid, sched, record_every=2,
-                                 gossip="dense", batched=False)
+    batched = sweep.run_sweep(build, grid, sched, exec=ExecSpec(resident=True, gossip="dense"), record_every=2)
+    sequential = sweep.run_sweep(build, grid, sched, exec=ExecSpec(resident=True, gossip="dense"), record_every=2, batched=False)
     _assert_sweeps_agree(batched, sequential)
 
 
@@ -125,10 +122,8 @@ def test_batched_matches_sequential_host_path():
     program agrees with the slowest, most-trusted reference too."""
     build = _build("dspg")
     grid = {"seed": [0, 1, 2]}
-    batched = sweep.run_sweep(build, grid, _sched(), record_every=8,
-                              gossip="dense")
-    host = sweep.run_sweep(build, grid, _sched(), record_every=8,
-                           gossip="dense", resident=False, batched=False)
+    batched = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, gossip="dense"), record_every=8)
+    host = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=False, gossip="dense"), record_every=8, batched=False)
     _assert_sweeps_agree(batched, host)
 
 
@@ -136,11 +131,10 @@ def test_sweep_cell_slicing_matches_plain_run():
     """SweepResult.cell(i) is the same RunResult a plain runner.run of that
     cell produces."""
     build = _build("dpsvrg")
-    res = sweep.run_sweep(build, {"seed": [5, 9]}, _sched(),
-                          record_every=0, gossip="dense")
+    res = sweep.run_sweep(build, {"seed": [5, 9]}, _sched(), exec=ExecSpec(resident=True, gossip="dense"),
+                          record_every=0)
     algo, problem = build()
-    ref = runner.run(algo, problem, _sched(), seed=9, record_every=0,
-                     gossip="dense")
+    ref = runner.run(algo, problem, _sched(), exec=ExecSpec(gossip="dense"), seed=9, record_every=0)
     cell = res.cell(1)
     np.testing.assert_allclose(cell.history.objective, ref.history.objective,
                                rtol=1e-4, atol=1e-6)
@@ -155,10 +149,9 @@ def test_schedule_axis_zip_topology_grid():
     build = _build("dpsvrg")
     scheds = [_sched(b=1, seed=1), _sched(b=3, seed=3)]
     grid = {"schedule": scheds, "seed": [1, 3]}
-    batched = sweep.run_sweep(build, grid, record_every=0, gossip="dense",
+    batched = sweep.run_sweep(build, grid, exec=ExecSpec(resident=True, gossip="dense"), record_every=0,
                               mode="zip")
-    sequential = sweep.run_sweep(build, grid, record_every=0,
-                                 gossip="dense", mode="zip", batched=False)
+    sequential = sweep.run_sweep(build, grid, exec=ExecSpec(resident=True, gossip="dense"), record_every=0, mode="zip", batched=False)
     _assert_sweeps_agree(batched, sequential)
     assert batched.extras["transfers_h2d"] <= 2
 
@@ -166,10 +159,8 @@ def test_schedule_axis_zip_topology_grid():
 def test_device_sampling_sweep_reproducible():
     build = _build("dspg")
     grid = {"lam": [0.01, 0.03], "seed": [0, 1]}
-    a = sweep.run_sweep(build, grid, _sched(), record_every=10,
-                        sampling="device", gossip="dense")
-    b = sweep.run_sweep(build, grid, _sched(), record_every=10,
-                        sampling="device", gossip="dense")
+    a = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, sampling="device", gossip="dense"), record_every=10)
+    b = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, sampling="device", gossip="dense"), record_every=10)
     np.testing.assert_array_equal(a.history.objective, b.history.objective)
     # the lightly-regularized cells descend
     assert a.history.objective[-1, 0] < a.history.objective[0, 0]
@@ -215,11 +206,9 @@ def test_ragged_grid_mixed_schedule_structure_needs_dense():
     scheds = [graphs.static_schedule(np.eye(4), name="identity4"),
               _sched(b=1, seed=2)]
     with pytest.raises(ValueError, match="dense"):
-        sweep.run_sweep(build, {"schedule": scheds, "seed": [0, 1]},
-                        gossip="banded", mode="zip")
+        sweep.run_sweep(build, {"schedule": scheds, "seed": [0, 1]}, exec=ExecSpec(resident=True, gossip="banded"), mode="zip")
     # the same grid batches fine on the structure-free dense wire format
-    res = sweep.run_sweep(build, {"schedule": scheds, "seed": [0, 1]},
-                          gossip="dense", mode="zip", record_every=5)
+    res = sweep.run_sweep(build, {"schedule": scheds, "seed": [0, 1]}, exec=ExecSpec(resident=True, gossip="dense"), mode="zip", record_every=5)
     assert res.history.objective.shape[1] == 2
 
 
@@ -248,12 +237,10 @@ def test_device_transitions_match_host_dispatch_on_growing_ks():
     algo_factory = lambda: build()[0]
     _, problem = build()
     for record_every in (0, 5):
-        host_side = runner.run(algo_factory(), problem, _sched(), seed=3,
-                               record_every=record_every, resident=True,
-                               device_transitions=False, gossip="dense")
-        device_side = runner.run(algo_factory(), problem, _sched(), seed=3,
-                                 record_every=record_every, resident=True,
-                                 device_transitions=True, gossip="dense")
+        host_side = runner.run(algo_factory(), problem, _sched(), exec=ExecSpec(resident=True, device_transitions=False, gossip="dense"), seed=3,
+                               record_every=record_every)
+        device_side = runner.run(algo_factory(), problem, _sched(), exec=ExecSpec(resident=True, device_transitions=True, gossip="dense"), seed=3,
+                                 record_every=record_every)
         np.testing.assert_array_equal(host_side.history.steps,
                                       device_side.history.steps)
         np.testing.assert_allclose(host_side.history.objective,
@@ -276,13 +263,10 @@ def test_device_transitions_requires_contract():
     stripped = dataclasses.replace(algo, outer_traced=None,
                                    end_outer_traced=None)
     with pytest.raises(ValueError, match="outer_traced"):
-        runner.run(stripped, problem, _sched(), resident=True,
-                   device_transitions=True)
+        runner.run(stripped, problem, _sched(), exec=ExecSpec(resident=True, device_transitions=True))
     # auto falls back to host dispatches and still matches
-    res = runner.run(stripped, problem, _sched(), seed=3, record_every=5,
-                     resident=True, gossip="dense")
-    ref = runner.run(build()[0], problem, _sched(), seed=3, record_every=5,
-                     resident=True, gossip="dense")
+    res = runner.run(stripped, problem, _sched(), exec=ExecSpec(resident=True, gossip="dense"), seed=3, record_every=5)
+    ref = runner.run(build()[0], problem, _sched(), exec=ExecSpec(resident=True, gossip="dense"), seed=3, record_every=5)
     np.testing.assert_allclose(res.history.objective, ref.history.objective,
                                rtol=1e-6, atol=1e-7)
 
@@ -292,10 +276,10 @@ def test_loopless_coin_flip_transitions_in_chunk():
     cuts): resident histories still match the host loop's rng stream."""
     build = _build("loopless_dpsvrg")
     algo, problem = build()
-    host = runner.run(build()[0], problem, _sched(), seed=11,
-                      record_every=8, gossip="dense")
-    res = runner.run(build()[0], problem, _sched(), seed=11,
-                     record_every=8, resident=True, gossip="dense")
+    host = runner.run(build()[0], problem, _sched(), exec=ExecSpec(gossip="dense"), seed=11,
+                      record_every=8)
+    res = runner.run(build()[0], problem, _sched(), exec=ExecSpec(resident=True, gossip="dense"), seed=11,
+                     record_every=8)
     np.testing.assert_allclose(host.history.objective, res.history.objective,
                                rtol=1e-4, atol=1e-6)
     np.testing.assert_array_equal(host.history.epochs, res.history.epochs)
@@ -308,10 +292,8 @@ def test_loopless_coin_flip_transitions_in_chunk():
 def test_sweep_transfer_ledger_is_o1():
     build = _build("dpsvrg")
     grid = {"lam": [0.001, 0.01, 0.03, 0.1], "seed": [0, 1]}
-    batched = sweep.run_sweep(build, grid, _sched(), record_every=0,
-                              gossip="dense")
-    sequential = sweep.run_sweep(build, grid, _sched(), record_every=0,
-                                 gossip="dense", batched=False)
+    batched = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, gossip="dense"), record_every=0)
+    sequential = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, gossip="dense"), record_every=0, batched=False)
     # whole 8-cell sweep: one xs+cells staging put, one history pull (+ the
     # host-side dataset copy)
     assert batched.extras["transfers_h2d"] == 1
@@ -331,8 +313,7 @@ def test_sweep_dispatch_is_transfer_free_under_xla_guard():
     runner._RESIDENT_DISPATCH_GUARD = \
         lambda: jax.transfer_guard("disallow")
     try:
-        res = sweep.run_sweep(build, grid, _sched(), record_every=0,
-                              gossip="dense")
+        res = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, gossip="dense"), record_every=0)
     finally:
         runner._RESIDENT_DISPATCH_GUARD = old
     # the lightly-regularized cells descend (λ=0.1 cells stay near x=0)
@@ -379,7 +360,7 @@ def test_staging_warning_accounts_batch_axis():
 def test_reset_executable_caches_clears_sweep_executors():
     build = _build("dspg")
     grid = {"seed": [0, 1]}
-    sweep.run_sweep(build, grid, _sched(), record_every=10, gossip="dense")
+    sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, gossip="dense"), record_every=10)
     assert any(k and k[0] in ("sweep_exec", "sweep_record")
                for k in sweep._SWEEP_EXEC_CACHE), \
         "vmapped sweep executors should be cached"
@@ -387,8 +368,7 @@ def test_reset_executable_caches_clears_sweep_executors():
     assert not sweep._SWEEP_EXEC_CACHE
     assert not runner._EXEC_CACHE
     # a fresh sweep after the reset still works (recompiles)
-    res = sweep.run_sweep(build, grid, _sched(), record_every=10,
-                          gossip="dense")
+    res = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, gossip="dense"), record_every=10)
     assert res.history.objective.shape[1] == 2
 
 
@@ -404,10 +384,8 @@ def test_sweep_kernel_matches_sequential(kernel):
     driven through the same kernel knob."""
     build = _build("dpsvrg")
     grid = {"lam": [0.001, 0.1], "seed": [3, 7]}
-    batched = sweep.run_sweep(build, grid, _sched(), record_every=4,
-                              gossip="dense", kernel=kernel)
-    sequential = sweep.run_sweep(build, grid, _sched(), record_every=4,
-                                 gossip="dense", batched=False, kernel=kernel)
+    batched = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, kernel=kernel, gossip="dense"), record_every=4)
+    sequential = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, kernel=kernel, gossip="dense"), record_every=4, batched=False)
     _assert_sweeps_agree(batched, sequential)
     assert batched.extras["transfers_h2d"] == 1
 
@@ -419,12 +397,9 @@ def test_sweep_kernel_mode_is_part_of_executor_cache_key():
     'xla' (the fallback picks the base step at trace time)."""
     build = _build("dspg")
     grid = {"lam": [0.01, 0.1], "seed": [0, 1]}
-    xla = sweep.run_sweep(build, grid, _sched(), record_every=5,
-                          gossip="dense", kernel="xla")
-    pallas = sweep.run_sweep(build, grid, _sched(), record_every=5,
-                             gossip="dense", kernel="pallas")
-    auto = sweep.run_sweep(build, grid, _sched(), record_every=5,
-                           gossip="dense", kernel="auto")
+    xla = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, kernel="xla", gossip="dense"), record_every=5)
+    pallas = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, kernel="pallas", gossip="dense"), record_every=5)
+    auto = sweep.run_sweep(build, grid, _sched(), exec=ExecSpec(resident=True, kernel="auto", gossip="dense"), record_every=5)
     modes = {k[-1] for k in sweep._SWEEP_EXEC_CACHE if k[0] == "sweep_exec"}
     assert {"xla", "pallas", "auto"} <= modes
     np.testing.assert_array_equal(auto.history.objective,
@@ -436,5 +411,5 @@ def test_sweep_kernel_mode_is_part_of_executor_cache_key():
 def test_sweep_kernel_requires_resident():
     build = _build("dspg")
     with pytest.raises(ValueError, match="resident"):
-        sweep.run_sweep(build, {"seed": [0]}, _sched(), resident=False,
-                        batched=False, kernel="pallas")
+        sweep.run_sweep(build, {"seed": [0]}, _sched(), exec=ExecSpec(resident=False, kernel="pallas"),
+                        batched=False)

@@ -21,6 +21,7 @@ from repro.core import (algorithm, compression, dpsvrg, gossip, graphs,
                         prox, runner, svrg, sweep, transport)
 from repro.data import synthetic
 from repro.scenarios import transports as sc_transports
+from repro.core.exec_spec import ExecSpec
 from tests import _legacy_runs as legacy, conftest
 
 
@@ -204,11 +205,13 @@ def test_zero_intensity_identity_bitwise(name, path):
         build = functools.partial(_algo_factory, name)
     sched, backend = _zero_wrapped(ring)
     problem = algorithm.Problem(logreg_loss, h, x0, data)
-    kw = dict(seed=4, record_every=5,
-              scan=path == "scan", resident=path == "resident")
+    kw = dict(seed=4, record_every=5)
+    spec = ExecSpec(scan=path == "scan", resident=path == "resident")
 
-    base = runner.run(build(problem), problem, ring, gossip="dense", **kw)
-    wrapped = runner.run(build(problem), problem, sched, gossip=backend, **kw)
+    base = runner.run(build(problem), problem, ring,
+                      spec.replace(gossip="dense"), **kw)
+    wrapped = runner.run(build(problem), problem, sched,
+                         spec.replace(gossip=backend), **kw)
     for field in runner.RunHistory._fields:
         np.testing.assert_array_equal(getattr(base.history, field),
                                       getattr(wrapped.history, field),
@@ -283,9 +286,8 @@ def test_stale_straggler_paths_agree(name):
         seed=6)
     runs = {}
     for path in ("host", "scan", "resident"):
-        res = runner.run(_algo_factory(name, problem), problem, sched,
-                         seed=2, record_every=5, scan=path == "scan",
-                         resident=path == "resident", gossip=backend)
+        res = runner.run(_algo_factory(name, problem), problem, sched, exec=ExecSpec(scan=path == "scan", resident=path == "resident", gossip=backend),
+                         seed=2, record_every=5)
         runs[path] = res
     for path in ("scan", "resident"):
         np.testing.assert_allclose(runs["host"].history.objective,
@@ -305,8 +307,7 @@ def test_stale_gossip_still_converges():
     res = runner.run(
         algorithm.loopless_dpsvrg_algorithm(problem, 0.3, 120,
                                             snapshot_prob=0.1),
-        problem, sched, seed=0, record_every=30, resident=True,
-        gossip=backend)
+        problem, sched, exec=ExecSpec(resident=True, gossip=backend), seed=0, record_every=30)
     obj = np.asarray(res.history.objective)
     assert obj[-1] < obj[0] - 0.05
 
@@ -316,8 +317,7 @@ def test_stateless_algorithms_rejected_by_stateful_scenario():
     problem = algorithm.Problem(logreg_loss, h, x0, data)
     sched, backend = scenarios.apply(_ring(), [scenarios.StaleGossip(1)])
     with pytest.raises(ValueError, match="init_mix_state"):
-        runner.run(_algo_factory("dspg", problem), problem, sched,
-                   gossip=backend)
+        runner.run(_algo_factory("dspg", problem), problem, sched, exec=ExecSpec(gossip=backend))
 
 
 def test_meta_compress_bits_rejected_under_scenario_transport():
@@ -328,7 +328,7 @@ def test_meta_compress_bits_rejected_under_scenario_transport():
                                           num_outer=2, compress_bits=8))
     sched, backend = scenarios.apply(_ring(), [scenarios.StaleGossip(1)])
     with pytest.raises(ValueError, match="compress_bits"):
-        runner.run(algo, problem, sched, gossip=backend)
+        runner.run(algo, problem, sched, exec=ExecSpec(gossip=backend))
 
 
 def test_quantized_scenario_transport_runs_and_charges_less():
@@ -339,15 +339,13 @@ def test_quantized_scenario_transport_runs_and_charges_less():
     res8 = runner.run(
         algorithm.loopless_dpsvrg_algorithm(problem, 0.3, 30,
                                             snapshot_prob=0.1),
-        problem, sched, seed=0, record_every=10, resident=True,
-        gossip=backend)
+        problem, sched, exec=ExecSpec(resident=True, gossip=backend), seed=0, record_every=10)
     sched32, backend32 = scenarios.apply(
         _ring(), [scenarios.StaleGossip(1)], seed=1)
     res32 = runner.run(
         algorithm.loopless_dpsvrg_algorithm(problem, 0.3, 30,
                                             snapshot_prob=0.1),
-        problem, sched32, seed=0, record_every=10, resident=True,
-        gossip=backend32)
+        problem, sched32, exec=ExecSpec(resident=True, gossip=backend32), seed=0, record_every=10)
     w8 = int(np.asarray(res8.extras["wire_bytes"])[-1])
     w32 = int(np.asarray(res32.extras["wire_bytes"])[-1])
     assert w8 * 4 == w32
@@ -557,7 +555,7 @@ def test_matrix_zero_intensity_rows_match_unwrapped_sweep_bitwise():
         return algorithms["loopless"](problem), problem
     ref = sweep.run_sweep(
         build, {"schedule": list(topologies.values()), "seed": [0, 1]},
-        record_every=6, gossip="dense")
+        exec=ExecSpec(resident=True, gossip="dense"), record_every=6)
     # same batched program modulo the accounting wrapper: bitwise histories
     np.testing.assert_array_equal(res.groups[0]["sweep"].history.objective,
                                   ref.history.objective)

@@ -17,6 +17,7 @@ from repro.core import graphs, prox, runner
 from repro.data.loader import LMLoader
 from repro.models.api import ModelConfig
 from repro.train import trainer
+from repro.core.exec_spec import ExecSpec
 
 TINY = ModelConfig(name="tiny-rt", arch_type="dense", num_layers=1,
                    d_model=32, num_heads=2, num_kv_heads=1, d_ff=64,
@@ -51,8 +52,7 @@ def _max_param_diff(a, b):
 def test_host_and_resident_histories_match(algorithm):
     tc = _tc(algorithm=algorithm)
     host = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc)
-    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc,
-                             resident=True)
+    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc, exec=ExecSpec(resident=True))
     assert host["step"] == res["step"]
     np.testing.assert_allclose(host["loss"], res["loss"], atol=1e-5)
     np.testing.assert_allclose(host["v_norm"], res["v_norm"], rtol=1e-4)
@@ -63,8 +63,7 @@ def test_host_and_resident_histories_match(algorithm):
 
 def test_resident_transfers_are_o1_per_log_window():
     tc = _tc(num_steps=21, log_every=5)
-    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc,
-                             resident=True)
+    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc, exec=ExecSpec(resident=True))
     n_windows = len(res["step"])           # 0, 5, 10, 15, 20
     assert n_windows == 5
     # ONE staging put for all chunks + the shard buffer; ONE pull per window
@@ -79,8 +78,7 @@ def test_resident_dispatch_is_transfer_free_under_xla_guard():
     old = runner._RESIDENT_DISPATCH_GUARD
     runner._RESIDENT_DISPATCH_GUARD = lambda: jax.transfer_guard("disallow")
     try:
-        res = trainer.train_loop(TINY, PROX, _sched(), _loader(), _tc(),
-                                 resident=True)
+        res = trainer.train_loop(TINY, PROX, _sched(), _loader(), _tc(), exec=ExecSpec(resident=True))
     finally:
         runner._RESIDENT_DISPATCH_GUARD = old
     assert np.isfinite(res["loss"]).all()
@@ -88,15 +86,12 @@ def test_resident_dispatch_is_transfer_free_under_xla_guard():
 
 def test_device_sampling_is_seed_deterministic():
     tc = _tc()
-    a = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc,
-                           resident=True, sampling="device")
-    b = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc,
-                           resident=True, sampling="device")
+    a = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc, exec=ExecSpec(resident=True, sampling="device"))
+    b = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc, exec=ExecSpec(resident=True, sampling="device"))
     assert a["loss"] == b["loss"]
     assert a["transfers"]["h2d"] == 1      # not even batch starts staged
     c = trainer.train_loop(TINY, PROX, _sched(), _loader(),
-                           dataclasses.replace(tc, seed=1),
-                           resident=True, sampling="device")
+                           dataclasses.replace(tc, seed=1), exec=ExecSpec(resident=True, sampling="device"))
     assert a["loss"] != c["loss"]
 
 
@@ -105,8 +100,7 @@ def test_compressed_transport_matches_on_both_paths():
     # works on the LM path — and identically on host and resident
     tc = _tc(gossip="compressed")
     host = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc)
-    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc,
-                             resident=True)
+    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc, exec=ExecSpec(resident=True))
     np.testing.assert_allclose(host["loss"], res["loss"], atol=1e-5)
     assert host["final_state"].mix_state is not None
 
@@ -134,10 +128,9 @@ def test_vr_rule_records_scheduled_alpha():
 def test_resident_rejects_iterators_and_device_sampling_on_host():
     it = iter(_loader())
     with pytest.raises(ValueError, match="LMLoader"):
-        trainer.train_loop(TINY, PROX, _sched(), it, _tc(), resident=True)
+        trainer.train_loop(TINY, PROX, _sched(), it, _tc(), exec=ExecSpec(resident=True))
     with pytest.raises(ValueError, match="resident"):
-        trainer.train_loop(TINY, PROX, _sched(), _loader(), _tc(),
-                           sampling="device")
+        trainer.train_loop(TINY, PROX, _sched(), _loader(), _tc(), exec=ExecSpec(sampling="device"))
 
 
 def test_legacy_iterator_path_still_works():
@@ -155,8 +148,7 @@ def test_tracker_spec_receives_stream(tmp_path):
     import json
     path = tmp_path / "m.jsonl"
     tc = _tc(num_steps=9, log_every=4)
-    hist = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc,
-                              resident=True, tracker=f"jsonl:{path}")
+    hist = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc, exec=ExecSpec(resident=True), tracker=f"jsonl:{path}")
     rows = [json.loads(l) for l in path.read_text().splitlines()]
     assert [r["step"] for r in rows[:-1]] == hist["step"]
     assert rows[-1]["summary"]["transfers"]["h2d"] == 1

@@ -17,6 +17,7 @@ from repro.core import graphs, prox
 from repro.data.loader import LMLoader
 from repro.models.api import ModelConfig
 from repro.train import trainer
+from repro.core.exec_spec import ExecSpec
 
 TINY = ModelConfig(name="tiny-rs", arch_type="dense", num_layers=1,
                    d_model=32, num_heads=2, num_kv_heads=1, d_ff=64,
@@ -46,18 +47,15 @@ def test_resume_is_bitwise_continuous(tmp_path, resident, sampling):
     tc_full = trainer.TrainerConfig(
         num_steps=16, snapshot_every=6, log_every=4, alpha=0.05, seed=0,
         ckpt_dir=str(tmp_path / "full"))
-    full = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc_full,
-                              resident=resident, sampling=sampling)
+    full = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc_full, exec=ExecSpec(resident=resident, sampling=sampling))
 
     # interrupted run: N=8 steps, checkpointed, then resumed to 16
     d2 = str(tmp_path / "split")
     tc_half = dataclasses.replace(tc_full, num_steps=8, ckpt_dir=d2)
-    trainer.train_loop(TINY, PROX, _sched(), _loader(), tc_half,
-                       resident=resident, sampling=sampling)
+    trainer.train_loop(TINY, PROX, _sched(), _loader(), tc_half, exec=ExecSpec(resident=resident, sampling=sampling))
     assert ckpt.latest_step(d2) == 8
     tc_rest = dataclasses.replace(tc_full, ckpt_dir=d2)
-    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc_rest,
-                             resident=resident, sampling=sampling,
+    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc_rest, exec=ExecSpec(resident=resident, sampling=sampling),
                              resume=True)
 
     # every post-resume record matches the uninterrupted run EXACTLY
@@ -86,21 +84,18 @@ def test_resume_from_periodic_checkpoint(tmp_path, resident, sampling):
     tc = trainer.TrainerConfig(
         num_steps=16, snapshot_every=6, log_every=4, alpha=0.05, seed=0,
         ckpt_every=6, ckpt_dir=str(tmp_path / "full"))
-    full = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc,
-                              resident=resident, sampling=sampling)
+    full = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc, exec=ExecSpec(resident=resident, sampling=sampling))
 
     # "crashed" run: completes, then we drop every ckpt after step 6 so the
     # resume starts from the periodic mid-run save
     d2 = str(tmp_path / "crash")
     tc2 = dataclasses.replace(tc, ckpt_dir=d2)
-    trainer.train_loop(TINY, PROX, _sched(), _loader(), tc2,
-                       resident=resident, sampling=sampling)
+    trainer.train_loop(TINY, PROX, _sched(), _loader(), tc2, exec=ExecSpec(resident=resident, sampling=sampling))
     for late in ("step_00000012", "step_00000016"):
         shutil.rmtree(os.path.join(d2, late))
     assert ckpt.latest_step(d2) == 6
 
-    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc2,
-                             resident=resident, sampling=sampling,
+    res = trainer.train_loop(TINY, PROX, _sched(), _loader(), tc2, exec=ExecSpec(resident=resident, sampling=sampling),
                              resume=True)
     full_by_step = dict(zip(full["step"], zip(full["loss"], full["v_norm"],
                                               full["wire_bytes"])))
@@ -145,7 +140,7 @@ def test_trainer_keep_last_prunes_checkpoints(tmp_path):
     d = str(tmp_path / "ckpt")
     tc = trainer.TrainerConfig(num_steps=12, snapshot_every=6, log_every=4,
                                ckpt_dir=d, ckpt_every=3, keep_last=2)
-    trainer.train_loop(TINY, PROX, _sched(), _loader(), tc, resident=True)
+    trainer.train_loop(TINY, PROX, _sched(), _loader(), tc, exec=ExecSpec(resident=True))
     names = sorted(n for n in os.listdir(d) if n.startswith("step_"))
     assert names == ["step_00000009", "step_00000012"]
     assert not [n for n in os.listdir(d) if n.startswith(".tmp_ckpt_")]

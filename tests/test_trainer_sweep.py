@@ -1,0 +1,188 @@
+"""``trainer.train_sweep``: the batched λ/lr grid over the LM trainer —
+cell-vs-sequential ``train_loop`` equality on one shared loader stream,
+the reserved driver-level ``"alpha"`` axis, O(1) transfers for the whole
+grid, and the validation surface (non-resident spec, device sampling,
+shard='nodes', checkpointing cells, non-LMLoader data)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graphs, prox
+from repro.core.exec_spec import ExecSpec
+from repro.data.loader import LMLoader
+from repro.models.api import ModelConfig
+from repro.train import trainer
+
+TINY = ModelConfig(name="tiny-sw", arch_type="dense", num_layers=1,
+                   d_model=32, num_heads=2, num_kv_heads=1, d_ff=64,
+                   vocab_size=64)
+M = 4
+TOKENS = np.random.default_rng(7).integers(0, 64, size=2400).astype(np.int32)
+
+
+def _loader(seed=1):
+    return LMLoader(TOKENS, num_nodes=M, per_node_batch=2, seq_len=16,
+                    seed=seed)
+
+
+def _sched():
+    return graphs.b_connected_ring_schedule(M, b=2, seed=0)
+
+
+def _tc(**kw):
+    base = dict(num_steps=9, snapshot_every=4, log_every=4, alpha=0.05,
+                consensus_rounds=2, seed=0)
+    base.update(kw)
+    return trainer.TrainerConfig(**base)
+
+
+@pytest.mark.parametrize("algorithm", ["dpsvrg", "dspg"])
+def test_sweep_cells_match_sequential_train_loop(algorithm):
+    """Each grid cell equals a sequential resident train_loop with the same
+    prox over a fresh same-seed loader (one shared host-drawn stream)."""
+    tc = _tc(algorithm=algorithm)
+    lams = [1e-4, 1e-3]
+    res = trainer.train_sweep(TINY, prox.l1, _sched(), _loader(), tc,
+                              {"lam": lams})
+    assert res["grid"] == [{"lam": lam} for lam in lams]
+    for i, lam in enumerate(lams):
+        seq = trainer.train_loop(TINY, prox.l1(lam), _sched(), _loader(),
+                                 tc, exec=ExecSpec(resident=True))
+        assert res["step"] == seq["step"]
+        np.testing.assert_allclose(np.asarray(res["loss"])[:, i],
+                                   seq["loss"], rtol=2e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(res["v_norm"])[:, i],
+                                   seq["v_norm"], rtol=1e-3, atol=1e-6)
+        assert res["wire_bytes"] == seq["wire_bytes"]
+
+
+def test_sweep_alpha_axis_is_driver_level():
+    """The reserved "alpha" axis overrides tc.alpha per cell without being
+    passed to build."""
+    tc = _tc()
+    alphas = [0.05, 0.02]
+
+    def build():            # no alpha parameter: the axis must not reach it
+        return prox.l1(1e-4)
+
+    res = trainer.train_sweep(TINY, build, _sched(), _loader(), tc,
+                              {"alpha": alphas})
+    assert np.asarray(res["alpha"]).shape[1] == 2
+    for i, a in enumerate(alphas):
+        seq = trainer.train_loop(
+            TINY, prox.l1(1e-4), _sched(), _loader(),
+            dataclasses.replace(tc, alpha=a), exec=ExecSpec(resident=True))
+        np.testing.assert_allclose(np.asarray(res["alpha"])[:, i],
+                                   seq["alpha"], rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(res["loss"])[:, i],
+                                   seq["loss"], rtol=2e-5, atol=1e-6)
+
+
+def test_sweep_is_one_staged_program():
+    """O(1) transfers for the WHOLE grid: one staging put, one metrics
+    pull."""
+    res = trainer.train_sweep(TINY, prox.l1, _sched(), _loader(), _tc(),
+                              {"lam": [1e-4, 1e-3], "alpha": [0.05, 0.02]})
+    assert len(res["grid"]) == 4
+    assert res["transfers"] == {"h2d": 1, "d2h": 1}
+    # stacked final states carry the cell axis in front
+    leaves = jax.tree.leaves(res["final_state"].params)
+    assert all(l.shape[0] == 4 for l in leaves)
+
+
+def test_sweep_zip_mode_pairs_axes():
+    res = trainer.train_sweep(TINY, prox.l1, _sched(), _loader(), _tc(),
+                              {"lam": [1e-4, 1e-3], "alpha": [0.05, 0.02]},
+                              mode="zip")
+    assert res["grid"] == [{"lam": 1e-4, "alpha": 0.05},
+                          {"lam": 1e-3, "alpha": 0.02}]
+
+
+# ---------------------------------------------------------------------------
+# validation surface
+# ---------------------------------------------------------------------------
+
+def test_sweep_rejects_non_resident_spec():
+    with pytest.raises(ValueError, match="device-resident"):
+        trainer.train_sweep(TINY, prox.l1, _sched(), _loader(), _tc(),
+                            {"lam": [1e-4]}, exec=ExecSpec(resident=False))
+
+
+def test_sweep_rejects_device_sampling():
+    with pytest.raises(ValueError, match="sampling='device'"):
+        trainer.train_sweep(TINY, prox.l1, _sched(), _loader(), _tc(),
+                            {"lam": [1e-4]},
+                            exec=ExecSpec(resident=True, sampling="device"))
+
+
+def test_sweep_rejects_node_sharding():
+    with pytest.raises(ValueError, match="shard='cells'"):
+        trainer.train_sweep(TINY, prox.l1, _sched(), _loader(), _tc(),
+                            {"lam": [1e-4]},
+                            exec=ExecSpec(resident=True, shard="nodes"))
+
+
+def test_sweep_rejects_checkpointing_cells(tmp_path):
+    with pytest.raises(ValueError, match="checkpoint"):
+        trainer.train_sweep(TINY, prox.l1, _sched(), _loader(),
+                            _tc(ckpt_dir=str(tmp_path)), {"lam": [1e-4]})
+
+
+def test_sweep_rejects_non_loader_data():
+    with pytest.raises(ValueError, match="LMLoader"):
+        trainer.train_sweep(TINY, prox.l1, _sched(),
+                            {"tokens": TOKENS}, _tc(), {"lam": [1e-4]})
+
+
+def test_sweep_rejects_non_prox_build():
+    with pytest.raises(TypeError, match="must return a Prox"):
+        trainer.train_sweep(TINY, lambda lam: lam, _sched(), _loader(),
+                            _tc(), {"lam": [1e-4]})
+
+
+# ---------------------------------------------------------------------------
+# shard="cells" on a forced 4-device mesh (subprocess)
+# ---------------------------------------------------------------------------
+
+def test_sharded_train_sweep_matches_unsharded(run_multi_device):
+    import textwrap
+    script = textwrap.dedent("""
+        import json
+        import numpy as np
+        from repro.core import graphs, prox
+        from repro.core.exec_spec import ExecSpec
+        from repro.data.loader import LMLoader
+        from repro.models.api import ModelConfig
+        from repro.train import trainer
+
+        cfg = ModelConfig(name="tiny-sw4", arch_type="dense", num_layers=1,
+                          d_model=32, num_heads=2, num_kv_heads=1, d_ff=64,
+                          vocab_size=64)
+        toks = np.random.default_rng(7).integers(
+            0, 64, size=2400).astype(np.int32)
+        sched = graphs.b_connected_ring_schedule(4, b=2, seed=0)
+        tc = trainer.TrainerConfig(num_steps=9, snapshot_every=4,
+                                   log_every=4, alpha=0.05,
+                                   consensus_rounds=2, seed=0)
+
+        def loader():
+            return LMLoader(toks, num_nodes=4, per_node_batch=2, seq_len=16,
+                            seed=1)
+
+        grid = {"lam": [1e-4, 1e-3, 3e-4, 1e-2]}
+        plain = trainer.train_sweep(cfg, prox.l1, sched, loader(), tc, grid)
+        sharded = trainer.train_sweep(
+            cfg, prox.l1, sched, loader(), tc, grid,
+            exec=ExecSpec(resident=True, shard="cells"))
+        err = float(np.max(np.abs(np.asarray(plain["loss"])
+                                  - np.asarray(sharded["loss"]))))
+        print(json.dumps({"err": err,
+                          "transfers": sharded["transfers"]}))
+    """)
+    out = run_multi_device(script, devices=4)
+    assert out["err"] < 1e-4, out
+    assert out["transfers"] == {"h2d": 1, "d2h": 1}, out

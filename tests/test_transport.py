@@ -14,6 +14,7 @@ import pytest
 from repro.core import (algorithm, compression, dpsvrg, gossip, graphs, prox,
                         runner, transport)
 from repro.data import synthetic
+from repro.core.exec_spec import ExecSpec
 
 
 def logreg_loss(w, batch):
@@ -89,8 +90,8 @@ def test_auto_dense_fallback_replaces_saturation_warning():
         algo = algorithm.dpsvrg_algorithm(problem, hp)
         with warnings.catch_warnings():
             warnings.simplefilter("error", RuntimeWarning)
-            runs[mode] = runner.run(algo, problem, sched, seed=3,
-                                    record_every=0, gossip=mode).history
+            runs[mode] = runner.run(algo, problem, sched, exec=ExecSpec(gossip=mode), seed=3,
+                                    record_every=0).history
     for field in runner.RunHistory._fields:
         np.testing.assert_array_equal(getattr(runs["auto"], field),
                                       getattr(runs["dense"], field))
@@ -105,8 +106,7 @@ def test_auto_selects_banded_and_matches_dense():
     runs = {}
     for mode in ("auto", "dense"):
         algo = algorithm.dpsvrg_algorithm(problem, hp)
-        runs[mode] = runner.run(algo, problem, sched, seed=1, record_every=3,
-                                scan=True, gossip=mode)
+        runs[mode] = runner.run(algo, problem, sched, exec=ExecSpec(scan=True, gossip=mode), seed=1, record_every=3)
     _assert_agrees(runs["auto"].history, runs["dense"].history)
     # auto picked the banded wire format: strictly fewer bytes than dense
     assert (runs["auto"].extras["wire_bytes"][-1]
@@ -119,7 +119,7 @@ def test_unknown_backend_raises():
     algo = algorithm.dspg_algorithm(
         problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=4)
     with pytest.raises(ValueError, match="unknown gossip backend"):
-        runner.run(algo, problem, _ring(4), gossip="sparse")
+        runner.run(algo, problem, _ring(4), exec=ExecSpec(gossip="sparse"))
 
 
 def test_backend_instance_is_accepted():
@@ -130,8 +130,8 @@ def test_backend_instance_is_accepted():
     runs = {}
     for g in ("banded", transport.BandedBackend()):
         algo = algorithm.dspg_algorithm(problem, hp, num_steps=12)
-        runs[str(g)] = runner.run(algo, problem, sched, seed=2,
-                                  record_every=4, gossip=g).history
+        runs[str(g)] = runner.run(algo, problem, sched, exec=ExecSpec(gossip=g), seed=2,
+                                  record_every=4).history
     a, b = runs.values()
     np.testing.assert_array_equal(a.objective, b.objective)
 
@@ -152,8 +152,7 @@ def test_gossip_mode_shim_warns_and_maps():
         old = runner.run(algo, problem, sched, seed=2, record_every=4,
                          gossip_mode="banded").history
     algo = algorithm.dspg_algorithm(problem, hp, num_steps=12)
-    new = runner.run(algo, problem, sched, seed=2, record_every=4,
-                     gossip="banded").history
+    new = runner.run(algo, problem, sched, exec=ExecSpec(gossip="banded"), seed=2, record_every=4).history
     for field in runner.RunHistory._fields:
         np.testing.assert_array_equal(getattr(old, field),
                                       getattr(new, field))
@@ -171,8 +170,7 @@ def test_wire_bytes_column_banded_below_dense():
     res = {}
     for mode in ("dense", "banded"):
         algo = algorithm.dspg_algorithm(problem, hp, num_steps=20)
-        res[mode] = runner.run(algo, problem, sched, seed=0, record_every=5,
-                               gossip=mode)
+        res[mode] = runner.run(algo, problem, sched, exec=ExecSpec(gossip=mode), seed=0, record_every=5)
     for mode, r in res.items():
         wb = r.extras["wire_bytes"]
         assert wb.shape == r.history.objective.shape
@@ -193,8 +191,7 @@ def test_compressed_wire_bytes_are_quarter_of_inner():
     res = {}
     for g in ("dense", transport.CompressedBackend(inner="dense", bits=8)):
         algo = algorithm.dpsvrg_algorithm(problem, hp)
-        res[str(g)] = runner.run(algo, problem, sched, seed=0, record_every=0,
-                                 gossip=g)
+        res[str(g)] = runner.run(algo, problem, sched, exec=ExecSpec(gossip=g), seed=0, record_every=0)
     dense_wb, comp_wb = (r.extras["wire_bytes"][-1] for r in res.values())
     assert comp_wb == dense_wb // 4          # int8 over f32 wire
 
@@ -213,10 +210,10 @@ def test_compressed_backend_equals_legacy_hp_compression():
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=3, num_outer=3)
     hp_legacy = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=3,
                                          num_outer=3, compress_bits=8)
-    new = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem, sched,
-                     seed=5, record_every=0, gossip="compressed")
+    new = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem, sched, exec=ExecSpec(gossip="compressed"),
+                     seed=5, record_every=0)
     old = runner.run(algorithm.dpsvrg_algorithm(problem, hp_legacy), problem,
-                     sched, seed=5, record_every=0, gossip="dense")
+                     sched, exec=ExecSpec(gossip="dense"), seed=5, record_every=0)
     for field in runner.RunHistory._fields:
         np.testing.assert_array_equal(getattr(new.history, field),
                                       getattr(old.history, field))
@@ -237,11 +234,9 @@ def test_conflicting_compression_bits_raise():
                                   compress_bits=4)
     algo = algorithm.dpsvrg_algorithm(problem, hp)
     with pytest.raises(ValueError, match="conflicting compression"):
-        runner.run(algo, problem, _ring(4),
-                   gossip=transport.CompressedBackend(bits=8))
+        runner.run(algo, problem, _ring(4), exec=ExecSpec(gossip=transport.CompressedBackend(bits=8)))
     # agreeing widths are fine
-    res = runner.run(algo, problem, _ring(4), record_every=0,
-                     gossip=transport.CompressedBackend(bits=4))
+    res = runner.run(algo, problem, _ring(4), exec=ExecSpec(gossip=transport.CompressedBackend(bits=4)), record_every=0)
     assert res.history.objective.shape[0] > 0
 
 
@@ -254,8 +249,7 @@ def test_explicit_banded_on_saturated_schedule_warns():
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=3, num_outer=3)
     algo = algorithm.dpsvrg_algorithm(problem, hp)
     with pytest.warns(RuntimeWarning, match="band offsets"):
-        runner.run(algo, problem, sched, seed=3, record_every=0,
-                   gossip="banded")
+        runner.run(algo, problem, sched, exec=ExecSpec(gossip="banded"), seed=3, record_every=0)
 
 
 def test_compressed_error_feedback_converges_on_paper_logreg():
@@ -272,11 +266,9 @@ def test_compressed_error_feedback_converges_on_paper_logreg():
     hp = dpsvrg.DPSVRGHyperParams(alpha=0.3, beta=1.2, n0=4, num_outer=10,
                                   k_max=2)
     full = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
-                      sched, seed=0, record_every=0, scan=True,
-                      gossip="dense")
+                      sched, exec=ExecSpec(scan=True, gossip="dense"), seed=0, record_every=0)
     comp = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
-                      sched, seed=0, record_every=0, scan=True,
-                      gossip="compressed")
+                      sched, exec=ExecSpec(scan=True, gossip="compressed"), seed=0, record_every=0)
     assert comp.history.objective[-1] < comp.history.objective[0] - 0.03
     assert abs(comp.history.objective[-1] - full.history.objective[-1]) < 5e-3
     assert (comp.extras["wire_bytes"][-1]
@@ -296,8 +288,7 @@ def test_compressed_wraps_banded_inner():
     for inner in ("dense", "banded"):
         algo = algorithm.dpsvrg_algorithm(problem, hp)
         runs[inner] = runner.run(
-            algo, problem, sched, seed=1, record_every=3, scan=True,
-            gossip=transport.CompressedBackend(inner=inner, bits=8))
+            algo, problem, sched, exec=ExecSpec(scan=True, gossip=transport.CompressedBackend(inner=inner, bits=8)), seed=1, record_every=3)
     _assert_agrees(runs["dense"].history, runs["banded"].history)
     assert (runs["banded"].extras["wire_bytes"][-1]
             < runs["dense"].extras["wire_bytes"][-1])
@@ -311,7 +302,7 @@ def test_compressed_rejects_stateless_algorithm():
     algo = algorithm.dspg_algorithm(
         problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=4)
     with pytest.raises(ValueError, match="mix state"):
-        runner.run(algo, problem, _ring(4), gossip="compressed")
+        runner.run(algo, problem, _ring(4), exec=ExecSpec(gossip="compressed"))
 
 
 # ---------------------------------------------------------------------------
@@ -324,6 +315,7 @@ _PPERMUTE_SCRIPT = textwrap.dedent("""
     import numpy as np
     from repro.core import algorithm, dpsvrg, gossip, graphs, prox, runner, \\
         transport
+    from repro.core.exec_spec import ExecSpec
     from repro.data import synthetic
 
     def loss(w, batch):
@@ -365,11 +357,9 @@ _PPERMUTE_SCRIPT = textwrap.dedent("""
     errs = {}
     for scan in (False, True):
         dense = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
-                           sched, seed=1, record_every=3, scan=scan,
-                           gossip="dense")
+                           sched, exec=ExecSpec(scan=scan, gossip="dense"), seed=1, record_every=3)
         perm = runner.run(algorithm.dpsvrg_algorithm(problem, hp), problem,
-                          sched, seed=1, record_every=3, scan=scan,
-                          gossip="ppermute", mesh=mesh)
+                          sched, exec=ExecSpec(scan=scan, gossip="ppermute", mesh=mesh), seed=1, record_every=3)
         errs["scan" if scan else "host"] = hist_err(dense.history,
                                                     perm.history)
     out["errs"] = errs
@@ -378,9 +368,9 @@ _PPERMUTE_SCRIPT = textwrap.dedent("""
     # 2 point-to-point bands vs the dense m*(m-1) all-gather), with the
     # backend building its own mesh (mesh=None -> first m local devices)
     dense = runner.run(algorithm.dspg_algorithm(problem, hp2, 24), problem,
-                       sched, seed=2, record_every=6, gossip="dense")
+                       sched, exec=ExecSpec(gossip="dense"), seed=2, record_every=6)
     perm = runner.run(algorithm.dspg_algorithm(problem, hp2, 24), problem,
-                      sched, seed=2, record_every=6, gossip="ppermute")
+                      sched, exec=ExecSpec(gossip="ppermute"), seed=2, record_every=6)
     out["dspg_err"] = hist_err(dense.history, perm.history)
     out["wire_dense"] = int(dense.extras["wire_bytes"][-1])
     out["wire_ppermute"] = int(perm.extras["wire_bytes"][-1])
@@ -388,10 +378,9 @@ _PPERMUTE_SCRIPT = textwrap.dedent("""
     # and on the static ring schedule (the paper's base topology)
     ring = graphs.b_connected_ring_schedule(m, b=1, seed=0)
     dense = runner.run(algorithm.dspg_algorithm(problem, hp2, 24), problem,
-                       ring, seed=3, record_every=6, gossip="dense")
+                       ring, exec=ExecSpec(gossip="dense"), seed=3, record_every=6)
     perm = runner.run(algorithm.dspg_algorithm(problem, hp2, 24), problem,
-                      ring, seed=3, record_every=6, gossip="ppermute",
-                      mesh=mesh)
+                      ring, exec=ExecSpec(gossip="ppermute", mesh=mesh), seed=3, record_every=6)
     out["ring_err"] = hist_err(dense.history, perm.history)
     print(json.dumps(out))
 """)
@@ -421,7 +410,7 @@ def test_ppermute_without_devices_raises_helpfully():
     algo = algorithm.dspg_algorithm(
         problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=4)
     with pytest.raises(ValueError, match="xla_force_host_platform"):
-        runner.run(algo, problem, _ring(4), gossip="ppermute")
+        runner.run(algo, problem, _ring(4), exec=ExecSpec(gossip="ppermute"))
 
 
 # ---------------------------------------------------------------------------
@@ -497,11 +486,9 @@ def test_gt_svrg_and_loopless_ride_compressed(name, args, kwargs):
     problem = _problem(data, h, x0)
     sched = _ring(m)
     full = runner.run(algorithm.ALGORITHMS[name](problem, *args, **kwargs),
-                      problem, sched, seed=0, record_every=5, scan=True,
-                      gossip="dense").history
+                      problem, sched, exec=ExecSpec(scan=True, gossip="dense"), seed=0, record_every=5).history
     comp = runner.run(algorithm.ALGORITHMS[name](problem, *args, **kwargs),
-                      problem, sched, seed=0, record_every=5, scan=True,
-                      gossip="compressed").history
+                      problem, sched, exec=ExecSpec(scan=True, gossip="compressed"), seed=0, record_every=5).history
     descent = full.objective[0] - full.objective[-1]
     assert descent > 0
     assert comp.objective[-1] < comp.objective[0]
@@ -568,9 +555,9 @@ def test_gt_svrg_wire_accounting_counts_both_payloads():
     problem = _problem(data, h, x0)
     sched = _ring(4)
     gt = runner.run(algorithm.ALGORITHMS["gt_svrg"](problem, 0.1, 1, 5),
-                    problem, sched, record_every=5, gossip="dense")
+                    problem, sched, exec=ExecSpec(gossip="dense"), record_every=5)
     ds = runner.run(algorithm.dspg_algorithm(
         problem, dpsvrg.DSPGHyperParams(alpha0=0.3), num_steps=5),
-        problem, sched, record_every=5, gossip="dense")
+        problem, sched, exec=ExecSpec(gossip="dense"), record_every=5)
     assert (gt.extras["wire_bytes"][-1]
             == 2 * ds.extras["wire_bytes"][-1])
